@@ -1,0 +1,84 @@
+"""Shared benchmark substrate: a small trained model + fidelity metrics.
+
+The paper measures ROUGE/F1 on pretrained LLMs; offline we train a small
+model on structured synthetic tasks (induction/copy) and measure decode
+*fidelity against the full-cache reference* — token agreement and logit KL —
+which preserves the paper's comparisons (uniform-budget baseline vs
+layer-wise squeeze at equal total budget) without pretrained weights.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.core import PolicyConfig
+from repro.data import DataConfig, batches
+from repro.models import ModelConfig, init_params
+from repro.serving import Engine, EngineConfig
+from repro.training import AdamWConfig, init_opt_state, train_step
+
+CACHE_DIR = os.environ.get("BENCH_MODEL_DIR", "experiments/bench_model")
+
+BENCH_CFG = ModelConfig(
+    name="bench-8l", arch_type="dense", n_layers=8, d_model=128,
+    n_heads=8, n_kv_heads=4, d_ff=512, vocab_size=256,
+    dtype="float32", param_dtype="float32")
+
+
+def trained_model(steps: int = 200, seq: int = 128, batch: int = 16):
+    """Train (or restore) the benchmark model; returns (params, cfg)."""
+    cfg = BENCH_CFG
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    if (s := ckpt.latest_step(CACHE_DIR)) is not None:
+        return ckpt.restore(CACHE_DIR, s, params), cfg
+    opt = init_opt_state(params)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=steps)
+    dcfg = DataConfig(seq_len=seq, global_batch=batch, vocab_size=cfg.vocab_size)
+    step = jax.jit(lambda p, o, b: train_step(p, o, b, cfg, ocfg))
+    for i, b in zip(range(steps), batches(dcfg)):
+        params, opt, m = step(params, opt, b)
+    ckpt.save(CACHE_DIR, steps, params)
+    return params, cfg
+
+
+def eval_prompts(n: int = 8, seq: int = 96, vocab: int = 256, seed: int = 123):
+    """Induction-structured prompts (cache eviction visibly matters)."""
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(2, vocab, size=(n, seq))
+    half = seq // 2
+    toks[:, half:half * 2] = toks[:, :half]
+    return toks.astype(np.int32)
+
+
+def decode_fidelity(params, cfg, prompts, mode, policy="sliding_window",
+                    budget_frac=0.4, p=0.35, n_new=24, **ekw):
+    """Returns dict with agreement vs full cache, mean logit KL, tokens/s."""
+    ref_eng = Engine(params, cfg, EngineConfig(
+        mode="full", max_new_tokens=n_new))
+    ref = ref_eng.generate(tokens=prompts)
+
+    eng = Engine(params, cfg, EngineConfig(
+        mode=mode, policy=PolicyConfig(policy), budget_frac=budget_frac,
+        p=p, max_new_tokens=n_new, bucket=4, min_budget=4, **ekw))
+    t0 = time.perf_counter()
+    r = eng.generate(tokens=prompts)
+    dt = time.perf_counter() - t0
+    agree = float((r.tokens == ref.tokens).mean())
+    return {
+        "agreement": agree,
+        "cache_slots": r.cache_slots,
+        "ref_slots": ref.cache_slots,
+        "tokens_per_s": r.tokens.size / max(r.decode_seconds, 1e-9),
+        "plan": r.plan,
+        "decode_seconds": r.decode_seconds,
+        "wall": dt,
+    }
+
+
+def row(name: str, us_per_call: float, derived) -> dict:
+    return {"name": name, "us_per_call": us_per_call, "derived": derived}

@@ -1,0 +1,88 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference wall-time.
+
+Interpret-mode timings are NOT TPU performance (the kernels' perf claims
+come from the §Roofline analysis of block shapes and HBM traffic); these
+rows exist to (a) prove the kernels run end-to-end under jit, and (b) track
+the jnp reference costs that the CPU benchmarks actually exercise.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def flash_decode_bench(quick=False):
+    from repro.kernels.flash_decode.ops import flash_decode
+    from repro.kernels.flash_decode.ref import decode_attention_ref
+    B, S, Hkv, G, hd = 2, 512, 2, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, Hkv, G, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    t = jnp.full((B,), S, jnp.int32)
+    ref = jax.jit(lambda *a: decode_attention_ref(*a, 1 << 30))
+    kern = jax.jit(lambda *a: flash_decode(*a, 1 << 30, block_s=128))
+    return [
+        row("kern_flash_decode_ref_jnp", _time(ref, q, k, v, pos, t),
+            f"S={S}"),
+        row("kern_flash_decode_pallas_interp", _time(kern, q, k, v, pos, t),
+            "interpret=True (CPU emulation of TPU kernel)"),
+    ]
+
+
+def ssd_bench(quick=False):
+    from repro.kernels.ssd_scan.ops import ssd
+    from repro.kernels.ssd_scan.ref import ssd_recurrent_ref, ssd_ref
+    B, S, H, P, N = 1, 256, 2, 32, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    xh = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    bh = jax.random.normal(ks[1], (B, S, N)) * 0.5
+    ch = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)) - 2.0)
+    a_log = jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32))
+    d = jnp.ones((H,))
+    rec = jax.jit(lambda *a: ssd_recurrent_ref(*a))
+    chunked = jax.jit(lambda *a: ssd_ref(*a, 64))
+    kern = jax.jit(lambda *a: ssd(*a, chunk=64))
+    return [
+        row("kern_ssd_recurrent_ref", _time(rec, xh, bh, ch, dt, a_log, d),
+            f"S={S} literal scan"),
+        row("kern_ssd_chunked_jnp", _time(chunked, xh, bh, ch, dt, a_log, d),
+            "model's production path"),
+        row("kern_ssd_pallas_interp", _time(kern, xh, bh, ch, dt, a_log, d),
+            "interpret=True"),
+    ]
+
+
+def swa_bench(quick=False):
+    from repro.kernels.swa_prefill.ops import swa_attention
+    from repro.kernels.swa_prefill.ref import swa_attention_ref
+    B, Hq, Hkv, S, hd = 1, 4, 2, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    ref = jax.jit(lambda *a: swa_attention_ref(*a, 128))
+    kern = jax.jit(lambda *a: swa_attention(*a, window=128, bq=128, bk=128))
+    return [
+        row("kern_swa_ref_jnp", _time(ref, q, k, v), f"S={S} w=128"),
+        row("kern_swa_pallas_interp", _time(kern, q, k, v), "interpret=True"),
+    ]
+
+
+ALL = [flash_decode_bench, ssd_bench, swa_bench]

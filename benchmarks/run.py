@@ -1,0 +1,41 @@
+"""Benchmark harness: one function per paper table/figure + kernel micro-
+benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark function names")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_tables
+    fns = list(paper_tables.ALL) + list(kernel_bench.ALL)
+    if args.only:
+        fns = [f for f in fns if args.only in f.__name__]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in fns:
+        try:
+            for r in fn(quick=args.quick):
+                print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"",
+                      flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{fn.__name__},NaN,\"ERROR\"", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""SqueezeAttention (ICLR 2025) on TPU: 2D KV-cache management as a
+first-class feature of a multi-pod JAX serving/training framework.
+
+Subpackages: core (the paper's algorithm), models (all assigned
+architecture families), kernels (Pallas TPU), serving, training, data,
+checkpoint, configs, launch, analysis.
+"""
+
+__version__ = "1.0.0"

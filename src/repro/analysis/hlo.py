@@ -1,0 +1,72 @@
+"""Parse collective traffic out of compiled HLO text.
+
+`compiled.cost_analysis()` has no collective-byte entry, so we scan the HLO
+for all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops and sum their result-shape bytes (a standard proxy for per-op traffic;
+for all-reduce the wire cost is ~2x the shape in a ring, which we account for
+in the roofline's collective model).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %ag = bf16[2,512,288]{2,1,0} all-gather(...)
+#        ROOT %tuple = (f32[8,16]{1,0}, f32[]) all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<shapes>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")\b(?P<rest>[^\n]*)")
+
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(dt: str, dims: str) -> int:
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind.  Returns
+    {kind: bytes, ..., 'total': int, 'count': {kind: n}}."""
+    per = defaultdict(int)
+    cnt = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        op = m.group("op")
+        # async pairs: count the -done (real result shape), skip the -start
+        if m.group("rest").startswith("-start"):
+            continue
+        total = 0
+        for sm in _SHAPE_RE.finditer(m.group("shapes")):
+            total += _shape_bytes(sm.group("dt"), sm.group("dims"))
+        per[op] += total
+        cnt[op] += 1
+    out = dict(per)
+    out["total"] = sum(per.values())
+    out["count"] = dict(cnt)
+    return out
+
+
+def duplicate_fusion_count(hlo_text: str) -> int:
+    """Rough remat indicator: number of computations appearing >1x by name
+    stem (e.g. 'fused_computation.123' sharing a stem)."""
+    stems = defaultdict(int)
+    for m in re.finditer(r"%([a-zA-Z_][\w.-]*)\s*=", hlo_text):
+        stem = re.sub(r"[.\d]+$", "", m.group(1))
+        stems[stem] += 1
+    return sum(v - 1 for v in stems.values() if v > 1)

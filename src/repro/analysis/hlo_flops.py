@@ -1,0 +1,218 @@
+"""Trip-count-aware FLOP/byte analysis of compiled HLO text.
+
+XLA's HloCostAnalysis visits each `while` body ONCE, so a model whose layers
+are rolled into a `lax.scan` under-reports FLOPs by ~n_layers (and flash-
+attention inner scans by another ~n_blocks).  The dry-run needs honest
+roofline terms, so this module re-derives them from ``compiled.as_text()``:
+
+  * split the module into named computations with per-op symbol tables;
+  * FLOPs: every ``dot`` contributes 2 * |out| * K (K = product of the lhs
+    contracting dims, resolved through the symbol table);
+  * bytes: fusion-boundary traffic — each op at computation level counts its
+    operands + result once (fusion internals excluded), which is the
+    HBM-traffic model XLA's fused execution implies;
+  * call graph: ``while`` bodies multiply by the ``known_trip_count`` XLA
+    records in backend_config; ``conditional`` branches weight 1/n_branches
+    (our decode step's two budget tiers each run for their share of layers);
+    fusions recurse for FLOPs but stop bytes at the boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_ASSIGN = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_DOT_ARGS = re.compile(r"\bdot\(([^)]*)\)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _first_shape(text: str):
+    m = _SHAPE.search(text)
+    return m.groups() if m else None
+
+
+def _all_shapes_bytes(text: str) -> int:
+    return sum(_elems(d) * _DTYPE_BYTES.get(dt, 4)
+               for dt, d in _SHAPE.findall(text))
+
+
+@dataclasses.dataclass
+class _Comp:
+    flops: float = 0.0
+    bytes_: float = 0.0
+    calls: list = dataclasses.field(default_factory=list)  # (name, kind, w)
+
+
+def _parse(text: str) -> tuple:
+    comps: dict[str, _Comp] = {}
+    entry = None
+    cur = None
+    cur_name = None
+    symbols: dict[str, tuple] = {}
+
+    for line in text.splitlines():
+        h = _HDR.match(line)
+        if h and "=" not in line.split("(")[0]:
+            cur_name = h.group(2)
+            cur = _Comp()
+            comps[cur_name] = cur
+            symbols = {}
+            if h.group(1):
+                entry = cur_name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        a = _ASSIGN.match(line)
+        if not a:
+            continue
+        name, rhs = a.group(1), a.group(2)
+        shp = _first_shape(rhs.split("(")[0] if "(" in rhs else rhs)
+        if shp:
+            symbols[name] = shp
+
+        # ---- bytes at fusion boundary (operands resolved via symbols) -------
+        result_bytes = _all_shapes_bytes(rhs.split("(")[0]) if "(" in rhs \
+            else _all_shapes_bytes(rhs)
+        opnd_bytes = 0
+        opnd_sizes = []
+        arg_refs = []
+        if "(" in rhs:
+            args = rhs.split("(", 1)[1].split(")", 1)[0]
+            arg_refs = re.findall(r"%([\w.\-]+)", args)
+            for ref in arg_refs:
+                s = symbols.get(ref)
+                if s:
+                    nb = _elems(s[1]) * _DTYPE_BYTES.get(s[0], 4)
+                    opnd_bytes += nb
+                    opnd_sizes.append(nb)
+        free = (" parameter(" in rhs or " get-tuple-element(" in rhs
+                or " tuple(" in rhs or " bitcast(" in rhs
+                or " while(" in rhs or " conditional(" in rhs
+                or " constant(" in rhs or " iota(" in rhs
+                or rhs.startswith("tuple("))
+        is_dus = ("dynamic-update-slice" in rhs or "dynamic_update_slice" in rhs
+                  or "dynamic-update-slice" in name)
+        is_ds = ((" dynamic-slice(" in rhs
+                  or name.startswith("dynamic-slice")) and not is_dus)
+        if is_ds:
+            # reads only the sliced region (== result)
+            cur.bytes_ += 2 * result_bytes
+        elif is_dus:
+            # XLA aliases DUS in place (also when wrapped in a fusion whose
+            # root is the DUS): the big buffer doesn't round-trip; traffic =
+            # the other operands read + the updated region written (~= the
+            # largest non-aliased operand)
+            aliased = max(opnd_sizes) if opnd_sizes else 0
+            rest = opnd_bytes - aliased
+            cur.bytes_ += 2 * rest
+        elif not free:
+            cur.bytes_ += result_bytes + opnd_bytes
+
+        # ---- dot flops -------------------------------------------------------
+        dm = _DOT_ARGS.search(rhs)
+        if dm and shp:
+            out_elems = _elems(shp[1])
+            argnames = re.findall(r"%([\w.\-]+)", dm.group(1))
+            cd = _LHS_CDIMS.search(rhs)
+            k = 1
+            if argnames and cd:
+                lhs_shape = symbols.get(argnames[0])
+                if lhs_shape:
+                    lhs_dims = [int(x) for x in lhs_shape[1].split(",")
+                                if x != ""]
+                    for c in (int(x) for x in cd.group(1).split(",") if x != ""):
+                        if c < len(lhs_dims):
+                            k *= lhs_dims[c]
+            cur.flops += 2.0 * out_elems * k
+        elif " convolution(" in rhs and shp:
+            cur.flops += 2.0 * _elems(shp[1]) * 128   # coarse (convs are stubs)
+
+        # ---- call graph ------------------------------------------------------
+        if " while(" in rhs:
+            bm = _BODY.search(rhs)
+            tm = _TRIP.search(rhs)
+            if bm:
+                cur.calls.append((bm.group(1), "while",
+                                  int(tm.group(1)) if tm else 1))
+        elif " conditional(" in rhs:
+            brm = _BRANCHES.search(rhs)
+            if brm:
+                branches = [b.strip().lstrip("%")
+                            for b in brm.group(1).split(",")]
+                for b in branches:
+                    cur.calls.append((b, "cond", 1.0 / max(len(branches), 1)))
+        elif " fusion(" in rhs:
+            cm = _CALLS.search(rhs)
+            if cm:
+                cur.calls.append((cm.group(1), "fusion", 1.0))
+        elif _TO_APPLY.search(rhs) and (" reduce(" in rhs or " map(" in rhs
+                                        or " scatter(" in rhs
+                                        or " reduce-window(" in rhs
+                                        or " select-and-scatter(" in rhs):
+            pass      # elementwise appliers: negligible flops
+        elif " call(" in rhs:
+            cm = _TO_APPLY.search(rhs) or _CALLS.search(rhs)
+            if cm:
+                cur.calls.append((cm.group(1), "call", 1.0))
+    return comps, entry
+
+
+def analyze(text: str) -> dict:
+    """Loop-aware per-partition {'flops', 'bytes'} from compiled HLO text."""
+    comps, entry = _parse(text)
+    if entry is None:
+        if not comps:
+            return {"flops": 0.0, "bytes": 0.0}
+        entry = max(comps, key=lambda n: comps[n].flops + comps[n].bytes_)
+
+    memo: dict[str, tuple] = {}
+
+    def total(name: str, depth: int = 0):
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or depth > 60:
+            return 0.0, 0.0
+        memo[name] = (0.0, 0.0)      # cycle guard
+        f, b = c.flops, c.bytes_
+        for callee, kind, w in c.calls:
+            cf, cb = total(callee, depth + 1)
+            if kind == "while":
+                f += cf * w
+                b += cb * w
+            elif kind == "cond":
+                f += cf * w
+                b += cb * w
+            elif kind == "fusion":
+                f += cf            # bytes stop at fusion boundary
+            else:
+                f += cf
+                b += cb
+        memo[name] = (f, b)
+        return f, b
+
+    f, b = total(entry)
+    return {"flops": f, "bytes": b}

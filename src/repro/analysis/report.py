@@ -1,0 +1,104 @@
+"""Render the §Dry-run / §Roofline markdown tables from dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirpath: str):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:8.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:7.2f}ms"
+    return f"{x*1e6:7.1f}us"
+
+
+def _fmt_b(x: float) -> str:
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:7.2f}{unit}"
+    return f"{x:7.0f}B"
+
+
+def roofline_table(recs, mesh="single", kv_mode="full") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh and r["kv_mode"] == kv_mode]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = ("| arch | shape | t_compute | t_memory | t_collective | bottleneck "
+           "| MODEL_FLOPs | HLO_FLOPs | useful | MFU-bound |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(rl['t_compute_s'])} "
+            f"| {_fmt_s(rl['t_memory_s'])} | {_fmt_s(rl['t_collective_s'])} "
+            f"| **{rl['bottleneck']}** | {rl['model_flops']:.3e} "
+            f"| {rl['hlo_flops']:.3e} | {rl['useful_flop_ratio']*100:5.1f}% "
+            f"| {rl['mfu_bound']*100:5.1f}% |\n")
+    return "".join(out)
+
+
+def dryrun_table(recs) -> str:
+    rows = sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                                       r["kv_mode"]))
+    hdr = ("| arch | shape | mesh | kv | compile | args/dev | temp/dev "
+           "| out/dev | collective bytes (/dev) | #colls |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        mem = r["memory_analysis"]
+        colls = r["collectives"]
+        ncoll = sum(colls.get("count", {}).values())
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kv_mode']} "
+            f"| {r['compile_s']:.1f}s | {_fmt_b(mem.get('argument_size_in_bytes', 0))} "
+            f"| {_fmt_b(mem.get('temp_size_in_bytes', 0))} "
+            f"| {_fmt_b(mem.get('output_size_in_bytes', 0))} "
+            f"| {_fmt_b(colls.get('total', 0))} | {ncoll} |\n")
+    return "".join(out)
+
+
+def summarize(recs) -> str:
+    """One-line stats for quick triage."""
+    by_bn = {}
+    for r in recs:
+        if r["mesh"] != "single" or r["kv_mode"] != "full":
+            continue
+        by_bn.setdefault(r["roofline"]["bottleneck"], []).append(
+            f"{r['arch']}/{r['shape']}")
+    lines = [f"combos: {len(recs)}"]
+    for k, v in sorted(by_bn.items()):
+        lines.append(f"  {k}-bound ({len(v)}): {', '.join(v)}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--kv-mode", default="full")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## Dry-run\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod, kv=%s)\n" % args.kv_mode)
+    print(roofline_table(recs, args.mesh, args.kv_mode))
+    print("\n## Summary\n")
+    print(summarize(recs))
+
+
+if __name__ == "__main__":
+    main()

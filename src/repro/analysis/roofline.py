@@ -1,0 +1,135 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+Hardware model (TPU v5e-class, per chip — constants from the assignment):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI link bandwidth: ~50 GB/s per link
+
+Terms (seconds, per executed step, aggregated over the mesh):
+    compute    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes   / (chips * HBM_BW)
+    collective = wire_bytes  / (chips * ICI_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program,
+already per-partition in SPMD — we multiply back to global).  wire_bytes
+comes from the HLO collective parse; all-reduce counts 2x (ring reduce +
+broadcast phases).
+
+Also reported: MODEL_FLOPS = 6*N*D (training) or 2*N*D (inference) with
+N = active params, D = tokens — the "useful FLOPs" — and the ratio
+MODEL_FLOPS / HLO_FLOPs which exposes remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes / s / chip
+ICI_BW = 50e9                # bytes / s / link / chip
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_global: float
+    bytes_global: float
+    wire_bytes_global: float
+    model_flops: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_global / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_global / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_global / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        return self.model_flops / self.flops_global if self.flops_global else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """MFU ceiling implied by the dominant term."""
+        if self.t_bound <= 0:
+            return 0.0
+        return self.model_flops / (self.t_bound * self.chips * PEAK_FLOPS)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops": self.flops_global,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops(cfg, case, kv_slots_total: int = 0) -> float:
+    """Analytic useful FLOPs for one step of this (arch, shape).
+
+    train:   6 * N_active * tokens  (fwd+bwd)
+    prefill: 2 * N_active * tokens + attention O(S^2) term
+    decode:  2 * N_active * batch + 2 * cache-read attention term
+    """
+    n_active = cfg.n_active_params()
+    B, S = case.global_batch, case.seq_len
+    hd, Hq = cfg.hd, cfg.n_heads
+    if case.kind == "train":
+        base = 6.0 * n_active * B * S
+        attn = 6.0 * B * cfg.n_layers * Hq * S * S * hd * 2 / 2  # causal half
+        return base + (attn if cfg.has_attention else 0.0)
+    if case.kind == "prefill":
+        base = 2.0 * n_active * B * S
+        attn = 2.0 * B * cfg.n_layers * Hq * S * S * hd * 2 / 2
+        return base + (attn if cfg.has_attention else 0.0)
+    # decode: one token
+    base = 2.0 * n_active * B
+    attn = 2.0 * B * Hq * hd * 2 * max(kv_slots_total, 0)
+    return base + attn
+
+
+def wire_bytes(colls: dict) -> float:
+    """Collective-parse dict -> wire bytes (all-reduce rings move ~2x)."""
+    total = 0.0
+    for kind, b in colls.items():
+        if kind in ("total", "count"):
+            continue
+        total += b * (2.0 if kind == "all-reduce" else 1.0)
+    return total
+
+
+def from_cost_analysis(arch, shape, mesh_name, chips, cost: dict,
+                       wire_bytes_per_partition: float, mflops: float,
+                       per_partition: bool = True) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    mult = chips if per_partition else 1
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_global=flops * mult,
+        bytes_global=nbytes * mult,
+        wire_bytes_global=wire_bytes_per_partition * mult,
+        model_flops=mflops,
+    )

@@ -1,0 +1,93 @@
+"""Checkpointing: pytree <-> flat .npz archives + JSON metadata.
+
+No orbax offline, so: flatten the pytree with '/'-joined key paths, store as
+one compressed npz per step, keep a small manifest for discovery/pruning.
+Restores are exact (dtypes preserved, bf16 stored via uint16 view).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16_SUFFIX = "__bf16"
+
+
+def _keystr(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(directory: str, step: int, tree: Any, extra: Optional[dict] = None):
+    os.makedirs(directory, exist_ok=True)
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        name = _keystr(path)
+        if arr.dtype == jnp.bfloat16:
+            flat[name + _BF16_SUFFIX] = arr.view(np.uint16)
+        else:
+            flat[name] = arr
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez_compressed(path + ".tmp.npz", **flat)
+    os.replace(path + ".tmp.npz", path)
+    manifest = {"step": step, "extra": extra or {}}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as fh:
+        json.dump(manifest, fh)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.fullmatch(r"ckpt_(\d+)\.npz", f))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: Any) -> Any:
+    """Restore into the structure of `like` (shape/dtype-checked)."""
+    with np.load(os.path.join(directory, f"ckpt_{step:08d}.npz")) as z:
+        data = {k: z[k] for k in z.files}
+
+    leaves = jax.tree_util.tree_flatten_with_path(like)[0]
+    out = []
+    for path, leaf in leaves:
+        name = _keystr(path)
+        if name + _BF16_SUFFIX in data:
+            arr = data[name + _BF16_SUFFIX].view(jnp.bfloat16)
+        elif name in data:
+            arr = data[name]
+        else:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        ref = np.asarray(leaf)
+        if arr.shape != ref.shape:
+            raise ValueError(f"{name}: shape {arr.shape} != expected {ref.shape}")
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)
+
+
+def prune(directory: str, keep: int = 3):
+    steps = sorted([int(m.group(1)) for f in os.listdir(directory)
+                    if (m := re.fullmatch(r"ckpt_(\d+)\.npz", f))])
+    for s in steps[:-keep]:
+        for ext in (".npz", ".json"):
+            try:
+                os.remove(os.path.join(directory, f"ckpt_{s:08d}{ext}"))
+            except OSError:
+                pass

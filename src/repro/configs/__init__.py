@@ -1,0 +1,49 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+The 10 assigned architectures (public-literature pool) + the paper's own
+experiment models.  Every entry exposes ``config()`` (exact published spec)
+and ``reduced()`` (2-layer smoke variant of the same family).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    # ---- assigned pool -------------------------------------------------------
+    "gemma2-27b": "gemma2_27b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "musicgen-large": "musicgen_large",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "olmo-1b": "olmo_1b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "qwen3-4b": "qwen3_4b",
+    "mamba2-1.3b": "mamba2_1p3b",
+    # ---- the paper's own models ----------------------------------------------
+    "mistral-7b": "mistral_7b",
+    "llama2-7b": "llama2_7b",
+}
+
+ASSIGNED_ARCHS = tuple(list(_MODULES)[:10])
+ALL_ARCHS = tuple(_MODULES)
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {', '.join(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    cfg = _mod(arch).config()
+    cfg.validate()
+    return cfg
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    cfg = _mod(arch).reduced()
+    cfg.validate()
+    return cfg

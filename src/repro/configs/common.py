@@ -1,0 +1,45 @@
+"""Shared helpers for architecture configs: reduced smoke variants."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+def reduce_for_smoke(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Same family, CPU-runnable: <=2 super-layers, d_model<=512, <=4 experts.
+
+    Keeps every structural flag (GQA ratio, softcaps, window pattern, qk-norm,
+    M-RoPE, MoE routing, SSD, hybrid period) so the smoke test exercises the
+    exact code paths of the full config.
+    """
+    n_heads = min(cfg.n_heads, 4)
+    ratio = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+    n_kv = max(n_heads // min(ratio, n_heads), 1)
+    head_dim = min(cfg.hd, 32)
+    d_model = min(cfg.d_model, 128)
+    upd = dict(
+        n_layers=2,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=head_dim,
+        d_ff=min(cfg.d_ff, 256) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        padded_vocab=0,      # production-only sharding concern
+        sliding_window=min(cfg.sliding_window, 8) if cfg.sliding_window else None,
+    )
+    if cfg.is_moe:
+        upd.update(n_experts=min(cfg.n_experts, 4),
+                   experts_per_tok=min(cfg.experts_per_tok, 2),
+                   moe_d_ff=min(cfg.moe_d_ff, 128))
+    if cfg.ssm_state:
+        upd.update(ssm_state=min(cfg.ssm_state, 16), ssm_head_dim=32,
+                   ssm_chunk=8, d_model=128)
+    if cfg.is_hybrid:
+        upd.update(n_layers=4, attn_period=2)
+    if cfg.mrope_sections is not None:
+        hd = upd["head_dim"]
+        upd.update(mrope_sections=(hd // 2 - 2 * (hd // 8), hd // 8, hd // 8))
+    upd.update(name=cfg.name + "-smoke", **overrides)
+    return dataclasses.replace(cfg, **upd)

@@ -1,0 +1,25 @@
+"""Gemma 2 27B [arXiv:2408.00118].
+
+46 layers, d_model=4608, 32 query heads / 16 KV heads (GQA), head_dim=128,
+d_ff=36864, vocab 256000.  Alternating local (window 4096) / global attention,
+tanh logit softcapping (attn 50.0, final 30.0), pre+post RMSNorms per block.
+"""
+from repro.configs.common import reduce_for_smoke
+from repro.models.config import ModelConfig
+
+ARCH_ID = "gemma2-27b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="dense",
+        n_layers=46, d_model=4608, n_heads=32, n_kv_heads=16, head_dim=128,
+        d_ff=36864, vocab_size=256_000,
+        window_pattern="local_global", sliding_window=4096,
+        attn_softcap=50.0, final_softcap=30.0, use_post_norms=True,
+        rope_theta=10_000.0,
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_for_smoke(config())

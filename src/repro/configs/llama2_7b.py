@@ -1,0 +1,21 @@
+"""Llama-2-7B [arXiv:2307.09288] — paper experiment model (32K variant).
+
+32 layers, d_model=4096, 32 heads (MHA), head_dim=128, d_ff=11008,
+vocab 32000.
+"""
+from repro.configs.common import reduce_for_smoke
+from repro.models.config import ModelConfig
+
+ARCH_ID = "llama2-7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="dense",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+        d_ff=11_008, vocab_size=32_000,
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_for_smoke(config())

@@ -1,0 +1,25 @@
+"""Mamba2-1.3B [arXiv:2405.21060] — SSD (state-space duality), attention-free.
+
+48 layers, d_model=2048, ssm_state=128, expand 2 (d_inner=4096, head_dim 64
+-> 64 SSM heads), vocab 50280.  No KV cache exists; SqueezeAttention's
+budget reallocation is INAPPLICABLE (DESIGN.md §4) — the architecture runs
+with its O(1) recurrent state and the layer-importance measurement is still
+reported for the observation study.
+"""
+from repro.configs.common import reduce_for_smoke
+from repro.models.config import ModelConfig
+
+ARCH_ID = "mamba2-1.3b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="ssm",
+        n_layers=48, d_model=2048, n_heads=1, n_kv_heads=1, head_dim=64,
+        d_ff=0, vocab_size=50_280, padded_vocab=50_432,  # %256==0 (§Perf C1)
+        ssm_state=128, ssm_expand=2, ssm_head_dim=64,
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_for_smoke(config())

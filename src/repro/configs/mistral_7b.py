@@ -1,0 +1,23 @@
+"""Mistral-7B [arXiv:2310.06825] — the paper's primary experiment model.
+
+32 layers, d_model=4096, 32 heads / 8 KV heads, head_dim=128, d_ff=14336,
+vocab 32000, sliding-window attention 4096 (the paper's best baseline policy
+for this model).
+"""
+from repro.configs.common import reduce_for_smoke
+from repro.models.config import ModelConfig
+
+ARCH_ID = "mistral-7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="dense",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+        d_ff=14_336, vocab_size=32_000,
+        sliding_window=4096,
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_for_smoke(config())

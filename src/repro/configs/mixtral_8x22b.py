@@ -1,0 +1,24 @@
+"""Mixtral 8x22B [arXiv:2401.04088].
+
+56 layers, d_model=6144, 48 heads / 8 KV heads (GQA), head_dim=128, MoE with
+8 experts top-2, per-expert d_ff=16384, vocab 32768, sliding-window attention
+(4096) per assignment.
+"""
+from repro.configs.common import reduce_for_smoke
+from repro.models.config import ModelConfig
+
+ARCH_ID = "mixtral-8x22b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="moe",
+        n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+        d_ff=0, vocab_size=32_768,
+        n_experts=8, experts_per_tok=2, moe_d_ff=16_384,
+        sliding_window=4096, rope_theta=1_000_000.0,
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_for_smoke(config())

@@ -1,0 +1,23 @@
+"""Moonlight-16B-A3B (Moonshot AI) [hf:moonshotai/Moonlight-16B-A3B].
+
+48 layers, d_model=2048, 16 heads (GQA kv=16 per assignment, head_dim=128),
+MoE with 64 experts top-6, per-expert d_ff=1408, vocab 163840.
+"""
+from repro.configs.common import reduce_for_smoke
+from repro.models.config import ModelConfig
+
+ARCH_ID = "moonshot-v1-16b-a3b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="moe",
+        n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+        d_ff=0, vocab_size=163_840,
+        n_experts=64, experts_per_tok=6, moe_d_ff=1408,
+        rope_theta=50_000.0,
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_for_smoke(config())

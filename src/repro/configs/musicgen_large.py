@@ -1,0 +1,26 @@
+"""MusicGen-large decoder [arXiv:2306.05284].
+
+48 layers, d_model=2048, 32 heads (MHA, kv=32), head_dim=64, d_ff=8192 (GELU,
+LayerNorm), vocab 2048 (EnCodec codebook).  The EnCodec tokenizer/conv
+frontend is a STUB per assignment: `input_specs()` supplies frame embeddings.
+(Adaptation: RoPE replaces MusicGen's sinusoidal embeddings — positional
+scheme is orthogonal to the KV-cache study; noted in DESIGN.md.)
+"""
+from repro.configs.common import reduce_for_smoke
+from repro.models.config import ModelConfig
+
+ARCH_ID = "musicgen-large"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="audio",
+        n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+        d_ff=8192, vocab_size=2048,
+        norm_type="layernorm", mlp_type="gelu",
+        frontend="audio_stub",
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_for_smoke(config())

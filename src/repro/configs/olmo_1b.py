@@ -1,0 +1,22 @@
+"""OLMo-1B [arXiv:2402.00838].
+
+16 layers, d_model=2048, 16 heads (MHA, kv=16), head_dim=128, d_ff=8192
+(SwiGLU), vocab 50304.  Non-parametric LayerNorm (no affine params).
+"""
+from repro.configs.common import reduce_for_smoke
+from repro.models.config import ModelConfig
+
+ARCH_ID = "olmo-1b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="dense",
+        n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+        d_ff=8192, vocab_size=50_304,
+        norm_type="nonparametric_ln",
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_for_smoke(config())

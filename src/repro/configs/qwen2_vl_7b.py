@@ -1,0 +1,25 @@
+"""Qwen2-VL-7B language backbone [arXiv:2409.12191].
+
+28 layers, d_model=3584, 28 heads / 4 KV heads (GQA), head_dim=128,
+d_ff=18944, vocab 152064.  M-RoPE with (t,h,w) sections (16,24,24).
+Vision encoder is a STUB per assignment: `input_specs()` supplies
+precomputed patch embeddings + 3-D position ids (dynamic resolution).
+"""
+from repro.configs.common import reduce_for_smoke
+from repro.models.config import ModelConfig
+
+ARCH_ID = "qwen2-vl-7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="vlm",
+        n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+        d_ff=18_944, vocab_size=152_064,
+        mrope_sections=(16, 24, 24), rope_theta=1_000_000.0,
+        frontend="vision_stub",
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_for_smoke(config())

@@ -1,0 +1,22 @@
+"""Qwen3-4B [hf:Qwen/Qwen3-8B family].
+
+36 layers, d_model=2560, 32 heads / 8 KV heads (GQA), head_dim=128, qk-norm,
+d_ff=9728 (SwiGLU), vocab 151936.
+"""
+from repro.configs.common import reduce_for_smoke
+from repro.models.config import ModelConfig
+
+ARCH_ID = "qwen3-4b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="dense",
+        n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8, head_dim=128,
+        d_ff=9728, vocab_size=151_936,
+        use_qk_norm=True, rope_theta=1_000_000.0,
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_for_smoke(config())

@@ -1,0 +1,23 @@
+"""Qwen3-235B-A22B MoE [hf:Qwen/Qwen3-30B-A3B family].
+
+94 layers, d_model=4096, 64 heads / 4 KV heads (GQA), head_dim=128, qk-norm,
+MoE with 128 experts top-8, per-expert d_ff=1536, vocab 151936.
+"""
+from repro.configs.common import reduce_for_smoke
+from repro.models.config import ModelConfig
+
+ARCH_ID = "qwen3-moe-235b-a22b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="moe",
+        n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, head_dim=128,
+        d_ff=0, vocab_size=151_936,
+        n_experts=128, experts_per_tok=8, moe_d_ff=1536,
+        use_qk_norm=True, rope_theta=1_000_000.0,
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_for_smoke(config())

@@ -1,0 +1,24 @@
+"""Zamba2-2.7B [arXiv:2411.15242].
+
+54 Mamba2 blocks, d_model=2560, ssm_state=64, plus a weight-SHARED attention
+block (32 heads, kv=32, head_dim=80, d_ff=10240) applied every 6 mamba blocks
+(9 invocations — each with its own KV cache, so SqueezeAttention's budgets
+apply across invocations).  vocab 32000.
+"""
+from repro.configs.common import reduce_for_smoke
+from repro.models.config import ModelConfig
+
+ARCH_ID = "zamba2-2.7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="hybrid",
+        n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, head_dim=80,
+        d_ff=10_240, vocab_size=32_000,
+        ssm_state=64, ssm_expand=2, ssm_head_dim=64, attn_period=6,
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduce_for_smoke(config())

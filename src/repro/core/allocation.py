@@ -1,0 +1,147 @@
+"""SqueezeAttention Algorithm 1: layer-wise KV budget reallocation.
+
+Given per-layer cosine similarities (measured during prefill), cluster the
+layers into 3 groups; the group with the *highest* similarity (G3 — attention
+barely changes the residual stream there) gets its budget squeezed to
+``b_init * p`` and the freed tokens are redistributed uniformly to G1∪G2:
+
+    b_unimportant = b_init * p
+    b_important   = (n_layer*b_init - |G3|*b_init*p) / (|G1| + |G2|)
+
+Total budget is conserved exactly (paper §A.2).
+
+TPU adaptation (DESIGN.md §3): XLA needs static cache shapes, so the two
+resulting budgets are quantized to multiples of ``bucket`` — conserving the
+total by construction (we round the small budget down and give the remainder
+to the big group, then round the big budget down; the slack is reported so the
+engine can account for it).  The grouped layout (every layer is in one of two
+budget tiers) also lets the decode step run two uniform scans instead of
+n_layer heterogeneous bodies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.kmeans import kmeans_1d
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetPlan:
+    """Static description of a layer-wise KV budget allocation."""
+    n_layers: int
+    b_init: int                 # uniform per-layer budget before reallocation
+    p: float
+    group: tuple                # per-layer group id (0/1/2), 2 = least important
+    is_small: tuple             # per-layer bool: True -> squeezed budget
+    b_small: int                # slots for squeezed layers
+    b_big: int                  # slots for boosted layers
+    centers: tuple              # kmeans centers (diagnostics)
+
+    @property
+    def n_small(self) -> int:
+        return int(sum(self.is_small))
+
+    @property
+    def n_big(self) -> int:
+        return self.n_layers - self.n_small
+
+    @property
+    def budgets(self) -> np.ndarray:
+        return np.where(np.asarray(self.is_small), self.b_small, self.b_big)
+
+    @property
+    def total(self) -> int:
+        return int(self.budgets.sum())
+
+    def layer_order(self):
+        """(big_indices, small_indices) preserving model layer order."""
+        small = [i for i, s in enumerate(self.is_small) if s]
+        big = [i for i, s in enumerate(self.is_small) if not s]
+        return tuple(big), tuple(small)
+
+
+def uniform_plan(n_layers: int, b_init: int) -> BudgetPlan:
+    """Baseline: every layer keeps b_init (sequence-wise-only compression)."""
+    return BudgetPlan(
+        n_layers=n_layers, b_init=b_init, p=1.0,
+        group=tuple([1] * n_layers), is_small=tuple([False] * n_layers),
+        b_small=b_init, b_big=b_init, centers=(0.0,),
+    )
+
+
+def allocate(
+    cos_sims: Sequence[float],
+    b_init: int,
+    p: float = 0.35,
+    k: int = 3,
+    bucket: int = 16,
+    min_budget: int = 16,
+) -> BudgetPlan:
+    """Algorithm 1, lines 2–13: cosine sims -> per-layer budgets."""
+    cs = np.asarray(cos_sims, np.float64).reshape(-1)
+    n = cs.shape[0]
+    assert n >= 1
+    if p >= 1.0 or n < k:
+        return uniform_plan(n, b_init)
+    labels, centers = kmeans_1d(cs, k=k)
+    is_small = labels == (k - 1)        # G3: highest cosine sim = least important
+    n_small = int(is_small.sum())
+    n_big = n - n_small
+    if n_small == 0 or n_big == 0:      # degenerate clustering -> no reallocation
+        return uniform_plan(n, b_init)
+
+    b_small = b_init * p
+    b_big = (n * b_init - n_small * b_small) / n_big
+
+    # ---- bucket quantization (static-shape requirement) ----------------------
+    b_small_q = max(min_budget, int(b_small // bucket) * bucket)
+    freed = n * b_init - n_small * b_small_q
+    b_big_q = max(min_budget, int((freed / n_big) // bucket) * bucket)
+
+    return BudgetPlan(
+        n_layers=n, b_init=b_init, p=p,
+        group=tuple(int(v) for v in labels),
+        is_small=tuple(bool(v) for v in is_small),
+        b_small=int(b_small_q), b_big=int(b_big_q),
+        centers=tuple(float(c) for c in centers),
+    )
+
+
+def allocate_jax(cos_sims, b_init: int, p: float = 0.35, k: int = 3):
+    """jit-able Algorithm 1 (beyond-paper): returns per-layer budgets as a
+    traced array so allocation can fuse into the prefill graph — useful when
+    budgets feed *data* (masking/priorities) rather than static shapes.
+
+    Returns (budgets [n] float32, is_small [n] bool).  The static-shape
+    engine still uses the host `allocate` (shapes must be concrete); this
+    path powers on-device telemetry and the property tests that pin the two
+    implementations together.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.kmeans import kmeans_1d_jax
+
+    cs = jnp.asarray(cos_sims, jnp.float32).reshape(-1)
+    n = cs.shape[0]
+    labels, _ = kmeans_1d_jax(cs, k=k)
+    is_small = labels == (k - 1)
+    n_small = is_small.sum()
+    n_big = n - n_small
+    b_small = b_init * p
+    b_big = jnp.where(n_big > 0,
+                      (n * b_init - n_small * b_small) / jnp.maximum(n_big, 1),
+                      b_init)
+    degenerate = (n_small == 0) | (n_big == 0)
+    budgets = jnp.where(degenerate, jnp.full((n,), float(b_init)),
+                        jnp.where(is_small, b_small, b_big))
+    return budgets, is_small & ~degenerate
+
+
+def plan_cache_bytes(plan: BudgetPlan, batch: int, kv_heads: int, head_dim: int,
+                     bytes_per_el: int = 2) -> int:
+    """Physical KV arena size implied by a plan (both K and V)."""
+    slots = plan.n_small * plan.b_small + plan.n_big * plan.b_big
+    return 2 * slots * batch * kv_heads * head_dim * bytes_per_el

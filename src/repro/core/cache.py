@@ -1,0 +1,109 @@
+"""Budgeted KV slot arenas: compaction (prefill -> budget) and decode updates.
+
+A `SlotCache` is a fixed arena of `S` slots per attention layer.  Slots
+remember the original token position (`pos`, -1 = empty) and the H2O
+accumulated attention score.  Arenas are stacked over the layers of one
+budget tier, so SqueezeAttention's two-tier allocation becomes two uniform
+pytrees that `lax.scan` can carry.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import PolicyConfig, keep_priority
+
+
+class SlotCache(NamedTuple):
+    k: jnp.ndarray       # [L, B, S, Hkv, hd]
+    v: jnp.ndarray       # [L, B, S, Hkv, hd]
+    pos: jnp.ndarray     # [L, B, S] int32, -1 = empty
+    score: jnp.ndarray   # [L, B, S] float32 accumulated attention mass
+
+    @property
+    def n_slots(self) -> int:
+        return self.pos.shape[-1]
+
+    @property
+    def n_layers(self) -> int:
+        return self.pos.shape[0]
+
+
+def empty_cache(n_layers: int, batch: int, slots: int, kv_heads: int,
+                head_dim: int, dtype=jnp.bfloat16) -> SlotCache:
+    return SlotCache(
+        k=jnp.zeros((n_layers, batch, slots, kv_heads, head_dim), dtype),
+        v=jnp.zeros((n_layers, batch, slots, kv_heads, head_dim), dtype),
+        pos=jnp.full((n_layers, batch, slots), -1, jnp.int32),
+        score=jnp.zeros((n_layers, batch, slots), jnp.float32),
+    )
+
+
+def compact(
+    pol: PolicyConfig,
+    k: jnp.ndarray,        # [L, B, P, Hkv, hd] full prefill keys
+    v: jnp.ndarray,
+    pos: jnp.ndarray,      # [L, B, P] token positions (-1 for padding)
+    score: jnp.ndarray,    # [L, B, P] prefill H2O column sums
+    budget: int,
+    t,                     # prompt length (scalar or [B])
+) -> SlotCache:
+    """Keep the top-`budget` slots by policy priority (prefill compaction).
+
+    This is Algorithm 1 line 12 + the first `C_seq` application: the full
+    prefill KV of a layer tier is squeezed into its allocated arena.
+    """
+    P = pos.shape[-1]
+    assert budget <= P, f"budget {budget} > prefill len {P}: use pad_cache"
+    pri = keep_priority(pol, pos, score, t, budget)
+    _, idx = jax.lax.top_k(pri, budget)                       # [L, B, budget]
+    idx_sorted = jnp.sort(idx, axis=-1)                       # keep original order
+    gather = lambda a: jnp.take_along_axis(a, idx_sorted.reshape(
+        idx_sorted.shape + (1,) * (a.ndim - idx_sorted.ndim)).astype(jnp.int32), axis=2)
+    return SlotCache(
+        k=gather(k), v=gather(v),
+        pos=jnp.take_along_axis(pos, idx_sorted, axis=-1),
+        score=jnp.take_along_axis(score, idx_sorted, axis=-1),
+    )
+
+
+def pad_cache(cache: SlotCache, slots: int) -> SlotCache:
+    """Grow an arena to `slots` (budget > prompt length): pad with empties."""
+    extra = slots - cache.n_slots
+    if extra <= 0:
+        return cache
+    L, B, S = cache.pos.shape
+    padkv = jnp.zeros(cache.k.shape[:2] + (extra,) + cache.k.shape[3:], cache.k.dtype)
+    return SlotCache(
+        k=jnp.concatenate([cache.k, padkv], axis=2),
+        v=jnp.concatenate([cache.v, padkv], axis=2),
+        pos=jnp.concatenate([cache.pos, jnp.full((L, B, extra), -1, jnp.int32)], axis=2),
+        score=jnp.concatenate([cache.score, jnp.zeros((L, B, extra), jnp.float32)], axis=2),
+    )
+
+
+def write_token(
+    pol: PolicyConfig,
+    layer_cache: SlotCache,    # UNstacked: k/v [B, S, Hkv, hd], pos/score [B, S]
+    k_new: jnp.ndarray,        # [B, 1, Hkv, hd]
+    v_new: jnp.ndarray,
+    t: jnp.ndarray,            # [B] position of the new token
+    slot_probs: jnp.ndarray,   # [B, S+1] attention mass (incl. the new token)
+) -> SlotCache:
+    """Evict argmin(priority) and write the new token there (Alg. 1 line 17).
+
+    Also folds the step's attention mass into the H2O scores — the fused
+    statistic the Pallas decode kernel produces for free.
+    """
+    k, v, pos, score = layer_cache
+    score = score + slot_probs[:, :-1]
+    pri = keep_priority(pol, pos, score, t, pos.shape[-1])    # [B, S]
+    victim = jnp.argmin(pri, axis=-1)                         # [B]
+    b_idx = jnp.arange(pos.shape[0])
+    k = k.at[b_idx, victim].set(k_new[:, 0])
+    v = v.at[b_idx, victim].set(v_new[:, 0])
+    pos = pos.at[b_idx, victim].set(t.astype(jnp.int32))
+    score = score.at[b_idx, victim].set(slot_probs[:, -1])
+    return SlotCache(k, v, pos, score)

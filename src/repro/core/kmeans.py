@@ -1,0 +1,75 @@
+"""1-D KMeans (Lloyd's) for layer-importance clustering.
+
+The paper clusters `n_layer` scalar cosine similarities into k=3 groups
+(SqueezeAttention Algorithm 1, line 5).  The input is tiny (16–94 scalars) so
+Lloyd's with quantile init converges in a handful of iterations and is exact
+for our purposes.  Two implementations:
+
+  * `kmeans_1d`      — host-side numpy (used by the serving engine between the
+                       prefill and decode jit boundaries; matches the paper's
+                       one-time host-side cost, Table 5).
+  * `kmeans_1d_jax`  — pure-jnp, jit/vmap-able (used inside fused
+                       prefill+allocate graphs and for property tests).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _init_centers(x, k):
+    # evenly spaced over the value range: deterministic and robust to the
+    # skewed cluster sizes typical of layer similarities (a few special
+    # layers + one big high-similarity mass)
+    lo, hi = float(x.min()), float(x.max())
+    qs = lo + (np.arange(k) + 0.5) / k * max(hi - lo, 1e-9)
+    return qs
+
+
+def kmeans_1d(x: np.ndarray, k: int = 3, iters: int = 25):
+    """Returns (labels [n] int — sorted so cluster k-1 has the LARGEST center,
+    centers [k])."""
+    x = np.asarray(x, np.float64).reshape(-1)
+    n = x.shape[0]
+    if n <= k:  # degenerate: each point its own cluster, ordered
+        order = np.argsort(np.argsort(x))
+        return order.astype(np.int64), np.sort(x)
+    c = _init_centers(x, k)
+    for _ in range(iters):
+        d = np.abs(x[:, None] - c[None, :])
+        lab = d.argmin(1)
+        newc = np.array([x[lab == j].mean() if (lab == j).any() else c[j]
+                         for j in range(k)])
+        if np.allclose(newc, c):
+            c = newc
+            break
+        c = newc
+    # canonical order: ascending center => label k-1 = highest cosine sim
+    order = np.argsort(c)
+    remap = np.empty(k, np.int64)
+    remap[order] = np.arange(k)
+    return remap[lab], c[order]
+
+
+def kmeans_1d_jax(x: jnp.ndarray, k: int = 3, iters: int = 25):
+    """jit-able variant; same canonical label order."""
+    x = x.astype(jnp.float32).reshape(-1)
+    lo, hi = x.min(), x.max()
+    qs = lo + (jnp.arange(k, dtype=jnp.float32) + 0.5) / k \
+        * jnp.maximum(hi - lo, 1e-9)
+
+    def step(c, _):
+        d = jnp.abs(x[:, None] - c[None, :])
+        lab = d.argmin(1)
+        onehot = jax.nn.one_hot(lab, k)                   # [n, k]
+        cnt = onehot.sum(0)
+        s = (onehot * x[:, None]).sum(0)
+        newc = jnp.where(cnt > 0, s / jnp.clip(cnt, 1.0), c)
+        return newc, None
+
+    c, _ = jax.lax.scan(step, qs, None, length=iters)
+    lab = jnp.abs(x[:, None] - c[None, :]).argmin(1)
+    order = jnp.argsort(c)
+    remap = jnp.zeros((k,), jnp.int32).at[order].set(jnp.arange(k, dtype=jnp.int32))
+    return remap[lab], c[order]

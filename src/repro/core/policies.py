@@ -1,0 +1,77 @@
+"""Sequence-wise KV eviction policies as slot keep-priorities.
+
+The paper combines its layer-wise budgets with three sequence-wise
+compressors: Sliding Window (Beltagy et al. 2020), StreamingLLM (Xiao et al.
+2023) and Heavy-Hitter Oracle / H2O (Zhang et al. 2024).  On TPU all three
+reduce to one mechanism over a fixed slot arena:
+
+  * keep-priority(slot) — a float per cached slot; **the victim of an
+    eviction is always argmin(priority)**, and prefill compaction keeps the
+    top-`budget` slots by the same priority.
+
+    sliding_window : priority = position           (evict oldest)
+    streaming_llm  : priority = position, but the first `n_sink` tokens get
+                     +INF (never evicted — "attention sinks")
+    h2o            : priority = accumulated attention score (kv-head mean),
+                     with the most recent `recent_frac * budget` tokens
+                     protected (H2O's local statistics window)
+
+Empty slots carry priority -INF so they are always filled first.  This is the
+static-shape equivalent of the paper's "if len(K) > b: evict" loop — the
+arena IS the budget, so memory savings are physical.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+BIG = 1e18
+
+SLIDING_WINDOW = "sliding_window"
+STREAMING_LLM = "streaming_llm"
+H2O = "h2o"
+# beyond-paper: sinks + heavy-hitters + recency in one priority — the union
+# of StreamingLLM's and H2O's protected sets (the paper combines its layer
+# dimension with ONE sequence policy at a time; nothing prevents composing)
+SINK_H2O = "sink_h2o"
+POLICIES = (SLIDING_WINDOW, STREAMING_LLM, H2O, SINK_H2O)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    name: str = SLIDING_WINDOW
+    n_sink: int = 4              # streaming_llm: protected prefix tokens
+    recent_frac: float = 0.5     # h2o: fraction of budget kept as recency window
+
+    def __post_init__(self):
+        assert self.name in POLICIES, self.name
+
+
+def keep_priority(
+    pol: PolicyConfig,
+    pos: jnp.ndarray,       # [..., S] original token positions, -1 = empty
+    score: jnp.ndarray,     # [..., S] accumulated attention mass (H2O)
+    t,                      # current logical position (scalar or [...])
+    budget: int,            # arena size (for the H2O recency window)
+) -> jnp.ndarray:
+    empty = pos < 0
+    t = jnp.asarray(t)
+    # t: scalar, or any shape broadcastable to pos.shape[:-1] (e.g. [B] under
+    # a stacked [L, B, S] arena)
+    tb = t if t.ndim == 0 else jnp.broadcast_to(t, pos.shape[:-1])[..., None]
+    if pol.name == SLIDING_WINDOW:
+        pri = pos.astype(jnp.float32)
+    elif pol.name == STREAMING_LLM:
+        pri = pos.astype(jnp.float32) + BIG * (pos < pol.n_sink)
+    elif pol.name == H2O:
+        recent_w = max(int(pol.recent_frac * budget), 1)
+        protected = pos > (tb - recent_w)
+        pri = score.astype(jnp.float32) + BIG * protected
+    elif pol.name == SINK_H2O:
+        recent_w = max(int(pol.recent_frac * budget), 1)
+        protected = (pos > (tb - recent_w)) | (pos < pol.n_sink)
+        pri = score.astype(jnp.float32) + BIG * protected
+    else:
+        raise ValueError(pol.name)
+    return jnp.where(empty, -BIG, pri)

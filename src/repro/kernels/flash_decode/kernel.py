@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: split-S budgeted decode attention (flash-decode).
+
+TPU adaptation of the paper's decode hot-spot (DESIGN.md §3): each decode
+step streams the whole KV arena from HBM; SqueezeAttention shrinks that
+arena per layer, and this kernel makes the remaining reads bandwidth-
+optimal:
+
+  * grid (B, Hkv, S/block) — slot blocks are independent partials
+    (split-K / flash-decode style), so the sequential-grid constraint on
+    TPU costs nothing and long arenas parallelize across the grid.
+  * K/V blocks are tiled into VMEM as [block_s, hd] with hd padded to the
+    128-lane register shape; q [G, hd] stays resident.
+  * position-based masking (validity + causality + sliding window) happens
+    on the block in VMEM — evicted/empty slots never reach the MXU.
+  * partials (m, l, acc) are combined by a tiny jnp epilogue in ops.py,
+    which also folds in the current token's self-attention term.
+
+The H2O statistic (per-slot probability mass) is produced by a second
+1-read pass (`colsum_kernel`) given the combined (m, l) — K is re-read but
+V is not, matching the fused-statistic design in core/cache.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, t_ref, w_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float, softcap: float):
+    q = q_ref[0, 0].astype(jnp.float32)                 # [G, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # [bs, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = pos_ref[0]                                     # [bs]
+    t = t_ref[0]
+    w = w_ref[0]
+    mask = (pos >= 0) & (pos <= t) & (pos > t - w)       # [bs]
+    s = jnp.where(mask[None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                              # [G]
+    p = jnp.exp(s - m[:, None])
+    p = jnp.where(mask[None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)                              # [G]
+    acc = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+    acc_ref[0, 0, 0] = acc
+
+
+def flash_decode_partials(q, k, v, pos, t, window, *, block_s: int = 512,
+                          softcap: float | None = None,
+                          interpret: bool = True):
+    """q [B,Hkv,G,hd]; k/v [B,S,Hkv,hd]; pos [B,S]; t [B]; window scalar array.
+
+    Returns split-S partials m,l [B,Hkv,nS,G] and acc [B,Hkv,nS,G,hd] (f32).
+    S must be a multiple of block_s (ops.py pads with empty slots).
+    """
+    B, Hkv, G, hd = q.shape
+    S = k.shape[1]
+    assert S % block_s == 0, (S, block_s)
+    nS = S // block_s
+    scale = 1.0 / math.sqrt(hd)
+    w_arr = jnp.broadcast_to(jnp.asarray(window, jnp.int32), (1,))
+
+    kern = functools.partial(_decode_kernel, scale=scale,
+                             softcap=float(softcap or 0.0))
+    grid = (B, Hkv, nS)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, n, sb: (b, n, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda b, n, sb: (b, sb, n, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda b, n, sb: (b, sb, n, 0)),
+            pl.BlockSpec((1, block_s), lambda b, n, sb: (b, sb)),
+            pl.BlockSpec((1,), lambda b, n, sb: (b,)),
+            pl.BlockSpec((1,), lambda b, n, sb: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G), lambda b, n, sb: (b, n, sb, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda b, n, sb: (b, n, sb, 0)),
+            pl.BlockSpec((1, 1, 1, G, hd), lambda b, n, sb: (b, n, sb, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, nS, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, nS, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, nS, G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, pos, t, w_arr)
+
+
+def _colsum_kernel(q_ref, k_ref, pos_ref, t_ref, w_ref, m_ref, l_ref,
+                   out_ref, *, scale: float, softcap: float):
+    q = q_ref[0, 0].astype(jnp.float32)                  # [G, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # [bs, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = pos_ref[0]
+    t = t_ref[0]
+    w = w_ref[0]
+    mask = (pos >= 0) & (pos <= t) & (pos > t - w)
+    m = m_ref[0, 0]                                      # [G] combined max
+    linv = l_ref[0, 0]                                   # [G] 1/l combined
+    p = jnp.exp(s - m[:, None]) * linv[:, None]
+    p = jnp.where(mask[None, :], p, 0.0)
+    out_ref[0, 0] = jnp.sum(p, axis=0)                   # [bs] over q-group
+
+
+def flash_decode_colsums(q, k, pos, t, window, m_comb, l_comb, *,
+                         block_s: int = 512, softcap: float | None = None,
+                         interpret: bool = True):
+    """Second pass: per-slot probability mass given combined (m, 1/l).
+
+    m_comb/l_comb: [B, Hkv, G] (l_comb already inverted).
+    Returns [B, Hkv, S] f32.
+    """
+    B, Hkv, G, hd = q.shape
+    S = k.shape[1]
+    nS = S // block_s
+    scale = 1.0 / math.sqrt(hd)
+    w_arr = jnp.broadcast_to(jnp.asarray(window, jnp.int32), (1,))
+    kern = functools.partial(_colsum_kernel, scale=scale,
+                             softcap=float(softcap or 0.0))
+    return pl.pallas_call(
+        kern,
+        grid=(B, Hkv, nS),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, n, sb: (b, n, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda b, n, sb: (b, sb, n, 0)),
+            pl.BlockSpec((1, block_s), lambda b, n, sb: (b, sb)),
+            pl.BlockSpec((1,), lambda b, n, sb: (b,)),
+            pl.BlockSpec((1,), lambda b, n, sb: (0,)),
+            pl.BlockSpec((1, 1, G), lambda b, n, sb: (b, n, 0)),
+            pl.BlockSpec((1, 1, G), lambda b, n, sb: (b, n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_s), lambda b, n, sb: (b, n, sb)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, S), jnp.float32),
+        interpret=interpret,
+    )(q, k, pos, t, w_arr, m_comb, l_comb)

@@ -1,0 +1,49 @@
+"""jit'd wrapper: pad -> kernel partials -> combine epilogue (+H2O pass)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode import kernel as K
+
+
+def _pad_arena(k, v, pos, block_s):
+    S = k.shape[1]
+    pad = (-S) % block_s
+    if pad == 0:
+        return k, v, pos, S
+    zk = jnp.zeros(k.shape[:1] + (pad,) + k.shape[2:], k.dtype)
+    pp = jnp.full(pos.shape[:1] + (pad,), -1, pos.dtype)
+    return (jnp.concatenate([k, zk], 1), jnp.concatenate([v, zk], 1),
+            jnp.concatenate([pos, pp], 1), S)
+
+
+def flash_decode(q, k, v, pos, t, window, *, block_s: int = 512,
+                 softcap=None, return_colsums: bool = False,
+                 interpret: bool = True):
+    """Budgeted decode attention via the Pallas split-S kernel.
+
+    q [B,Hkv,G,hd], k/v [B,S,Hkv,hd], pos [B,S], t [B], window scalar.
+    Returns (out [B,Hkv,G,hd] f32, colsums [B,Hkv,S] f32 | None).
+    """
+    S_orig = k.shape[1]
+    block_s = min(block_s, max(64, 1 << (S_orig - 1).bit_length()))
+    k, v, pos, _ = _pad_arena(k, v, pos, block_s)
+
+    m_p, l_p, acc_p = K.flash_decode_partials(
+        q, k, v, pos, t, window, block_s=block_s, softcap=softcap,
+        interpret=interpret)
+    # ---- combine split-S partials (tiny epilogue) ----------------------------
+    m = jnp.max(m_p, axis=2)                              # [B,Hkv,G]
+    w = jnp.exp(m_p - m[:, :, None])                      # [B,Hkv,nS,G]
+    l = jnp.sum(l_p * w, axis=2)                          # [B,Hkv,G]
+    acc = jnp.sum(acc_p * w[..., None], axis=2)           # [B,Hkv,G,hd]
+    linv = 1.0 / jnp.clip(l, 1e-30)
+    out = acc * linv[..., None]
+
+    colsums = None
+    if return_colsums:
+        colsums = K.flash_decode_colsums(
+            q, k, pos, t, window, m, linv, block_s=block_s, softcap=softcap,
+            interpret=interpret)[:, :, :S_orig]
+    return out, colsums

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the budgeted flash-decode kernel.
+
+One query token per (batch, kv-head, q-group) attending over a slot arena
+with position-based validity/window masking — the inner loop of
+SqueezeAttention's decode step.  Returns the attention output AND the
+per-slot probability mass (H2O statistic) so the fused kernel has an exact
+reference for both.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,        # [B, Hkv, G, hd]
+    k: jnp.ndarray,        # [B, S, Hkv, hd]
+    v: jnp.ndarray,        # [B, S, Hkv, hd]
+    pos: jnp.ndarray,      # [B, S] slot positions (-1 = empty)
+    t: jnp.ndarray,        # [B] current token position
+    window,                # int or scalar array
+    softcap: float | None = None,
+):
+    """Returns (out [B,Hkv,G,hd] f32, slot_probs [B,Hkv,S] f32)."""
+    B, S, Hkv, hd = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bngd,bsnd->bngs", qf, kf) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    tb = t[:, None].astype(jnp.int32)
+    mask = (pos >= 0) & (pos <= tb) & (pos > tb - window)          # [B, S]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    probs = jnp.exp(s - s.max(-1, keepdims=True))
+    probs = jnp.where(mask[:, None, None, :], probs, 0.0)
+    denom = jnp.clip(probs.sum(-1, keepdims=True), 1e-30)
+    probs = probs / denom
+    out = jnp.einsum("bngs,bsnd->bngd", probs, v.astype(jnp.float32))
+    return out, probs.sum(axis=2)            # slot mass summed over q-group

@@ -1,0 +1,29 @@
+"""jit'd wrapper for the SSD kernel: pre-scale, pad, call, epilogue."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import kernel as K
+
+
+def ssd(xh, bh, ch, dt, a_log, d_skip, *, chunk: int = 128,
+        interpret: bool = True):
+    """Drop-in for models.ssm.ssd_chunked (initial_state=None).
+
+    xh [B,S,H,P], bh/ch [B,S,N], dt [B,S,H] post-softplus, a_log [H].
+    Returns (y [B,S,H,P] f32 incl. D-skip, final_state [B,H,P,N] f32).
+    """
+    B, S, H, P = xh.shape
+    pad = (-S) % chunk
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    dta = dt.astype(jnp.float32) * A                     # [B,S,H]
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bh = jnp.pad(bh, ((0, 0), (0, pad), (0, 0)))
+        ch = jnp.pad(ch, ((0, 0), (0, pad), (0, 0)))
+        dta = jnp.pad(dta, ((0, 0), (0, pad), (0, 0)))   # dta=0 -> decay 1, x=0
+    y, fin = K.ssd_scan(xdt, bh.astype(jnp.float32), ch.astype(jnp.float32),
+                        dta, chunk=chunk, interpret=interpret)
+    y = y[:, :S] + xh.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y, fin

@@ -1,0 +1,38 @@
+"""Oracles for the SSD scan kernel.
+
+`ssd_ref` re-exports the chunked jnp implementation the model stack uses;
+`ssd_recurrent_ref` is the O(S) literal recurrence — the ground truth both
+the chunked jnp path and the Pallas kernel must match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked as ssd_ref  # noqa: F401
+
+
+def ssd_recurrent_ref(xh, bh, ch, dt, a_log, d_skip, initial_state=None):
+    """Token-by-token recurrence.  xh [B,S,H,P], bh/ch [B,S,N], dt [B,S,H]."""
+    B, S, H, P = xh.shape
+    N = bh.shape[-1]
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(state, inp):
+        x_t, b_t, c_t, dt_t = inp                       # [B,H,P],[B,N],[B,N],[B,H]
+        decay = jnp.exp(dt_t * A)                       # [B,H]
+        upd = jnp.einsum("bhp,bn->bhpn", x_t * dt_t[..., None], b_t)
+        state = state * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y
+
+    xs = (xh.astype(jnp.float32).transpose(1, 0, 2, 3),
+          bh.astype(jnp.float32).transpose(1, 0, 2),
+          ch.astype(jnp.float32).transpose(1, 0, 2),
+          dt.astype(jnp.float32).transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, initial_state, xs)
+    y = ys.transpose(1, 0, 2, 3)                         # [B,S,H,P]
+    y = y + xh.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y, final

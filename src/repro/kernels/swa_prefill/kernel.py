@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: causal sliding-window flash-attention prefill (GQA).
+
+The sequence-wise policies the paper builds on (Sliding Window /
+StreamingLLM) make prefill attention band-limited; this kernel exploits that
+structurally:
+
+  * grid (B, Hq, S/bq, S/bk) with the key dimension innermost — online
+    softmax state (m, l, acc) lives in VMEM scratch across the key sweep.
+  * q/k blocks are 128x128 MXU-aligned; GQA is folded into the k/v index
+    map (query head h reads kv head h // G) so no repeated KV materializes
+    in HBM.
+  * fully-masked (non-causal or out-of-window) blocks skip the MXU work via
+    pl.when — with window w, each query row touches O(w) keys, which is the
+    sub-quadratic property that makes long_500k dense decode viable.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                bq: int, bk: int, nk: int, window: int, scale: float,
+                softcap: float):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # block is live iff some (qpos >= kpos) and some (kpos > qpos - window)
+    live = (k_start <= q_start + bq - 1) & \
+        (k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)              # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = (kpos <= qpos) & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        lsafe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / lsafe[:, None]).astype(o_ref.dtype)
+
+
+def swa_prefill(q, k, v, *, window: int, bq: int = 128, bk: int = 128,
+                softcap: float | None = None, interpret: bool = True):
+    """q [B,Hq,S,hd], k/v [B,Hkv,S,hd] -> out [B,Hq,S,hd] (q dtype).
+
+    `window` is static (per-layer attention geometry).  S must be a
+    multiple of the block sizes (ops.py pads).
+    """
+    B, Hq, S, hd = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    assert S % bq == 0 and S % bk == 0
+    nq, nk = S // bq, S // bk
+    kern = functools.partial(
+        _swa_kernel, bq=bq, bk=bk, nk=nk, window=int(window),
+        scale=1.0 / math.sqrt(hd), softcap=float(softcap or 0.0))
+    return pl.pallas_call(
+        kern,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,24 @@
+"""jit'd wrapper: pad to block multiples, call kernel, slice back."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.swa_prefill import kernel as K
+
+
+def swa_attention(q, k, v, *, window: int, bq: int = 128, bk: int = 128,
+                  softcap=None, interpret: bool = True):
+    """q [B,Hq,S,hd], k/v [B,Hkv,S,hd] -> [B,Hq,S,hd].  Pads S as needed;
+    padded queries attend only to themselves... and are sliced away."""
+    B, Hq, S, hd = q.shape
+    blk = max(bq, bk)
+    if S < blk:                      # tiny sequences: shrink blocks
+        bq = bk = max(8, 1 << (S - 1).bit_length() >> 1)
+    pad = (-S) % max(bq, bk)
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = K.swa_prefill(q, k, v, window=window, bq=bq, bk=bk,
+                        softcap=softcap, interpret=interpret)
+    return out[:, :, :S]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: causal sliding-window prefill attention (GQA)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def swa_attention_ref(q, k, v, window: int, softcap: float | None = None):
+    """q [B,Hq,S,hd], k/v [B,Hkv,S,hd]; canonical positions 0..S-1.
+    Returns out [B,Hq,S,hd] f32."""
+    B, Hq, S, hd = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf)
+    s = s / jnp.sqrt(jnp.float32(hd))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = (ki <= qi) & (ki > qi - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    p = p / jnp.clip(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf)

@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+
+The two lines above MUST run before any other import — jax locks the device
+count on first initialization, and the production meshes need 512 host
+placeholder devices (2 pods x 16 x 16).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --all --kv-mode squeeze
+
+Each successful combo writes experiments/dryrun/<arch>__<shape>__<mesh>__<kv>.json
+with memory_analysis, cost_analysis, and the collective-byte parse — the
+inputs to the §Roofline table (analysis/roofline.py)."""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.analysis.hlo import collective_bytes          # noqa: E402
+from repro.analysis.hlo_flops import analyze as hlo_analyze  # noqa: E402
+from repro.analysis.roofline import (                    # noqa: E402
+    from_cost_analysis, model_flops, wire_bytes)
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_config  # noqa: E402
+from repro.launch import specs as S                      # noqa: E402
+from repro.launch.mesh import make_production_mesh       # noqa: E402
+
+
+def _mem_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        try:
+            out[k] = int(getattr(ma, k))
+        except (AttributeError, TypeError):
+            pass
+    return out
+
+
+def run_combo(arch: str, shape: str, mesh_name: str, kv_mode: str,
+              outdir: str, force: bool = False, save_hlo: bool = False,
+              microbatches: int = 4) -> dict:
+    tag = f"{arch}__{shape}__{mesh_name}__{kv_mode}"
+    path = os.path.join(outdir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as fh:
+            return json.load(fh)
+
+    cfg = get_config(arch)
+    case = S.SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.size
+    t0 = time.perf_counter()
+
+    with mesh:
+        if case.kind == "train":
+            params = S.abstract_params(cfg, mesh)
+            opt = S.abstract_opt_state(cfg, mesh, params)
+            batch = S.train_inputs(cfg, case, mesh)
+            fn = S.build_train_fn(cfg, microbatches=microbatches)
+            lowered = jax.jit(fn, donate_argnums=(0, 1)).lower(params, opt, batch)
+        elif case.kind == "prefill":
+            params = S.abstract_params(cfg, mesh)
+            tokens, embeds, positions = S.prefill_inputs(cfg, case, mesh)
+            fn = S.build_prefill_fn(cfg, mesh)
+            lowered = jax.jit(fn).lower(params, tokens, embeds, positions)
+        else:
+            params = S.abstract_params(cfg, mesh)
+            plan = S.dryrun_plan(cfg, case.seq_len, kv_mode)
+            state, token = S.decode_state_specs(cfg, case, mesh, plan)
+            fn = S.build_serve_fn(cfg)
+            lowered = jax.jit(fn, donate_argnums=(1,)).lower(params, state, token)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = _mem_dict(compiled)
+    hlo = compiled.as_text()
+    colls = collective_bytes(hlo)
+    # loop-aware FLOPs/bytes: XLA's cost_analysis visits scan bodies once,
+    # so re-derive both from the HLO with while trip counts applied.
+    loop_aware = hlo_analyze(hlo)
+
+    kv_slots = 0
+    if case.kind == "decode" and cfg.has_attention:
+        plan = S.dryrun_plan(cfg, case.seq_len, kv_mode)
+        kv_slots = plan.total
+    mflops = model_flops(cfg, case, kv_slots)
+    rl = from_cost_analysis(
+        arch, shape, mesh_name, chips,
+        {"flops": loop_aware["flops"], "bytes accessed": loop_aware["bytes"]},
+        wire_bytes(colls), mflops)
+
+    rec = {
+        "tag": tag, "arch": arch, "shape": shape, "mesh": mesh_name,
+        "kv_mode": kv_mode, "chips": chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "loop_aware": loop_aware,
+        "memory_analysis": mem,
+        "collectives": colls,
+        "roofline": rl.row(),
+        "hlo_bytes": len(hlo),
+    }
+    os.makedirs(outdir, exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(rec, fh, indent=1)
+    if save_hlo:
+        with open(os.path.join(outdir, tag + ".hlo.txt"), "w") as fh:
+            fh.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(S.SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--kv-mode", default="full", choices=["full", "squeeze"])
+    ap.add_argument("--all", action="store_true",
+                    help="all assigned archs x all shapes")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=4)
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if args.all or not args.arch else [args.arch]
+    if args.arch and args.arch == "all-plus-paper":
+        archs = list(ALL_ARCHS)
+    # an explicit --shape narrows the sweep even under --all
+    shapes = [args.shape] if args.shape else list(S.SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                tag = f"{arch}/{shape}/{mesh_name}/{args.kv_mode}"
+                try:
+                    rec = run_combo(arch, shape, mesh_name, args.kv_mode,
+                                    args.out, args.force, args.save_hlo,
+                                    args.microbatches)
+                    rl = rec["roofline"]
+                    print(f"OK   {tag:60s} compile={rec['compile_s']:7.1f}s "
+                          f"bottleneck={rl['bottleneck']:10s} "
+                          f"t_bound={max(rl['t_compute_s'], rl['t_memory_s'], rl['t_collective_s']):.4f}s",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((tag, repr(e)))
+                    print(f"FAIL {tag}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Target: TPU v5e pods — 256 chips (16x16) per pod, 2 pods for multi-pod runs.
+Defined as functions so importing this module never touches jax device state
+(the dry-run launcher must set XLA_FLAGS before the first jax call).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh with the production axis names (CPU tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Axis names the global batch is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def model_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def data_size(mesh) -> int:
+    n = mesh.shape["data"]
+    return n * mesh.shape.get("pod", 1)

@@ -1,0 +1,73 @@
+"""Serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mistral-7b --reduced \
+        --mode squeeze --policy sliding_window --budget-frac 0.4
+
+Loads a config (reduced for CPU; full configs serve under the production
+mesh proven by launch/dryrun.py), optionally restores a checkpoint, and
+runs batched generation with the requested KV-cache mode.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config, get_reduced
+from repro.core import PolicyConfig
+from repro.models import init_params
+from repro.serving import Engine, EngineConfig, SamplerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mistral-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--mode", default="squeeze",
+                    choices=["full", "uniform", "squeeze"])
+    ap.add_argument("--policy", default="sliding_window",
+                    choices=["sliding_window", "streaming_llm", "h2o"])
+    ap.add_argument("--budget-frac", type=float, default=0.4)
+    ap.add_argument("--p", type=float, default=0.35)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    if args.ckpt_dir and (s := ckpt.latest_step(args.ckpt_dir)) is not None:
+        params = ckpt.restore(args.ckpt_dir, s, params)
+        print(f"restored step {s} from {args.ckpt_dir}")
+
+    eng = Engine(params, cfg, EngineConfig(
+        mode=args.mode, policy=PolicyConfig(args.policy),
+        budget_frac=args.budget_frac, p=args.p, max_new_tokens=args.max_new,
+        bucket=16 if not args.reduced else 4,
+        min_budget=16 if not args.reduced else 4,
+        sampler=SamplerConfig(temperature=args.temperature)))
+
+    rng = np.random.default_rng(args.seed)
+    prompt = rng.integers(0, cfg.vocab_size,
+                          (args.batch, args.prompt_len)).astype(np.int32)
+    r = eng.generate(tokens=prompt, seed=args.seed)
+    print(f"mode={args.mode} policy={args.policy}")
+    if cfg.has_attention:
+        print(f"plan: {r.plan.n_big}x{r.plan.b_big} + "
+              f"{r.plan.n_small}x{r.plan.b_small} slots "
+              f"(b_init={r.plan.b_init}, p={r.plan.p})")
+        print(f"layer cosine sims: {np.round(r.cos_sims, 3)}")
+    print(f"prefill {r.prefill_seconds*1e3:.1f}ms | allocate "
+          f"{r.allocate_seconds*1e3:.1f}ms | decode {r.decode_seconds*1e3:.1f}ms "
+          f"| {r.tokens_per_second:.1f} tok/s")
+    for b in range(min(args.batch, 2)):
+        print(f"out[{b}]: {r.tokens[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Sharding rules: parameter / optimizer / activation / cache PartitionSpecs.
+
+Layout (MaxText-style 2-D):
+  * params: FSDP on the ``data`` axis x tensor-parallel on ``model``.
+    - attention: qkv projections shard (d_model->data, heads*hd->model),
+      output projection the transpose.
+    - MoE: experts shard on ``model`` when divisible, otherwise the expert
+      hidden dim does (mixtral's 8 experts on a 16-way axis).
+    - embeddings: vocab on ``model`` when divisible, else d_model.
+  * batch: (``pod``, ``data``); the pod axis is pure data parallelism.
+  * KV arenas: kv-heads on ``model`` when divisible (else head_dim); slots
+    shard on ``data`` when the batch can't use it (long_500k, batch=1).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.launch.mesh import batch_axes, model_size
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+        for p in path)
+
+
+def _vocab_spec(cfg, mesh, transpose=False):
+    if cfg.vocab_size % model_size(mesh) == 0:
+        return P("data", "model") if transpose else P("model", "data")
+    return P("model", None) if transpose else (P(None, "model"))
+
+
+def param_spec(cfg: ModelConfig, mesh, path: str, ndim: int) -> P:
+    """PartitionSpec for one parameter leaf, keyed on its tree path."""
+    lead = ndim - 2          # stacked layer dims ([L] or [n_super, period])
+    pre = (None,) * max(lead, 0)
+    ms = model_size(mesh)
+
+    if "unembed" in path:
+        return _vocab_spec(cfg, mesh, transpose=True)
+    if "embed" in path:
+        return _vocab_spec(cfg, mesh)
+    if path.endswith(("attn/wq", "attn/wk", "attn/wv")):
+        return P(*pre, "data", "model")
+    if path.endswith("attn/wo"):
+        return P(*pre, "model", "data")
+    if "moe/w_router" in path:
+        return P(*(None,) * (ndim - 2), "data", None)
+    if "moe/" in path:   # [.., E, d, f] / [.., E, f, d]
+        e_shard = cfg.n_experts % ms == 0
+        pre = (None,) * (ndim - 3)
+        if path.endswith("w_down"):
+            return P(*pre, "model", None, "data") if e_shard \
+                else P(*pre, None, "model", "data")
+        return P(*pre, "model", "data", None) if e_shard \
+            else P(*pre, None, "data", "model")
+    if path.endswith(("mlp/w_gate", "mlp/w_up")):
+        return P(*pre, "data", "model")
+    if path.endswith("mlp/w_down"):
+        return P(*pre, "model", "data")
+    if path.endswith("ssm/w_in"):
+        return P(*pre, "data", "model")
+    if path.endswith("ssm/w_out"):
+        return P(*pre, "model", "data")
+    if path.endswith("ssm/conv_w"):
+        return P(*(None,) * (ndim - 1), "model")
+    if path.endswith(("ssm/conv_b",)):
+        return P(*(None,) * (ndim - 1), "model")
+    # norms, scalars, dt_bias, a_log, d_skip, q/k norms: replicate
+    return P(*(None,) * ndim)
+
+
+def param_shardings(cfg: ModelConfig, mesh, params_shape):
+    """Pytree of NamedShardings matching a (possibly abstract) params tree."""
+    def rule(path, leaf):
+        return NamedSharding(mesh, param_spec(cfg, mesh, _path_str(path), leaf.ndim))
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_shardings(cfg: ModelConfig, mesh, opt_shape):
+    """Adam m/v follow their parameters; the step counter is replicated."""
+    def rule(path, leaf):
+        ps = _path_str(path)
+        if ps.startswith(("m/", "v/")) or "/m/" in ps or "/v/" in ps:
+            core = ps.split("/", 1)[1]
+            return NamedSharding(mesh, param_spec(cfg, mesh, core, leaf.ndim))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(rule, opt_shape)
+
+
+# ---------------------------------------------------------------- activations
+def batch_spec(mesh, ndim: int) -> P:
+    return P(batch_axes(mesh), *(None,) * (ndim - 1))
+
+
+def kv_head_axis(cfg: ModelConfig, mesh) -> str:
+    """Which trailing axis of [.., Hkv, hd] takes the model axis."""
+    return "heads" if cfg.n_kv_heads % model_size(mesh) == 0 else "dim"
+
+
+def cache_spec(cfg: ModelConfig, mesh, *, shard_slots: bool) -> P:
+    """[L, B, S, Hkv, hd] arena spec.  shard_slots: long-context batch=1 mode
+    (sequence-parallel decode: slots on `data`)."""
+    b_ax = None if shard_slots else batch_axes(mesh)
+    s_ax = "data" if shard_slots else None
+    if kv_head_axis(cfg, mesh) == "heads":
+        return P(None, b_ax, s_ax, "model", None)
+    return P(None, b_ax, s_ax, None, "model")
+
+
+def cache_meta_spec(mesh, *, shard_slots: bool) -> P:
+    """[L, B, S] pos/score arrays."""
+    b_ax = None if shard_slots else batch_axes(mesh)
+    return P(None, b_ax, "data" if shard_slots else None)
+
+
+def ssm_state_spec(cfg: ModelConfig, mesh, *, shard_batch: bool) -> P:
+    """[L, B, H, P, N]: SSM heads shard on model (H always divides)."""
+    b_ax = batch_axes(mesh) if shard_batch else None
+    h_ax = "model" if cfg.ssm_heads % model_size(mesh) == 0 else None
+    return P(None, b_ax, h_ax, None, None)
+
+
+def conv_state_spec(cfg: ModelConfig, mesh, *, shard_batch: bool) -> P:
+    """[L, B, W-1, C]: channels shard on model."""
+    b_ax = batch_axes(mesh) if shard_batch else None
+    return P(None, b_ax, None, "model")

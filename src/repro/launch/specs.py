@@ -1,0 +1,244 @@
+"""Abstract input specs + step builders for the multi-pod dry-run.
+
+Everything here is ShapeDtypeStruct-based — no device allocation.  Each of
+the four assigned input shapes lowers the step its kind dictates:
+
+  train_4k     -> train_step   (fwd + bwd + AdamW)
+  prefill_32k  -> prefill      (full KV + cosine sims + H2O stats out)
+  decode_32k   -> serve_step   (1 new token against a seq_len KV arena)
+  long_500k    -> serve_step   (batch=1; arena slots sharded on `data` —
+                                sequence-parallel decode)
+
+KV modes: "full" (paper's Full Cache baseline: arena == seq_len per layer)
+and "squeeze" (Algorithm-1 allocation at b_init=40% of context, p=0.35,
+60% of layers squeezed — the paper's typical operating point).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.allocation import BudgetPlan, allocate, uniform_plan
+from repro.core.cache import SlotCache
+from repro.core.policies import PolicyConfig
+from repro.launch import sharding as shard_lib
+from repro.launch.mesh import batch_axes
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_params, n_attn_layers
+from repro.serving.decode import DecodeState, serve_step
+from repro.serving.prefill import prefill
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_step import TrainBatch, train_step
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def abstract_params(cfg: ModelConfig, mesh):
+    """Sharded ShapeDtypeStruct pytree of the model parameters."""
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    shardings = shard_lib.param_shardings(cfg, mesh, shapes)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def abstract_opt_state(cfg: ModelConfig, mesh, params_abs):
+    shapes = jax.eval_shape(init_opt_state, params_abs)
+    shardings = shard_lib.opt_shardings(cfg, mesh, shapes)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+# --------------------------------------------------------------------- train
+def train_inputs(cfg: ModelConfig, case: ShapeCase, mesh):
+    B, S = case.global_batch, case.seq_len
+    bspec = P(batch_axes(mesh), None)
+    if cfg.frontend:   # vlm/audio: precomputed frontend embeddings (stub)
+        tokens = None
+        embeds = _sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype), mesh,
+                      P(batch_axes(mesh), None, None))
+    else:
+        tokens = _sds((B, S), jnp.int32, mesh, bspec)
+        embeds = None
+    positions = None
+    if cfg.mrope_sections is not None:
+        positions = _sds((B, S, 3), jnp.int32, mesh,
+                         P(batch_axes(mesh), None, None))
+    batch = TrainBatch(
+        tokens=tokens,
+        targets=_sds((B, S), jnp.int32, mesh, bspec),
+        valid=None, embeds=embeds, positions=positions)
+    return batch
+
+
+def build_train_fn(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
+                   microbatches: int = 4):
+    """microbatches=4 is the production default: peak activation memory
+    scales with the microbatch while the HBM roofline terms are unchanged
+    (§Perf A7)."""
+    ocfg = opt_cfg or AdamWConfig()
+
+    def fn(params, opt_state, batch):
+        return train_step(params, opt_state, batch, cfg, ocfg,
+                          microbatches=microbatches)
+
+    return fn
+
+
+# -------------------------------------------------------------------- prefill
+def prefill_inputs(cfg: ModelConfig, case: ShapeCase, mesh):
+    B, S = case.global_batch, case.seq_len
+    bspec = P(batch_axes(mesh), None)
+    if cfg.frontend:
+        tokens, embeds = None, _sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype),
+                                    mesh, P(batch_axes(mesh), None, None))
+    else:
+        tokens, embeds = _sds((B, S), jnp.int32, mesh, bspec), None
+    positions = None
+    if cfg.mrope_sections is not None:
+        positions = _sds((B, S, 3), jnp.int32, mesh,
+                         P(batch_axes(mesh), None, None))
+    return tokens, embeds, positions
+
+
+def build_prefill_fn(cfg: ModelConfig, mesh):
+    kv_spec = shard_lib.cache_spec(cfg, mesh, shard_slots=False)
+
+    def fn(params, tokens, embeds, positions):
+        out = prefill(params, cfg, tokens=tokens, embeds=embeds,
+                      positions=positions)
+        if out.k is not None:
+            k = jax.lax.with_sharding_constraint(out.k, NamedSharding(mesh, kv_spec))
+            v = jax.lax.with_sharding_constraint(out.v, NamedSharding(mesh, kv_spec))
+            out = out._replace(k=k, v=v)
+        return out
+
+    return fn
+
+
+# --------------------------------------------------------------------- decode
+def dryrun_plan(cfg: ModelConfig, seq_len: int, kv_mode: str) -> BudgetPlan:
+    """Deterministic stand-in for the runtime KMeans outcome (dry-run only).
+
+    full:    arena == seq_len everywhere (Full Cache baseline).
+    squeeze: b_init = 40% of context, p = 0.35, G3 = 60% of layers (the
+             paper's reported typical split) — alternating membership so the
+             tier scan interleaves like a real clustering."""
+    n_attn = max(n_attn_layers(cfg), 1)
+    if kv_mode == "full":
+        return uniform_plan(n_attn, seq_len)
+    # Deterministic two-tier plan matching the paper's typical outcome
+    # (b_init = 40% of context, p = 0.35, 60% of layers squeezed, budgets
+    # bucket-quantized to 128 so every slots axis shards on data=16).
+    b_init = int(0.4 * seq_len)
+    p = 0.35
+    bucket = 128
+    n_small = min(max(int(0.6 * n_attn), 1), n_attn - 1) if n_attn > 1 else 0
+    if n_small == 0:
+        return uniform_plan(n_attn, (b_init // bucket) * bucket)
+    n_big = n_attn - n_small
+    b_small = max(bucket, int(b_init * p) // bucket * bucket)
+    freed = n_attn * b_init - n_small * b_small
+    b_big = max(bucket, int(freed / n_big) // bucket * bucket)
+    # interleave tiers like a real clustering (first/last layers important)
+    is_small = [False] * n_attn
+    small_ix = np.unique(np.linspace(
+        max(n_attn // 3, 1), n_attn - 2, n_small).astype(int))
+    extra = iter([i for i in range(1, n_attn - 1)
+                  if i not in set(small_ix)])
+    picked = set(small_ix)
+    while len(picked) < n_small:
+        picked.add(next(extra))
+    for i in picked:
+        is_small[i] = True
+    return BudgetPlan(
+        n_layers=n_attn, b_init=b_init, p=p,
+        group=tuple(2 if s else 1 for s in is_small),
+        is_small=tuple(is_small), b_small=b_small, b_big=b_big,
+        centers=(0.3, 0.6, 0.95))
+
+
+def decode_state_specs(cfg: ModelConfig, case: ShapeCase, mesh,
+                       plan: BudgetPlan):
+    """Abstract DecodeState for a given budget plan."""
+    from repro.serving.decode import make_tier_indices
+
+    B = case.global_batch
+    shard_slots = B == 1 and not cfg.is_ssm_only
+    b_ax = batch_axes(mesh)
+    cspec = shard_lib.cache_spec(cfg, mesh, shard_slots=shard_slots)
+    mspec = shard_lib.cache_meta_spec(mesh, shard_slots=shard_slots)
+
+    def tier(n_layers, slots):
+        n_layers, slots = max(n_layers, 1), max(slots, 16)
+        if n_layers == 0:
+            n_layers, slots = 1, 16
+        kd = jnp.dtype(cfg.dtype)
+        return SlotCache(
+            k=_sds((n_layers, B, slots, cfg.n_kv_heads, cfg.hd), kd, mesh, cspec),
+            v=_sds((n_layers, B, slots, cfg.n_kv_heads, cfg.hd), kd, mesh, cspec),
+            pos=_sds((n_layers, B, slots), jnp.int32, mesh, mspec),
+            score=_sds((n_layers, B, slots), jnp.float32, mesh, mspec),
+        )
+
+    if cfg.is_ssm_only:
+        big = small = ()
+        gis, tix = (), ()
+    else:
+        big = tier(plan.n_big, plan.b_big)
+        small = tier(plan.n_small, plan.b_small) if plan.n_small else tier(1, 16)
+        gis_c, tix_c = make_tier_indices(plan.is_small)
+        rep = P(None)
+        gis = _sds(gis_c.shape, jnp.int32, mesh, rep)
+        tix = _sds(tix_c.shape, jnp.int32, mesh, rep)
+
+    if cfg.is_ssm_only or cfg.is_hybrid:
+        n_ssm = cfg.n_layers
+        sspec = shard_lib.ssm_state_spec(cfg, mesh, shard_batch=B > 1)
+        cvspec = shard_lib.conv_state_spec(cfg, mesh, shard_batch=B > 1)
+        ssm = _sds((n_ssm, B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                   jnp.float32, mesh, sspec)
+        conv = _sds((n_ssm, B, cfg.ssm_conv_width - 1,
+                     cfg.d_inner + 2 * cfg.ssm_state), jnp.dtype(cfg.dtype),
+                    mesh, cvspec)
+    else:
+        ssm = conv = ()
+
+    t = _sds((B,), jnp.int32, mesh, P(b_ax) if B > 1 else P(None))
+    token = _sds((B,), jnp.int32, mesh, P(b_ax) if B > 1 else P(None))
+    state = DecodeState(big, small, gis, tix, ssm, conv, t)
+    return state, token
+
+
+def build_serve_fn(cfg: ModelConfig, pol: Optional[PolicyConfig] = None):
+    pol = pol or PolicyConfig()
+
+    def fn(params, state, token):
+        return serve_step(params, cfg, pol, state, token)
+
+    return fn

@@ -1,0 +1,102 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+        --steps 200 --seq 256 --batch 8 --ckpt-dir /tmp/ckpt
+
+On the production mesh this is the same code path the dry-run lowers
+(train_step + sharded params); on this CPU container use --reduced (or
+--preset 100m) sizes.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config, get_reduced
+from repro.data import DataConfig, batches
+from repro.models import init_params
+from repro.training import (AdamWConfig, TrainBatch, init_opt_state,
+                            train_step)
+
+
+def preset_100m(arch: str):
+    """~100M-param member of the arch's family (example end-to-end driver):
+    12 layers x d_model 768 x d_ff 3072 + 8k vocab ~= 125M params dense."""
+    cfg = get_reduced(arch)
+    return dataclasses.replace(
+        cfg, name=f"{arch}-100m", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=max(12 // max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1), 1),
+        head_dim=64, d_ff=3072 if cfg.d_ff else 0,
+        vocab_size=8192,
+        moe_d_ff=768 if cfg.is_moe else 0,
+        n_experts=8 if cfg.is_moe else 0,
+        experts_per_tok=2 if cfg.is_moe else 0,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--preset", default=None, choices=[None, "100m"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.preset == "100m":
+        cfg = preset_100m(args.arch)
+    elif args.reduced:
+        cfg = get_reduced(args.arch)
+    else:
+        cfg = get_config(args.arch)
+    print(f"arch={cfg.name} params={cfg.n_params()/1e6:.1f}M "
+          f"active={cfg.n_active_params()/1e6:.1f}M")
+
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    opt = init_opt_state(params)
+    ocfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                       total_steps=args.steps)
+    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                      vocab_size=cfg.vocab_size, seed=args.seed)
+
+    start = 0
+    if args.ckpt_dir and (s := ckpt.latest_step(args.ckpt_dir)) is not None:
+        state = ckpt.restore(args.ckpt_dir, s, {"params": params, "opt": opt})
+        params, opt, start = state["params"], state["opt"], s
+        print(f"resumed from step {s}")
+
+    step_fn = jax.jit(lambda p, o, b: train_step(p, o, b, cfg, ocfg))
+    it = batches(dcfg)
+    for _ in range(start):     # deterministic data stream: skip to position
+        next(it)
+    t0 = time.perf_counter()
+    for i in range(start, args.steps):
+        batch = next(it)
+        params, opt, m = step_fn(params, opt, batch)
+        if (i + 1) % args.log_every == 0 or i == start:
+            dt = time.perf_counter() - t0
+            tps = (i + 1 - start) * args.batch * args.seq / max(dt, 1e-9)
+            print(f"step {i+1:5d} loss={float(m['loss']):.4f} "
+                  f"nll={float(m['nll']):.4f} gnorm={float(m['grad_norm']):.3f} "
+                  f"lr={float(m['lr']):.2e} tok/s={tps:,.0f}", flush=True)
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, i + 1, {"params": params, "opt": opt})
+            ckpt.prune(args.ckpt_dir, keep=2)
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, {"params": params, "opt": opt})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    ForwardOut,
+    forward,
+    init_params,
+    layer_windows,
+    n_attn_layers,
+)
+
+__all__ = [
+    "ModelConfig", "ForwardOut", "forward", "init_params",
+    "layer_windows", "n_attn_layers",
+]

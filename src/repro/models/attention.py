@@ -1,0 +1,250 @@
+"""GQA attention: full (train/prefill) and budgeted-cache decode paths.
+
+Variants covered (all static config):
+  * grouped-query attention with arbitrary q/kv head ratio
+  * RoPE / M-RoPE (positions are explicit so cache eviction never perturbs them)
+  * qk RMS-norm (qwen3), attention-logit tanh softcap (gemma2)
+  * per-layer sliding windows (mistral/mixtral SWA, gemma2 local/global) — the
+    window width is *data* (a scanned scalar), so one scan body serves
+    alternating-layout models.
+
+The decode path attends over a *slot cache*: a fixed [B, S_slots, Hkv, D]
+arena whose slots carry their original token positions (`slot_pos`, -1 =
+empty).  It returns per-slot attention mass so H2O can accumulate scores
+without a second pass.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rope as rope_lib
+from repro.models.norms import rms_head_norm
+from repro.models.shard_hints import hint
+
+GLOBAL_WINDOW = 1 << 30  # "no window" sentinel (fits int32)
+
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray   # [d, H*hd]
+    wk: jnp.ndarray   # [d, Hkv*hd]
+    wv: jnp.ndarray   # [d, Hkv*hd]
+    wo: jnp.ndarray   # [H*hd, d]
+    q_norm: jnp.ndarray  # [hd] (ones when unused)
+    k_norm: jnp.ndarray  # [hd]
+
+
+def init_attn(key, cfg) -> AttnParams:
+    pd = jnp.dtype(cfg.param_dtype)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(qd)
+    return AttnParams(
+        wq=(jax.random.normal(k1, (d, qd), jnp.float32) * s).astype(pd),
+        wk=(jax.random.normal(k2, (d, kvd), jnp.float32) * s).astype(pd),
+        wv=(jax.random.normal(k3, (d, kvd), jnp.float32) * s).astype(pd),
+        wo=(jax.random.normal(k4, (qd, d), jnp.float32) * so).astype(pd),
+        q_norm=jnp.ones((cfg.hd,), pd),
+        k_norm=jnp.ones((cfg.hd,), pd),
+    )
+
+
+def _project_qkv(p: AttnParams, x, positions, cfg):
+    """x: [B,S,d] -> q [B,S,H,hd], k/v [B,S,Hkv,hd] (RoPE applied)."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    # reshapes that split the (heads*hd) projection dim lose the model-axis
+    # sharding (XLA "involuntary full rematerialization" -> replicated
+    # attention compute); re-pin heads to the model axis (§Perf A4/B1)
+    q = hint((x @ p.wq).reshape(B, S, cfg.n_heads, hd),
+             {0: "batch", 2: "model"})
+    k = hint((x @ p.wk).reshape(B, S, cfg.n_kv_heads, hd),
+             {0: "batch", 2: "model"})
+    v = hint((x @ p.wv).reshape(B, S, cfg.n_kv_heads, hd),
+             {0: "batch", 2: "model"})
+    if cfg.use_qk_norm:
+        q = rms_head_norm(p.q_norm, q, cfg.norm_eps)
+        k = rms_head_norm(p.k_norm, k, cfg.norm_eps)
+    if cfg.mrope_sections is not None:
+        pos3 = positions if positions.ndim == 3 else jnp.repeat(positions[..., None], 3, -1)
+        q = rope_lib.apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = rope_lib.apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        pos1 = positions if positions.ndim == 2 else positions[..., 0]
+        q = rope_lib.apply_rope(q, pos1, cfg.rope_theta)
+        k = rope_lib.apply_rope(k, pos1, cfg.rope_theta)
+    return q, k, v
+
+
+def _softcap(x, cap):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+FLASH_THRESHOLD = 1024   # above this seq len, use the blockwise flash path
+FLASH_BLOCK = 1024
+
+
+def full_attention(
+    p: AttnParams,
+    x: jnp.ndarray,                 # [B, S, d]
+    positions: jnp.ndarray,         # [B, S] or [B, S, 3]
+    cfg,
+    window: jnp.ndarray | int = GLOBAL_WINDOW,  # scalar, data not shape
+    valid: Optional[jnp.ndarray] = None,        # [B, S] bool (padding mask)
+    return_colsums: bool = False,   # H2O: per-key total attention mass
+):
+    """Causal (+sliding window) attention.
+
+    Returns (out [B,S,d], k, v, colsums [B,Hkv,S] | None).
+    Long sequences take a blockwise online-softmax (flash) path so peak
+    activation memory is O(S * block) instead of O(S^2).
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, positions, cfg)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qf = q.reshape(B, S, cfg.n_kv_heads, G, cfg.hd).astype(jnp.float32)
+    pos1 = positions if positions.ndim == 2 else positions[..., 0]
+
+    if S > FLASH_THRESHOLD and S % FLASH_BLOCK == 0:
+        out, colsums = _flash_attention(qf, k, v, pos1, cfg, window, valid,
+                                        return_colsums)
+    else:
+        out, colsums = _naive_attention(qf, k, v, pos1, cfg, window, valid,
+                                        return_colsums)
+    out = out.reshape(B, S, cfg.q_dim).astype(x.dtype)
+    return out @ p.wo, k, v, colsums
+
+
+def _mask(pos_q, pos_k, window, valid_k):
+    """pos_q [B,Sq], pos_k [B,Sk] -> bool [B,1,Sq,1,Sk]."""
+    qp = pos_q[:, None, :, None, None]
+    kp = pos_k[:, None, None, None, :]
+    m = (kp <= qp) & (kp > qp - window)
+    if valid_k is not None:
+        m &= valid_k[:, None, None, None, :]
+    return m
+
+
+def _naive_attention(qf, k, v, pos1, cfg, window, valid, return_colsums):
+    scores = jnp.einsum("bsngd,btnd->bnsgt", qf, k.astype(jnp.float32))
+    scores = scores * (1.0 / math.sqrt(cfg.hd))
+    scores = _softcap(scores, cfg.attn_softcap)
+    mask = _mask(pos1, pos1, window, valid)   # [B,1,Sq,1,Sk] broadcasts
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    colsums = probs.sum(axis=(2, 3)) if return_colsums else None  # [B,n,Sk]
+    out = jnp.einsum("bnsgt,btnd->bsngd", probs, v.astype(jnp.float32))
+    return out, colsums
+
+
+def _flash_attention(qf, k, v, pos1, cfg, window, valid, return_colsums,
+                     block: int = FLASH_BLOCK):
+    """Online-softmax over key blocks (lax.scan).  Peak extra memory is
+    O(B * heads * S * block) fp32 — the pure-JAX analogue of the Pallas
+    swa_prefill kernel (kernels/swa_prefill.py is the TPU version)."""
+    B, S, n, G, hd = qf.shape
+    nb = S // block
+    scale = 1.0 / math.sqrt(hd)
+    kb = k.astype(jnp.float32).reshape(B, nb, block, n, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.astype(jnp.float32).reshape(B, nb, block, n, hd).transpose(1, 0, 2, 3, 4)
+    pb = pos1.reshape(B, nb, block).transpose(1, 0, 2)
+    valb = (valid.reshape(B, nb, block).transpose(1, 0, 2)
+            if valid is not None else jnp.ones((nb, B, block), bool))
+
+    def scores_fn(k_blk, p_blk, v_blk_valid):
+        s = jnp.einsum("bsngd,btnd->bnsgt", qf, k_blk) * scale
+        s = _softcap(s, cfg.attn_softcap)
+        m = _mask(pos1, p_blk, window, v_blk_valid)
+        return jnp.where(m, s, -1e30)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        k_blk, v_blk, p_blk, val_blk = blk
+        s = scores_fn(k_blk, p_blk, val_blk)                  # [B,n,S,G,block]
+        m_new = jnp.maximum(m, s.max(-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum("bnsgt,btnd->bnsgd", p, v_blk)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, n, S, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, n, S, G), jnp.float32)
+    a0 = jnp.zeros((B, n, S, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb, valb))
+    lsafe = jnp.where(l > 0, l, 1.0)
+    out = (acc / lsafe[..., None]).transpose(0, 2, 1, 3, 4)   # [B,S,n,G,hd]
+
+    colsums = None
+    if return_colsums:
+        inv = (1.0 / lsafe)[..., None]                         # [B,n,S,G,1]
+
+        def col_step(_, blk):
+            k_blk, p_blk, val_blk = blk
+            s = scores_fn(k_blk, p_blk, val_blk)
+            p = jnp.exp(s - m[..., None]) * inv
+            return None, p.sum(axis=(2, 3))                    # [B,n,block]
+
+        _, cols = jax.lax.scan(col_step, None, (kb, pb, valb))
+        colsums = cols.transpose(1, 2, 0, 3).reshape(B, n, S)
+    return out, colsums
+
+
+class DecodeAttnOut(NamedTuple):
+    out: jnp.ndarray          # [B, 1, d]
+    slot_probs: jnp.ndarray   # [B, Hkv, S_slots+1] attention mass (mean over q-group)
+    k_new: jnp.ndarray        # [B, 1, Hkv, hd] (RoPE'd)
+    v_new: jnp.ndarray
+
+
+def decode_attention(
+    p: AttnParams,
+    x: jnp.ndarray,            # [B, 1, d] current token's hidden state
+    t: jnp.ndarray,            # [B] logical position of the current token
+    cache_k: jnp.ndarray,      # [B, S_slots, Hkv, hd] (already RoPE'd at write)
+    cache_v: jnp.ndarray,
+    slot_pos: jnp.ndarray,     # [B, S_slots] original positions, -1 = empty
+    cfg,
+    window: jnp.ndarray | int = GLOBAL_WINDOW,
+) -> DecodeAttnOut:
+    """One-token attention over the compressed cache + the current token.
+
+    The new token's KV is attended in-place (appended logically as slot S);
+    the caller decides which physical slot it overwrites afterwards.
+    """
+    B, S = slot_pos.shape
+    pos = t[:, None] if t.ndim == 1 else t          # [B,1] (or [B,1,3] mrope)
+    q, k_new, v_new = _project_qkv(p, x, pos, cfg)
+    G = cfg.n_heads // cfg.n_kv_heads
+    qf = q.reshape(B, cfg.n_kv_heads, G, cfg.hd).astype(jnp.float32)
+    t1 = (t if t.ndim == 1 else t[..., 0]).reshape(B)
+
+    # The arena is read exactly once for K and once for V, in its own bf16
+    # dtype (an `astype(f32)` here materializes an f32 copy of the WHOLE
+    # arena per layer — 3x the decode HBM traffic, §Perf D3); accumulation
+    # happens in f32 via preferred_element_type, matching the MXU.  Only the
+    # SCORES (S+1 scalars/head) are concatenated with the new token's — a
+    # cache-sized concatenate would copy the arena again (§Perf D2).
+    scale = 1.0 / math.sqrt(cfg.hd)
+    qc = qf.astype(cache_k.dtype)
+    s_cache = jnp.einsum("bngd,btnd->bngt", qc, cache_k,
+                         preferred_element_type=jnp.float32) * scale
+    s_new = jnp.einsum("bngd,btnd->bngt", qf,
+                       k_new.astype(jnp.float32)) * scale       # [B,n,G,1]
+    scores = _softcap(jnp.concatenate([s_cache, s_new], -1), cfg.attn_softcap)
+    mask_cache = (slot_pos >= 0) & (slot_pos <= t1[:, None]) \
+        & (slot_pos > t1[:, None] - window)
+    mask = jnp.concatenate(
+        [mask_cache, jnp.ones((B, 1), bool)], axis=1)           # [B,S+1]
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)                     # [B,n,G,S+1]
+    out = jnp.einsum("bngt,btnd->bngd",
+                     probs[..., :S].astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32) \
+        + probs[..., S:] * v_new[:, 0, :, None, :].astype(jnp.float32)
+    out = out.reshape(B, 1, cfg.q_dim).astype(x.dtype) @ p.wo
+    return DecodeAttnOut(out, probs.mean(axis=2), k_new, v_new)

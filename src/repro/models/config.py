@@ -1,0 +1,161 @@
+"""Unified model configuration covering every assigned architecture family.
+
+One frozen dataclass describes dense / MoE / SSM / hybrid / VLM / audio decoder
+stacks.  Every field that changes the *computation graph* is static config; every
+quantity that merely changes values (e.g. sliding-window width per layer) can be
+threaded through `lax.scan` as data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                   # 0 -> d_model // n_heads
+    # embed/unembed allocate this width (>= vocab_size); pad columns are
+    # masked to -inf in the logits.  Lets a non-divisible vocabulary (e.g.
+    # mamba2's 50280) shard on the 16-way model axis (§Perf C1).
+    padded_vocab: int = 0
+
+    # ---- attention variants -------------------------------------------------
+    rope_theta: float = 10_000.0
+    use_qk_norm: bool = False           # qwen3: RMSNorm on q and k heads
+    attn_softcap: Optional[float] = None    # gemma2: tanh softcap on attn logits (50.)
+    final_softcap: Optional[float] = None   # gemma2: tanh softcap on lm logits (30.)
+    sliding_window: Optional[int] = None    # SWA width (mistral/mixtral: 4096)
+    # layer window pattern: None -> all global; 'local_global' -> alternate
+    # (even layers local with `sliding_window`, odd layers global), gemma2-style.
+    window_pattern: Optional[str] = None
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl M-RoPE (t,h,w)
+
+    # ---- norm / mlp ----------------------------------------------------------
+    norm_type: str = "rmsnorm"          # rmsnorm | layernorm | nonparametric_ln
+    norm_eps: float = 1e-6
+    mlp_type: str = "swiglu"            # swiglu | gelu
+    use_post_norms: bool = False        # gemma2: post-attn + post-ffw RMSNorms
+
+    # ---- MoE -----------------------------------------------------------------
+    n_experts: int = 0
+    experts_per_tok: int = 0
+    moe_d_ff: int = 0                   # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # ---- SSM (Mamba2 / SSD) ---------------------------------------------------
+    ssm_state: int = 0                  # N (state size per head)
+    ssm_expand: int = 2                 # d_inner = expand * d_model
+    ssm_head_dim: int = 64              # P
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128                # SSD chunk length
+    # hybrid (zamba2): one shared attention block applied every `attn_period`
+    # mamba blocks (block-shared weights, zamba2-style).
+    attn_period: int = 0                # 0 -> not hybrid
+
+    # ---- modality frontend (stubbed per spec) --------------------------------
+    frontend: Optional[str] = None      # None | 'vision_stub' | 'audio_stub'
+    frontend_tokens: int = 0            # patch/frame embeddings prepended (spec only)
+
+    # ---- numerics -------------------------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+
+    # -------------------------------------------------------------------------
+    @property
+    def v_padded(self) -> int:
+        return max(self.padded_vocab, self.vocab_size)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.hd
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.hd
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_ssm_only(self) -> bool:
+        return self.arch_type == "ssm"
+
+    @property
+    def is_hybrid(self) -> bool:
+        return self.attn_period > 0
+
+    @property
+    def has_attention(self) -> bool:
+        return not self.is_ssm_only
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def layer_window(self, layer_idx: int) -> Optional[int]:
+        """Static per-layer sliding-window width (None = global)."""
+        if self.window_pattern == "local_global":
+            return self.sliding_window if layer_idx % 2 == 0 else None
+        return self.sliding_window
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embedding + blocks + head)."""
+        d, hd = self.d_model, self.hd
+        p = self.vocab_size * d * 2  # embed + unembed (untied)
+        if self.is_ssm_only or self.is_hybrid:
+            di, N, H = self.d_inner, self.ssm_state, self.ssm_heads
+            per_m = d * (2 * di + 2 * N * 0 + H * 0) + di * d  # in/out proj approx
+            per_m += d * (2 * N * 1)  # B,C proj (approx, grouped)
+            n_m = self.n_layers
+            p += n_m * per_m
+            if self.is_hybrid:
+                attn = d * (self.q_dim + 2 * self.kv_dim) + self.q_dim * d
+                mlp = 3 * d * self.d_ff
+                p += attn + mlp  # shared block counted once
+            return p
+        attn = d * (self.q_dim + 2 * self.kv_dim) + self.q_dim * d
+        if self.is_moe:
+            mlp = self.n_experts * 3 * d * self.moe_d_ff + d * self.n_experts
+        else:
+            k = 3 if self.mlp_type == "swiglu" else 2
+            mlp = k * d * self.d_ff
+        p += self.n_layers * (attn + mlp)
+        return p
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if not self.is_moe:
+            return self.n_params()
+        d = self.d_model
+        attn = d * (self.q_dim + 2 * self.kv_dim) + self.q_dim * d
+        mlp = self.experts_per_tok * 3 * d * self.moe_d_ff + d * self.n_experts
+        return self.vocab_size * d * 2 + self.n_layers * (attn + mlp)
+
+    def validate(self) -> None:
+        assert self.hd * self.n_heads == self.q_dim
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0 or not self.has_attention
+        if self.is_moe:
+            assert 0 < self.experts_per_tok <= self.n_experts
+        if self.is_ssm_only or self.is_hybrid:
+            assert self.ssm_state > 0
+            assert self.d_inner % self.ssm_head_dim == 0
+        if self.mrope_sections is not None:
+            assert sum(self.mrope_sections) == self.hd // 2

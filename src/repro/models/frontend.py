@@ -1,0 +1,51 @@
+"""Modality frontends — STUBS by assignment.
+
+The [vlm] and [audio] architectures specify the transformer *backbone* only;
+the vision encoder (ViT/SigLIP + projector) and audio codec (mel + conv /
+EnCodec) are out of scope.  These helpers produce the precomputed patch/frame
+embeddings of the right shape (and, for Qwen2-VL, the 3-D M-RoPE position
+ids) that the real frontends would emit, so the decoder stack and the serving
+engine exercise the exact interfaces a full system would.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vision_stub_embeds(key, batch: int, n_patches: int, cfg, grid_hw=None):
+    """[B, n_patches, d] patch embeddings + [B, n_patches, 3] M-RoPE ids.
+
+    Position ids follow Qwen2-VL's scheme: temporal id constant per image,
+    height/width ids laid out over the patch grid.
+    """
+    d = cfg.d_model
+    embeds = jax.random.normal(key, (batch, n_patches, d), jnp.float32) * 0.02
+    if grid_hw is None:
+        side = max(int(n_patches ** 0.5), 1)
+        grid_hw = (side, max(n_patches // side, 1))
+    h, w = grid_hw
+    hw = h * w
+    ids_h = jnp.repeat(jnp.arange(h), w)[:n_patches]
+    ids_w = jnp.tile(jnp.arange(w), h)[:n_patches]
+    pad = n_patches - min(hw, n_patches)
+    if pad > 0:
+        ids_h = jnp.concatenate([ids_h, jnp.zeros((pad,), ids_h.dtype)])
+        ids_w = jnp.concatenate([ids_w, jnp.zeros((pad,), ids_w.dtype)])
+    t = jnp.zeros((n_patches,), jnp.int32)
+    pos3 = jnp.stack([t, ids_h.astype(jnp.int32), ids_w.astype(jnp.int32)], axis=-1)
+    pos3 = jnp.broadcast_to(pos3[None], (batch, n_patches, 3))
+    return embeds.astype(jnp.dtype(cfg.dtype)), pos3
+
+
+def audio_stub_embeds(key, batch: int, n_frames: int, cfg):
+    """[B, n_frames, d] EnCodec-style frame embeddings (musicgen decoder input)."""
+    d = cfg.d_model
+    e = jax.random.normal(key, (batch, n_frames, d), jnp.float32) * 0.02
+    return e.astype(jnp.dtype(cfg.dtype))
+
+
+def mixed_positions(batch: int, n_frontend: int, n_text: int):
+    """Concatenated [frontend tokens | text tokens] 1-D positions."""
+    pos = jnp.arange(n_frontend + n_text, dtype=jnp.int32)
+    return jnp.broadcast_to(pos[None], (batch, n_frontend + n_text))

@@ -1,0 +1,37 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (musicgen-style)."""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MlpParams(NamedTuple):
+    w_gate: jnp.ndarray  # [d, f]  (unused/zeros for gelu)
+    w_up: jnp.ndarray    # [d, f]
+    w_down: jnp.ndarray  # [f, d]
+
+
+def init_mlp(key, cfg) -> MlpParams:
+    pd = jnp.dtype(cfg.param_dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s, so = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    gate = (jax.random.normal(k1, (d, f), jnp.float32) * s).astype(pd)
+    if cfg.mlp_type == "gelu":
+        gate = jnp.zeros((d, f), pd)  # keeps pytree uniform across archs
+    return MlpParams(
+        w_gate=gate,
+        w_up=(jax.random.normal(k2, (d, f), jnp.float32) * s).astype(pd),
+        w_down=(jax.random.normal(k3, (f, d), jnp.float32) * so).astype(pd),
+    )
+
+
+def apply_mlp(p: MlpParams, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    if cfg.mlp_type == "swiglu":
+        return (jax.nn.silu(x @ p.w_gate) * (x @ p.w_up)) @ p.w_down
+    if cfg.mlp_type == "gelu":
+        return jax.nn.gelu(x @ p.w_up) @ p.w_down
+    raise ValueError(cfg.mlp_type)

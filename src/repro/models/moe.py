@@ -1,0 +1,179 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based dispatch/combine.
+
+GShard/Switch-style einsum dispatch: exact top-k routing with a per-expert
+capacity so the computation is static-shaped and shards cleanly on a TPU mesh
+(experts on the `model` axis).  FLOPs scale with `experts_per_tok *
+capacity_factor`, i.e. with *active* — not total — parameters, which keeps the
+roofline's MODEL_FLOPS/HLO_FLOPs ratio honest.
+
+Covers mixtral-8x22b (8e top-2), qwen3-moe (128e top-8) and
+moonshot-v1 (64e top-6).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.shard_hints import hint
+
+
+class MoeParams(NamedTuple):
+    w_router: jnp.ndarray  # [d, E]
+    w_gate: jnp.ndarray    # [E, d, f]
+    w_up: jnp.ndarray      # [E, d, f]
+    w_down: jnp.ndarray    # [E, f, d]
+
+
+def init_moe(key, cfg) -> MoeParams:
+    pd = jnp.dtype(cfg.param_dtype)
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    s, so = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    return MoeParams(
+        w_router=(jax.random.normal(kr, (d, E), jnp.float32) * s).astype(jnp.float32),
+        w_gate=(jax.random.normal(k1, (E, d, f), jnp.float32) * s).astype(pd),
+        w_up=(jax.random.normal(k2, (E, d, f), jnp.float32) * s).astype(pd),
+        w_down=(jax.random.normal(k3, (E, f, d), jnp.float32) * so).astype(pd),
+    )
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    c = int(math.ceil(cfg.experts_per_tok * n_tokens * cfg.capacity_factor / cfg.n_experts))
+    return max(c, 1)
+
+
+def _route(p: MoeParams, xt, cfg):
+    """Router: returns (gate_vals [T,K], gate_idx [T,K], aux scalar)."""
+    E, K = cfg.n_experts, cfg.experts_per_tok
+    logits = xt.astype(jnp.float32) @ p.w_router                  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                 # [T, K]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux (Switch): E * sum_e f_e * P_e — top-1 fractions via
+    # bincount (no [T,E] one-hot materialized)
+    top1 = jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32)
+    aux = cfg.router_aux_weight * E * jnp.sum(
+        top1.mean(axis=0) * probs.mean(axis=0))
+    return gate_vals, gate_idx, aux
+
+
+def _expert_ffn(p: MoeParams, xin, cfg):
+    """[E, C, d] -> [E, C, d] SwiGLU per expert (the real MoE FLOPs)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p.w_gate)) \
+        * jnp.einsum("ecd,edf->ecf", xin, p.w_up)
+    return jnp.einsum("ecf,efd->ecd", h, p.w_down)
+
+
+@jax.custom_vjp
+def _permute_rows(src, fwd_idx, fwd_valid, inv_idx, inv_valid):
+    """out[i] = src[fwd_idx[i]] if fwd_valid[i] else 0.
+
+    fwd/inv describe a *partial permutation* (each kept row appears exactly
+    once on both sides), so the VJP is the inverse gather — never a scatter.
+    XLA's scatter expander otherwise lowers the d-column scatter (and the
+    gather's transpose) to a sort over [rows, d] u32 key tensors, which
+    dominated the MoE training-step bytes (§Perf A5).
+    """
+    return jnp.where(fwd_valid[:, None], src[fwd_idx], 0)
+
+
+def _permute_rows_fwd(src, fwd_idx, fwd_valid, inv_idx, inv_valid):
+    out = _permute_rows(src, fwd_idx, fwd_valid, inv_idx, inv_valid)
+    return out, (fwd_idx, fwd_valid, inv_idx, inv_valid, src.shape[0])
+
+
+def _permute_rows_bwd(res, g):
+    fwd_idx, fwd_valid, inv_idx, inv_valid, n_src = res
+    dsrc = jnp.where(inv_valid[:, None],
+                     g[jnp.minimum(inv_idx, g.shape[0] - 1)], 0)
+    return dsrc.astype(g.dtype), None, None, None, None
+
+
+_permute_rows.defvjp(_permute_rows_fwd, _permute_rows_bwd)
+
+
+def apply_moe(p: MoeParams, x: jnp.ndarray, cfg):
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar).
+
+    Sort + gather-only dispatch (§Perf iterations A1/A5): assignments are
+    ordered by a stable argsort on expert id; ranks within each expert come
+    from group offsets; tokens move to/from the [E, C] expert layout through
+    `_permute_rows` (pure gathers in both directions via custom_vjp).  Zero
+    matmul FLOPs and O(T*K) bookkeeping — the GShard-style one-hot einsum
+    dispatch (kept as `apply_moe_einsum` for A/B tests) costs O(T*E*C*d) dot
+    FLOPs and dominated the whole training step for 128-expert models
+    (useful-FLOP ratio 0.3% -> 60%, EXPERIMENTS.md §Perf).
+
+    Tokens over a full expert's capacity are dropped (contribute zero), the
+    standard static-shape trade-off; drop priority is token-major (vs the
+    einsum path's k-major) — equivalent when nothing drops.
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.experts_per_tok
+    C = capacity(T, cfg)
+    xt = x.reshape(T, d)
+    gate_vals, gate_idx, aux = _route(p, xt, cfg)
+
+    flat_e = gate_idx.reshape(-1)                                 # [T*K]
+    order = jnp.argsort(flat_e, stable=True)                      # expert-major
+    counts = jnp.bincount(flat_e, length=E)                       # [E]
+    starts = jnp.cumsum(counts) - counts                          # [E]
+    inv = jnp.zeros((T * K,), jnp.int32).at[order].set(
+        jnp.arange(T * K, dtype=jnp.int32))      # position in sorted order
+    rank = inv - starts[flat_e].astype(jnp.int32)                 # rank in group
+    keep = rank < C
+    slot_of_tk = jnp.where(keep, flat_e * C + rank, E * C - 1)    # [T*K]
+
+    # slot -> (t,k) source index (gather table for the dispatch direction)
+    e_of_slot = jnp.arange(E * C, dtype=jnp.int32) // C
+    r_of_slot = jnp.arange(E * C, dtype=jnp.int32) % C
+    pos_sorted = starts[e_of_slot].astype(jnp.int32) + r_of_slot
+    slot_valid = r_of_slot < counts[e_of_slot]
+    tk_of_slot = order[jnp.minimum(pos_sorted, T * K - 1)].astype(jnp.int32)
+
+    src = jnp.repeat(xt[:, None, :], K, axis=1).reshape(T * K, d)
+    src = hint(src, {0: "batch"})
+    xin = _permute_rows(src, tk_of_slot, slot_valid, slot_of_tk, keep)
+    # pin to expert-parallel layout: without this XLA keeps the dispatched
+    # tokens replicated (~E*C*d bytes PER DEVICE, §Perf A3)
+    xin = hint(xin.reshape(E, C, d), {0: "model", 1: "data"})
+
+    eout = _expert_ffn(p, xin, cfg)                               # [E, C, d]
+    eout = hint(eout, {0: "model", 1: "data"})
+    gathered = _permute_rows(eout.reshape(E * C, d), slot_of_tk, keep,
+                             tk_of_slot, slot_valid)
+    gathered = hint(gathered, {0: "batch"})
+    w = (gate_vals.reshape(T * K) * keep).astype(jnp.float32)
+    out = (gathered.astype(jnp.float32) * w[:, None]) \
+        .reshape(T, K, d).sum(axis=1)
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+def apply_moe_einsum(p: MoeParams, x: jnp.ndarray, cfg):
+    """Legacy GShard-style one-hot dispatch (v0 baseline; A/B reference)."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.experts_per_tok
+    C = capacity(T, cfg)
+    xt = x.reshape(T, d)
+    gate_vals, gate_idx, aux = _route(p, xt, cfg)
+
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)       # [T, K, E]
+    flat = onehot.transpose(1, 0, 2).reshape(K * T, E)            # [K*T, E]
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat)
+    pos_in_expert = pos_in_expert.reshape(K, T, E).transpose(1, 0, 2)
+    pos_tok = jnp.einsum("tke,tke->tk", pos_in_expert, onehot)    # [T, K]
+    keep = pos_tok < C
+
+    cap_onehot = jax.nn.one_hot(pos_tok.astype(jnp.int32), C, dtype=jnp.float32)
+    disp = jnp.einsum("tke,tkc->tec", onehot * keep[..., None], cap_onehot)
+    comb = jnp.einsum("tec,tk,tke->tec", disp, gate_vals, onehot)
+
+    xin = jnp.einsum("tec,td->ecd", disp, xt.astype(jnp.float32)).astype(x.dtype)
+    eout = _expert_ffn(p, xin, cfg)
+    out = jnp.einsum("tec,ecd->td", comb, eout.astype(jnp.float32))
+    return out.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,48 @@
+"""Normalisation layers: RMSNorm, LayerNorm, non-parametric LN (OLMo)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def init_norm(cfg, dim: int):
+    """Return the parameter pytree for one norm of width `dim` (or {} if n/a)."""
+    pd = jnp.dtype(cfg.param_dtype)
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((dim,), pd)}
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((dim,), pd), "bias": jnp.zeros((dim,), pd)}
+    if cfg.norm_type == "nonparametric_ln":    # OLMo: no affine params
+        return {}
+    raise ValueError(cfg.norm_type)
+
+
+def apply_norm(params, x, cfg):
+    """Normalise over the last axis in fp32, cast back to x.dtype."""
+    eps = cfg.norm_eps
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        y = xf * _rsqrt_mean_sq(xf, eps)
+        y = y * params["scale"].astype(jnp.float32)
+    elif cfg.norm_type == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    elif cfg.norm_type == "nonparametric_ln":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+    else:
+        raise ValueError(cfg.norm_type)
+    return y.astype(x.dtype)
+
+
+def _rsqrt_mean_sq(xf, eps):
+    return jnp.reciprocal(jnp.sqrt((xf * xf).mean(-1, keepdims=True) + eps))
+
+
+def rms_head_norm(scale, x, eps=1e-6):
+    """qk-norm: RMSNorm applied to the last (head_dim) axis of q/k."""
+    xf = x.astype(jnp.float32)
+    y = xf * _rsqrt_mean_sq(xf, eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)

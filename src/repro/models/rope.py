@@ -1,0 +1,62 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+All functions take explicit integer `positions` so the decode path (one new
+token at logical position `t` against a compressed cache whose slots remember
+their own original positions) stays exact — eviction never perturbs RoPE.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """[head_dim/2] inverse frequencies (fp32)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S] (int32)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                       # [half]
+    ang = positions[..., None].astype(jnp.float32) * freqs       # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                             # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions_3d: jnp.ndarray,
+    theta: float,
+    sections: tuple,
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    x: [..., S, H, D]; positions_3d: [..., S, 3] (temporal, height, width ids).
+    `sections` splits the head_dim/2 frequency bands among the three id streams;
+    for pure-text tokens the three ids are identical, reducing to standard RoPE.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half
+    freqs = rope_freqs(x.shape[-1], theta)                       # [half]
+    # Per-band position id: band j uses positions_3d[..., axis(j)].
+    axis_of_band = jnp.concatenate([
+        jnp.full((sections[0],), 0), jnp.full((sections[1],), 1),
+        jnp.full((sections[2],), 2),
+    ]).astype(jnp.int32)                                          # [half]
+    pos = jnp.take_along_axis(
+        positions_3d.astype(jnp.float32),
+        jnp.broadcast_to(axis_of_band, positions_3d.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )                                                             # [..., S, half]
+    ang = pos * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)

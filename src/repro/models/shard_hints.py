@@ -1,0 +1,56 @@
+"""Mesh-aware sharding hints usable from model code.
+
+Model layers sometimes produce tensors whose sharding XLA's propagation
+loses (reshapes that split a sharded dim, scatters into fresh buffers).
+`hint` re-pins them to the ambient mesh — and is a no-op when no mesh is
+active (CPU tests/engine) or when a dim doesn't divide, so model code stays
+mesh-agnostic.
+
+Roles: "model" (tensor-parallel axis), "batch" (('pod','data') or ('data',)),
+"data" (the fsdp axis alone).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _ambient_mesh():
+    try:
+        import jax._src.mesh as mesh_lib
+        env = mesh_lib.thread_resources.env.physical_mesh
+        if env is not None and env.axis_names:
+            return env
+    except Exception:      # noqa: BLE001
+        pass
+    return None
+
+
+def hint(x, roles: dict):
+    """roles: {dim_index: 'model'|'batch'|'data'}.  Best-effort constraint."""
+    mesh = _ambient_mesh()
+    if mesh is None or x is None:
+        return x
+    names = mesh.axis_names
+    spec = [None] * x.ndim
+    for dim, role in roles.items():
+        size = x.shape[dim]
+        if role == "model" and "model" in names:
+            if size % mesh.shape["model"] == 0:
+                spec[dim] = "model"
+        elif role == "data" and "data" in names:
+            if size % mesh.shape["data"] == 0:
+                spec[dim] = "data"
+        elif role == "batch":
+            axes = tuple(a for a in ("pod", "data") if a in names)
+            total = math.prod(mesh.shape[a] for a in axes) if axes else 0
+            if axes and total and size % total == 0:
+                spec[dim] = axes if len(axes) > 1 else axes[0]
+    if not any(spec):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:      # noqa: BLE001
+        return x

@@ -1,0 +1,175 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Chunked SSD algorithm for train/prefill (sub-quadratic: O(S/L * (L^2 + L*N*P))
+per head) and an O(1)-state recurrent step for decode.  Single B/C group
+shared across heads (Mamba2 default ngroups=1).
+
+State layout for decode: [B, H, P, N] per layer — this *replaces* the KV cache
+for SSM blocks, which is why SqueezeAttention's budget reallocation does not
+apply to them (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SsmParams(NamedTuple):
+    w_in: jnp.ndarray     # [d, 2*di + 2*N + H]  (z, x, B, C, dt)
+    conv_w: jnp.ndarray   # [W, di + 2*N] depthwise causal conv over (x,B,C)
+    conv_b: jnp.ndarray   # [di + 2*N]
+    a_log: jnp.ndarray    # [H]
+    dt_bias: jnp.ndarray  # [H]
+    d_skip: jnp.ndarray   # [H]
+    w_out: jnp.ndarray    # [di, d]
+
+
+def init_ssm(key, cfg) -> SsmParams:
+    pd = jnp.dtype(cfg.param_dtype)
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H, W = cfg.ssm_heads, cfg.ssm_conv_width
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(di)
+    # dt bias so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 init)
+    dt = jnp.exp(jax.random.uniform(k3, (H,), jnp.float32)
+                 * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return SsmParams(
+        w_in=(jax.random.normal(k1, (d, 2 * di + 2 * N + H), jnp.float32) * s).astype(pd),
+        conv_w=(jax.random.normal(k2, (W, di + 2 * N), jnp.float32) * 0.1).astype(pd),
+        conv_b=jnp.zeros((di + 2 * N,), pd),
+        a_log=jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),  # A = -exp(a_log)
+        dt_bias=dt_bias.astype(jnp.float32),
+        d_skip=jnp.ones((H,), jnp.float32),
+        w_out=(jax.random.normal(k4, (di, d), jnp.float32) * so).astype(pd),
+    )
+
+
+def _split_proj(p: SsmParams, x, cfg):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ p.w_in
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N:].astype(jnp.float32)  # [.., H]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv, width W.  xbc: [B,S,C]; conv_state: [B,W-1,C]."""
+    W = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (W - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)                 # [B, S+W-1, C]
+    out = sum(xp[:, i:i + xbc.shape[1], :] * conv_w[i] for i in range(W))
+    out = jax.nn.silu(out + conv_b)
+    new_state = xp[:, -(W - 1):, :]
+    return out, new_state
+
+
+def ssd_chunked(xh, bh, ch, dt, a_log, d_skip, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    xh: [B,S,H,P], bh/ch: [B,S,N], dt: [B,S,H] (post-softplus, fp32),
+    a_log: [H].  Returns y [B,S,H,P] and final state [B,H,P,N].
+    """
+    B, S, H, P = xh.shape
+    N = bh.shape[-1]
+    L = chunk
+    S_orig = S
+    A = -jnp.exp(a_log.astype(jnp.float32))                        # [H]
+    dta = dt * A                                                   # [B,S,H] log-decay
+    xf = xh.astype(jnp.float32) * dt[..., None]                    # dt-weighted input
+    bf = bh.astype(jnp.float32)
+    cf = ch.astype(jnp.float32)
+    pad = (-S) % L
+    if pad:
+        # state-invariant padding: dta=0 (decay 1), xdt=0 (no update)
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bf = jnp.pad(bf, ((0, 0), (0, pad), (0, 0)))
+        cf = jnp.pad(cf, ((0, 0), (0, pad), (0, 0)))
+        dta = jnp.pad(dta, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // L
+
+    xc = xf.reshape(B, nc, L, H, P)
+    bc = bf.reshape(B, nc, L, N)
+    cc = cf.reshape(B, nc, L, N)
+    ac = dta.reshape(B, nc, L, H)
+    cum = jnp.cumsum(ac, axis=2)                                   # [B,nc,L,H]
+
+    # ---- intra-chunk (quadratic within the chunk) ----------------------------
+    # decay[t,s] = exp(cum[t] - cum[s]) for s <= t
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # [B,nc,L,L,H]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bqln,bqmn->bqlm", cc, bc)                 # [B,nc,L,L]
+    y_intra = jnp.einsum("bqlm,bqlmh,bqmhp->bqlhp", scores, decay, xc)
+
+    # ---- chunk summary states -------------------------------------------------
+    # state_q = sum_s exp(cum[last] - cum[s]) * b[s] (x) xdt[s]
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                        # [B,nc,L,H]
+    chunk_state = jnp.einsum("bqln,bqlh,bqlhp->bqhpn", bc, tail, xc)
+
+    # ---- inter-chunk recurrence ------------------------------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                        # [B,nc,H]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(carry, inp):
+        st = carry                                                  # [B,H,P,N]
+        cs, cd = inp                                                # [B,H,P,N], [B,H]
+        new = st * cd[:, :, None, None] + cs
+        return new, st                                              # emit state *entering* the chunk
+
+    final, entering = jax.lax.scan(
+        step,
+        initial_state,
+        (chunk_state.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    entering = entering.transpose(1, 0, 2, 3, 4)                    # [B,nc,H,P,N]
+
+    y_inter = jnp.einsum("bqln,bqlh,bqhpn->bqlhp", cc, jnp.exp(cum), entering)
+    y = (y_intra + y_inter).reshape(B, S, H, P)[:, :S_orig]
+    y = y + xh.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y, final
+
+
+def ssm_forward(p: SsmParams, x, cfg, state=None, conv_state=None):
+    """Full-sequence Mamba2 mixer.  x: [B,S,d] -> (y, (ssm_state, conv_state))."""
+    B, S, _ = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc, new_conv = _causal_conv(xbc, p.conv_w, p.conv_b, conv_state)
+    xs = xbc[..., :di].reshape(B, S, H, P)
+    bh = xbc[..., di:di + N]
+    ch = xbc[..., di + N:]
+    dt = jax.nn.softplus(dt + p.dt_bias)
+    y, final = ssd_chunked(xs, bh, ch, dt, p.a_log, p.d_skip, cfg.ssm_chunk, state)
+    y = (y.reshape(B, S, di) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p.w_out, (final, new_conv)
+
+
+def ssm_decode_step(p: SsmParams, x, cfg, state, conv_state):
+    """One-token recurrent step.  x: [B,1,d]; state: [B,H,P,N]; conv: [B,W-1,C]."""
+    B = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc, new_conv = _causal_conv(xbc, p.conv_w, p.conv_b, conv_state)
+    xs = xbc[:, 0, :di].reshape(B, H, P).astype(jnp.float32)
+    bh = xbc[:, 0, di:di + N].astype(jnp.float32)                  # [B,N]
+    ch = xbc[:, 0, di + N:].astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0] + p.dt_bias)                    # [B,H]
+    A = -jnp.exp(p.a_log.astype(jnp.float32))
+    decay = jnp.exp(dt1 * A)                                       # [B,H]
+    upd = jnp.einsum("bhp,bn->bhpn", xs * dt1[..., None], bh)
+    new_state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, ch)
+    y = y + xs * p.d_skip[None, :, None]
+    y = (y.reshape(B, 1, di) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p.w_out, (new_state, new_conv)

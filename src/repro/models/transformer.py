@@ -1,0 +1,300 @@
+"""Unified decoder stack for every assigned architecture family.
+
+Families:
+  * dense / moe / vlm / audio — attention + (mlp|moe) blocks, scanned.
+  * ssm  (mamba2)             — attention-free Mamba2 mixer blocks, scanned.
+  * hybrid (zamba2)           — super-blocks of `attn_period` Mamba2 blocks
+                                followed by one *weight-shared* attention block.
+
+The forward pass doubles as the paper's measurement pass: for every
+attention block it records the cosine similarity between the residual
+stream entering the block and the stream after the attention residual-add
+(SqueezeAttention Eq. 5) — the layer-importance signal that drives the
+KV budget reallocation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import GLOBAL_WINDOW
+from repro.models.config import ModelConfig
+from repro.models.norms import apply_norm, init_norm
+from repro.models.shard_hints import hint
+
+
+# --------------------------------------------------------------------------- #
+# parameter construction
+# --------------------------------------------------------------------------- #
+
+def _init_block(key, cfg: ModelConfig):
+    """One dense/moe block's params (unstacked)."""
+    ka, km = jax.random.split(key)
+    p = {
+        "attn_norm": init_norm(cfg, cfg.d_model),
+        "attn": init_attn_dict(ka, cfg),
+        "mlp_norm": init_norm(cfg, cfg.d_model),
+        "post_attn_norm": init_norm(cfg, cfg.d_model),
+        "post_mlp_norm": init_norm(cfg, cfg.d_model),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_lib.init_moe(km, cfg)._asdict()
+    else:
+        p["mlp"] = mlp_lib.init_mlp(km, cfg)._asdict()
+    return p
+
+
+def init_attn_dict(key, cfg):
+    return attn_lib.init_attn(key, cfg)._asdict()
+
+
+def _init_ssm_block(key, cfg):
+    return {
+        "norm": init_norm(cfg, cfg.d_model),
+        "ssm": ssm_lib.init_ssm(key, cfg)._asdict(),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    cfg.validate()
+    keys = jax.random.split(key, 8)
+    pd = jnp.dtype(cfg.param_dtype)
+    params = {
+        "embed": (jax.random.normal(keys[0], (cfg.v_padded, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(pd),
+        "final_norm": init_norm(cfg, cfg.d_model),
+        "unembed": (jax.random.normal(keys[1], (cfg.d_model, cfg.v_padded),
+                                      jnp.float32) * 0.02).astype(pd),
+    }
+    if cfg.is_ssm_only:
+        lkeys = jax.random.split(keys[2], cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _init_ssm_block(k, cfg))(lkeys)
+    elif cfg.is_hybrid:
+        n_super = cfg.n_layers // cfg.attn_period
+        lkeys = jax.random.split(keys[2], n_super * cfg.attn_period)
+        blocks = jax.vmap(lambda k: _init_ssm_block(k, cfg))(lkeys)
+        params["layers"] = jax.tree.map(
+            lambda a: a.reshape((n_super, cfg.attn_period) + a.shape[1:]), blocks)
+        params["shared_attn"] = {
+            "attn_norm": init_norm(cfg, cfg.d_model),
+            "attn": init_attn_dict(keys[3], cfg),
+            "mlp_norm": init_norm(cfg, cfg.d_model),
+            "mlp": mlp_lib.init_mlp(keys[4], cfg)._asdict(),
+        }
+    else:
+        lkeys = jax.random.split(keys[2], cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _init_block(k, cfg))(lkeys)
+    return params
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """[n_attn_layers] int32 per-attention-layer window widths (data, not shape)."""
+    n = n_attn_layers(cfg)
+    return jnp.asarray(
+        [cfg.layer_window(i) or GLOBAL_WINDOW for i in range(n)], jnp.int32)
+
+
+def n_attn_layers(cfg: ModelConfig) -> int:
+    """Number of attention (== KV-cached) layers."""
+    if cfg.is_ssm_only:
+        return 0
+    if cfg.is_hybrid:
+        return cfg.n_layers // cfg.attn_period
+    return cfg.n_layers
+
+
+# --------------------------------------------------------------------------- #
+# forward (train / prefill)
+# --------------------------------------------------------------------------- #
+
+class ForwardOut(NamedTuple):
+    logits: jnp.ndarray                  # [B, S, V]
+    cos_sims: jnp.ndarray                # [n_attn_layers, B]  (Eq. 5, token-avg)
+    kv: Optional[tuple]                  # (k, v) each [n_attn, B, S, Hkv, hd]
+    attn_scores: Optional[jnp.ndarray]   # [n_attn, B, Hkv, S] H2O column sums
+    ssm_state: Optional[tuple]           # (state, conv_state) stacked per layer
+    aux_loss: jnp.ndarray                # scalar (MoE load balance)
+
+
+def _cos_sim(a, b, valid):
+    """Token-averaged cosine similarity between residual streams. [B]"""
+    af, bf = a.astype(jnp.float32), b.astype(jnp.float32)
+    num = (af * bf).sum(-1)
+    den = jnp.sqrt((af * af).sum(-1) * (bf * bf).sum(-1)) + 1e-8
+    cs = num / den                                           # [B, S]
+    if valid is None:
+        return cs.mean(-1)
+    w = valid.astype(jnp.float32)
+    return (cs * w).sum(-1) / jnp.clip(w.sum(-1), 1.0)
+
+
+def _embed(params, cfg, tokens, embeds):
+    if embeds is not None:
+        return embeds.astype(jnp.dtype(cfg.dtype))
+    x = params["embed"][tokens]
+    # gemma-style sqrt(d) embedding scaling keeps residual magnitudes sane for
+    # random-init studies; harmless otherwise.
+    x = (x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)).astype(jnp.dtype(cfg.dtype))
+    return hint(x, {0: "batch"})
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: Optional[jnp.ndarray] = None,      # [B, S] int32
+    embeds: Optional[jnp.ndarray] = None,      # [B, S, d] (vlm/audio stub frontends)
+    positions: Optional[jnp.ndarray] = None,   # [B, S] or [B, S, 3]
+    valid: Optional[jnp.ndarray] = None,       # [B, S] bool
+    collect_kv: bool = False,                  # prefill: return full KV + H2O scores
+    remat: bool = False,                       # checkpoint each scan BODY
+) -> ForwardOut:
+    """remat=True reruns each layer's interior in the backward pass so the
+    layer scan saves only its carry — without it, XLA's while-loop autodiff
+    stashes every per-layer intermediate (e.g. [L, E, C, f] MoE hiddens),
+    which dominated the training-step memory roofline (§Perf A2)."""
+    x = _embed(params, cfg, tokens, embeds)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    if cfg.is_ssm_only:
+        x, cos, ssm_state = _ssm_stack(params, cfg, x, valid, remat)
+        kv = scores = None
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.is_hybrid:
+        x, cos, kv, scores, ssm_state, aux = _hybrid_stack(
+            params, cfg, x, positions, valid, collect_kv, remat)
+    else:
+        x, cos, kv, scores, aux = _dense_stack(
+            params, cfg, x, positions, valid, collect_kv, remat)
+        ssm_state = None
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = (x @ params["unembed"]).astype(jnp.float32)
+    logits = hint(logits, {0: "batch", 2: "model"})
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    if cfg.v_padded != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.v_padded) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return ForwardOut(logits, cos, kv, scores, ssm_state, aux)
+
+
+def _attn_block(bp, cfg, x, positions, valid, window, collect_kv):
+    """norm -> attention -> residual. Returns (x, cos, k, v, colsum)."""
+    pre = x
+    h = apply_norm(bp["attn_norm"], x, cfg)
+    ap = attn_lib.AttnParams(**bp["attn"])
+    out, k, v, colsum = attn_lib.full_attention(
+        ap, h, positions, cfg, window, valid, return_colsums=collect_kv)
+    if cfg.use_post_norms:
+        out = apply_norm(bp["post_attn_norm"], out, cfg)
+    x = x + out
+    cos = _cos_sim(pre, x, valid)
+    return x, cos, k, v, colsum
+
+
+def _ffn_block(bp, cfg, x, valid):
+    h = apply_norm(bp["mlp_norm"], x, cfg)
+    if cfg.is_moe:
+        out, aux = moe_lib.apply_moe(moe_lib.MoeParams(**bp["moe"]), h, cfg)
+    else:
+        out = mlp_lib.apply_mlp(mlp_lib.MlpParams(**bp["mlp"]), h, cfg)
+        aux = jnp.zeros((), jnp.float32)
+    if cfg.use_post_norms:
+        out = apply_norm(bp["post_mlp_norm"], out, cfg)
+    return x + out, aux
+
+
+def _remat(body, remat):
+    if not remat:
+        return body
+    return jax.checkpoint(body, prevent_cse=False,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def _dense_stack(params, cfg, x, positions, valid, collect_kv, remat=False):
+    windows = layer_windows(cfg)
+
+    def body(carry, inp):
+        # re-pin the residual stream: the scan boundary loses the batch
+        # sharding, leaving per-layer saved activations replicated over
+        # `data` (§Perf A4); the d-dim model shard makes the per-layer remat
+        # stash fit HBM at the cost of a per-layer all-gather — only worth
+        # paying when a bwd stash exists, i.e. under remat (§Perf A6/E1)
+        x = hint(carry, {0: "batch", 2: "model"} if remat else {0: "batch"})
+        bp, window = inp
+        x, cos, k, v, colsum = _attn_block(bp, cfg, x, positions, valid, window,
+                                           collect_kv)
+        x, aux = _ffn_block(bp, cfg, x, valid)
+        outs = (cos, aux)
+        if collect_kv:
+            outs = outs + (k, v, colsum)
+        return x, outs
+
+    x, outs = jax.lax.scan(_remat(body, remat), x, (params["layers"], windows))
+    cos, aux = outs[0], outs[1]
+    if collect_kv:
+        kv, scores = (outs[2], outs[3]), outs[4]
+    else:
+        kv, scores = None, None
+    return x, cos, kv, scores, aux.sum()
+
+
+def _ssm_stack(params, cfg, x, valid, remat=False):
+    def body(carry, bp):
+        x = hint(carry, {0: "batch", 2: "model"} if remat else {0: "batch"})
+        pre = x
+        h = apply_norm(bp["norm"], x, cfg)
+        out, (state, conv) = ssm_lib.ssm_forward(
+            ssm_lib.SsmParams(**bp["ssm"]), h, cfg)
+        x = x + out
+        cos = _cos_sim(pre, x, valid)
+        return x, (cos, state, conv)
+
+    x, (cos, states, convs) = jax.lax.scan(_remat(body, remat), x,
+                                           params["layers"])
+    return x, cos, (states, convs)
+
+
+def _hybrid_stack(params, cfg, x, positions, valid, collect_kv, remat=False):
+    """Zamba2-style: scan over super-blocks of `attn_period` mamba blocks +
+    one shared-weight attention/mlp block (its KV cache IS per-invocation)."""
+    sp = params["shared_attn"]
+
+    def body(carry, bps):
+        x = carry
+
+        def inner(c, bp):
+            h = apply_norm(bp["norm"], c, cfg)
+            out, (state, conv) = ssm_lib.ssm_forward(
+                ssm_lib.SsmParams(**bp["ssm"]), h, cfg)
+            return c + out, (state, conv)
+
+        x, (states, convs) = jax.lax.scan(inner, x, bps)
+        x, cos, k, v, colsum = _attn_block(sp, cfg, x, positions, valid,
+                                           GLOBAL_WINDOW, collect_kv)
+        h2 = apply_norm(sp["mlp_norm"], x, cfg)
+        x = x + mlp_lib.apply_mlp(mlp_lib.MlpParams(**sp["mlp"]), h2, cfg)
+        outs = (cos, states, convs)
+        if collect_kv:
+            outs = outs + (k, v, colsum)
+        return x, outs
+
+    x, outs = jax.lax.scan(_remat(body, remat), x, params["layers"])
+    cos, states, convs = outs[0], outs[1], outs[2]
+    n_super = states.shape[0]
+    # flatten [n_super, period, ...] -> [n_layers, ...]
+    states = jax.tree.map(
+        lambda a: a.reshape((-1,) + a.shape[2:]), (states, convs))
+    if collect_kv:
+        kv, scores = (outs[3], outs[4]), outs[5]
+    else:
+        kv, scores = None, None
+    return x, cos, kv, scores, states, jnp.zeros((), jnp.float32)

@@ -1,0 +1,12 @@
+from repro.serving.decode import DecodeState, make_tier_indices, serve_step
+from repro.serving.engine import Engine, EngineConfig, GenerationResult
+from repro.serving.prefill import PrefillOut, prefill
+from repro.serving.scheduler import Request, SchedulerConfig, WaveScheduler
+from repro.serving.sampler import SamplerConfig, sample
+
+__all__ = [
+    "DecodeState", "make_tier_indices", "serve_step",
+    "Engine", "EngineConfig", "GenerationResult",
+    "PrefillOut", "prefill", "SamplerConfig", "sample",
+    "Request", "SchedulerConfig", "WaveScheduler",
+]

@@ -1,0 +1,197 @@
+"""Budget-tiered decode step (one token) for every architecture family.
+
+SqueezeAttention's Algorithm 1 gives every layer one of **two** budgets
+(squeezed `b_small` or boosted `b_big`).  The decode step therefore carries
+two stacked slot arenas and scans the layers *in model order*, selecting the
+layer's arena with `lax.cond` — the compiled HLO contains exactly one
+attention body per tier regardless of depth, which keeps 94-layer models
+cheap to compile and lets XLA alias the scan-carried arenas in place.
+
+`group_is_small` / tier index vectors are **data**, so one compiled step
+serves any clustering outcome with the same tier shapes (the engine
+re-compiles only when the quantized budget buckets change).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache import SlotCache, write_token
+from repro.core.policies import PolicyConfig
+from repro.models import attention as attn_lib
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.norms import apply_norm
+from repro.models.transformer import layer_windows
+
+
+class DecodeState(NamedTuple):
+    """Carried between decode steps.  Unused fields are () placeholders."""
+    big: SlotCache | tuple        # [n_big, B, b_big, Hkv, hd] arenas
+    small: SlotCache | tuple      # [n_small, B, b_small, ...]
+    group_is_small: jnp.ndarray | tuple   # [n_attn] int32 (0/1) — data
+    tier_index: jnp.ndarray | tuple       # [n_attn] index within its tier
+    ssm_state: jnp.ndarray | tuple        # [n_ssm, B, H, P, N]
+    conv_state: jnp.ndarray | tuple       # [n_ssm, B, W-1, C]
+    t: jnp.ndarray                # [B] next token's position
+
+
+def make_tier_indices(is_small) -> tuple:
+    """Per-layer (is_small, index-within-tier) as int32 arrays."""
+    import numpy as np
+    is_small = np.asarray(is_small, bool)
+    idx = np.zeros(len(is_small), np.int32)
+    nb = ns = 0
+    for i, s in enumerate(is_small):
+        idx[i] = ns if s else nb
+        ns, nb = ns + int(s), nb + int(not s)
+    return jnp.asarray(is_small.astype(np.int32)), jnp.asarray(idx)
+
+
+def _tier_read(tier: SlotCache, j) -> SlotCache:
+    return SlotCache(*jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, j, 0, keepdims=False), tuple(tier)))
+
+
+def _tier_write(tier: SlotCache, lc: SlotCache, j) -> SlotCache:
+    return SlotCache(*jax.tree.map(
+        lambda a, u: jax.lax.dynamic_update_index_in_dim(a, u, j, 0),
+        tuple(tier), tuple(lc)))
+
+
+def _attend_tier(bp, cfg, pol, h, t, tier, j, window):
+    """Attention over one layer's arena in `tier`; in-place arena update."""
+    lc = _tier_read(tier, j)
+    ap = attn_lib.AttnParams(**bp["attn"])
+    out = attn_lib.decode_attention(ap, h, t, lc.k, lc.v, lc.pos, cfg, window)
+    probs = out.slot_probs.mean(axis=1)          # [B, S+1] kv-head mean
+    # barrier: k/v_new are bf16 casts of f32 rope outputs; without it XLA's
+    # convert-sinking rewrites the slot write into an f32 scatter over the
+    # WHOLE arena + convert back — 3 full-arena round-trips/layer (§Perf D4)
+    k_new, v_new = jax.lax.optimization_barrier((out.k_new, out.v_new))
+    new_lc = write_token(pol, lc, k_new, v_new, t, probs)
+    return out.out, _tier_write(tier, new_lc, j)
+
+
+def _attn_decode_block(bp, cfg, pol, x, t, big, small, is_small, j, window):
+    """norm -> tiered cached attention -> residual."""
+    h = apply_norm(bp["attn_norm"], x, cfg)
+
+    def on_small(_):
+        o, small2 = _attend_tier(bp, cfg, pol, h, t, small, j, window)
+        return o, big, small2
+
+    def on_big(_):
+        o, big2 = _attend_tier(bp, cfg, pol, h, t, big, j, window)
+        return o, big2, small
+
+    out, big, small = jax.lax.cond(is_small == 1, on_small, on_big, None)
+    if cfg.use_post_norms:
+        out = apply_norm(bp["post_attn_norm"], out, cfg)
+    return x + out, big, small
+
+
+def _ffn_decode(bp, cfg, x):
+    h = apply_norm(bp["mlp_norm"], x, cfg)
+    if cfg.is_moe:
+        out, _ = moe_lib.apply_moe(moe_lib.MoeParams(**bp["moe"]), h, cfg)
+    else:
+        out = mlp_lib.apply_mlp(mlp_lib.MlpParams(**bp["mlp"]), h, cfg)
+    if cfg.use_post_norms:
+        out = apply_norm(bp["post_mlp_norm"], out, cfg)
+    return x + out
+
+
+def _embed_token(params, cfg, token):
+    x = params["embed"][token[:, None]]               # [B, 1, d]
+    return (x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)).astype(
+        jnp.dtype(cfg.dtype))
+
+
+def serve_step(
+    params,
+    cfg: ModelConfig,
+    pol: PolicyConfig,
+    state: DecodeState,
+    token: jnp.ndarray,          # [B] int32 current input token
+    embeds: Optional[jnp.ndarray] = None,   # [B, 1, d] overrides token embed
+):
+    """One decode step: token -> logits [B, V], updated DecodeState."""
+    x = _embed_token(params, cfg, token) if embeds is None else embeds
+    t = state.t
+
+    if cfg.is_ssm_only:
+        def body(carry, inp):
+            x = carry
+            bp, st, cv = inp
+            h = apply_norm(bp["norm"], x, cfg)
+            out, (st2, cv2) = ssm_lib.ssm_decode_step(
+                ssm_lib.SsmParams(**bp["ssm"]), h, cfg, st, cv)
+            return x + out, (st2, cv2)
+
+        x, (sts, cvs) = jax.lax.scan(
+            body, x, (params["layers"], state.ssm_state, state.conv_state))
+        new_state = state._replace(ssm_state=sts, conv_state=cvs, t=t + 1)
+
+    elif cfg.is_hybrid:
+        sp = params["shared_attn"]
+        period = cfg.attn_period
+        n_super = cfg.n_layers // period
+        sts = jax.tree.map(
+            lambda a: a.reshape((n_super, period) + a.shape[1:]),
+            (state.ssm_state, state.conv_state))
+
+        def body(carry, inp):
+            x, big, small = carry
+            bps, (st_sb, cv_sb), is_small, j = inp
+
+            def inner(c, blk):
+                bp, st, cv = blk
+                h = apply_norm(bp["norm"], c, cfg)
+                out, (st2, cv2) = ssm_lib.ssm_decode_step(
+                    ssm_lib.SsmParams(**bp["ssm"]), h, cfg, st, cv)
+                return c + out, (st2, cv2)
+
+            x, (st2, cv2) = jax.lax.scan(inner, x, (bps, st_sb, cv_sb))
+            x, big, small = _attn_decode_block(
+                sp, cfg, pol, x, t, big, small, is_small, j,
+                attn_lib.GLOBAL_WINDOW)
+            h2 = apply_norm(sp["mlp_norm"], x, cfg)
+            x = x + mlp_lib.apply_mlp(mlp_lib.MlpParams(**sp["mlp"]), h2, cfg)
+            return (x, big, small), (st2, cv2)
+
+        (x, big, small), (sts2, cvs2) = jax.lax.scan(
+            body, (x, state.big, state.small),
+            (params["layers"], sts, state.group_is_small, state.tier_index))
+        flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), (sts2, cvs2))
+        new_state = state._replace(big=big, small=small,
+                                   ssm_state=flat[0], conv_state=flat[1], t=t + 1)
+
+    else:
+        windows = layer_windows(cfg)
+
+        def body(carry, inp):
+            x, big, small = carry
+            bp, window, is_small, j = inp
+            x, big, small = _attn_decode_block(
+                bp, cfg, pol, x, t, big, small, is_small, j, window)
+            x = _ffn_decode(bp, cfg, x)
+            return (x, big, small), None
+
+        (x, big, small), _ = jax.lax.scan(
+            body, (x, state.big, state.small),
+            (params["layers"], windows, state.group_is_small, state.tier_index))
+        new_state = state._replace(big=big, small=small, t=t + 1)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = (x[:, 0] @ params["unembed"]).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    if cfg.v_padded != cfg.vocab_size:
+        logits = jnp.where(jnp.arange(cfg.v_padded) >= cfg.vocab_size,
+                           -1e30, logits)
+    return logits, new_state

@@ -1,0 +1,58 @@
+"""Prefill: full-attention pass that doubles as the measurement phase.
+
+Returns everything SqueezeAttention's host-side allocator needs: per-layer
+cosine similarities (Eq. 5, token-averaged), the full KV to be compacted into
+the budget arenas, and the H2O prefill column-sum statistics.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward
+
+
+class PrefillOut(NamedTuple):
+    last_logits: jnp.ndarray          # [B, V] logits at each row's last valid token
+    cos_sims: jnp.ndarray             # [n_attn_layers, B]
+    k: Optional[jnp.ndarray]          # [n_attn, B, P, Hkv, hd]
+    v: Optional[jnp.ndarray]
+    cache_pos: Optional[jnp.ndarray]  # [n_attn, B, P] (-1 on padding)
+    scores: Optional[jnp.ndarray]     # [n_attn, B, P] H2O col-sums (kv-head mean)
+    ssm_state: Optional[tuple]        # (state, conv) stacked [n_ssm, ...]
+    t: jnp.ndarray                    # [B] prompt lengths (next position)
+
+
+def prefill(
+    params,
+    cfg: ModelConfig,
+    tokens: Optional[jnp.ndarray] = None,      # [B, P]
+    embeds: Optional[jnp.ndarray] = None,      # [B, P, d]
+    positions: Optional[jnp.ndarray] = None,
+    valid: Optional[jnp.ndarray] = None,       # [B, P] right-padding mask
+) -> PrefillOut:
+    B, P = (tokens.shape if tokens is not None else embeds.shape[:2])
+    out = forward(params, cfg, tokens=tokens, embeds=embeds,
+                  positions=positions, valid=valid, collect_kv=cfg.has_attention)
+    if valid is None:
+        t = jnp.full((B,), P, jnp.int32)
+        last = out.logits[:, -1]
+        pos_row = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (B, P))
+    else:
+        t = valid.sum(-1).astype(jnp.int32)
+        last = jnp.take_along_axis(
+            out.logits, (t - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        pos_row = jnp.where(valid, jnp.arange(P, dtype=jnp.int32)[None], -1)
+
+    if out.kv is not None:
+        k, v = out.kv
+        n_attn = k.shape[0]
+        cache_pos = jnp.broadcast_to(pos_row[None], (n_attn, B, P))
+        scores = out.attn_scores.mean(axis=2) / jnp.clip(
+            t.astype(jnp.float32)[None, :, None], 1.0)  # kv-head mean, per-query norm
+    else:
+        k = v = cache_pos = scores = None
+    return PrefillOut(last, out.cos_sims, k, v, cache_pos, scores,
+                      out.ssm_state, t)

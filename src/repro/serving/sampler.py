@@ -1,0 +1,25 @@
+"""Token sampling: greedy / temperature / top-k, jit-friendly."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0     # 0 -> greedy
+    top_k: int = 0               # 0 -> full distribution
+
+
+def sample(logits: jnp.ndarray, key, sc: SamplerConfig) -> jnp.ndarray:
+    """logits [B, V] -> tokens [B]."""
+    if sc.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / sc.temperature
+    if sc.top_k > 0:
+        vals, _ = jax.lax.top_k(logits, sc.top_k)
+        kth = vals[..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,90 @@
+"""Wave scheduler: request-queue batched serving on top of the Engine.
+
+Production serving groups incoming requests into fixed-shape waves (prompt
+lengths padded to buckets, batch padded to the wave size) so each wave hits
+an already-compiled (batch, prompt-bucket, budget-tier) executable.  This is
+the batching model behind the paper's Table 3 throughput runs; true
+token-level continuous batching would additionally interleave prefills into
+the decode loop — noted as future work in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.engine import Engine, EngineConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [P] int32
+    max_new: int
+    submitted_at: float = 0.0
+    tokens: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    wave_size: int = 8                  # requests per wave (compiled batch)
+    prompt_bucket: int = 32             # prompts right-pad to multiples
+    max_wave_new: int = 64              # decode steps per wave
+
+
+class WaveScheduler:
+    def __init__(self, params, cfg, ecfg: EngineConfig,
+                 scfg: SchedulerConfig = SchedulerConfig()):
+        self.engine = Engine(params, cfg, ecfg)
+        self.cfg = cfg
+        self.scfg = scfg
+        self.queue: List[Request] = []
+        self._next_id = 0
+
+    def submit(self, prompt: np.ndarray, max_new: int = 32) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new, time.perf_counter()))
+        return rid
+
+    def _pad_wave(self, wave: List[Request]):
+        B = self.scfg.wave_size
+        bucket = self.scfg.prompt_bucket
+        plen = max(len(r.prompt) for r in wave)
+        plen = ((plen + bucket - 1) // bucket) * bucket
+        toks = np.zeros((B, plen), np.int32)
+        valid = np.zeros((B, plen), bool)
+        for i, r in enumerate(wave):
+            toks[i, :len(r.prompt)] = r.prompt
+            valid[i, :len(r.prompt)] = True
+        for i in range(len(wave), B):    # pad rows replicate request 0
+            toks[i] = toks[0]
+            valid[i] = valid[0]
+        return toks, valid
+
+    def run_wave(self) -> List[Request]:
+        """Serve the next wave; returns the completed requests."""
+        if not self.queue:
+            return []
+        wave = self.queue[:self.scfg.wave_size]
+        self.queue = self.queue[self.scfg.wave_size:]
+        toks, valid = self._pad_wave(wave)
+        n_new = min(max(r.max_new for r in wave), self.scfg.max_wave_new)
+        t0 = time.perf_counter()
+        res = self.engine.generate(tokens=toks, valid=valid,
+                                   max_new_tokens=n_new)
+        t1 = time.perf_counter()
+        for i, r in enumerate(wave):
+            r.tokens = res.tokens[i, :r.max_new]
+            r.latency_s = t1 - r.submitted_at
+        return wave
+
+    def run_until_empty(self) -> List[Request]:
+        done: List[Request] = []
+        while self.queue:
+            done.extend(self.run_wave())
+        return done

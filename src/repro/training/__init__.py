@@ -1,0 +1,2 @@
+from repro.training.optimizer import AdamWConfig, OptState, apply_updates, init_opt_state, schedule_lr
+from repro.training.train_step import TrainBatch, eval_step, loss_fn, train_step

@@ -1,0 +1,94 @@
+"""AdamW + LR schedules, from scratch (no optax in this environment).
+
+Optimizer state keeps fp32 moments regardless of param dtype (mixed-precision
+training: bf16 params/grads, fp32 m/v), matching large-scale practice and the
+memory model used in the roofline analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"      # cosine | linear | constant
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def schedule_lr(cfg: AdamWConfig, step) -> jnp.ndarray:
+    stepf = step.astype(jnp.float32)
+    warm = jnp.minimum(stepf / max(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        frac = jnp.clip((stepf - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 \
+                * (1 + jnp.cos(jnp.pi * frac))
+        else:
+            decay = 1.0 - (1 - cfg.min_lr_frac) * frac
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(lambda a, b: a + b, sq, 0.0))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh, vh = m / b1c, v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        # decoupled weight decay on matrix params only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, OptState(step, new_m, new_v), metrics

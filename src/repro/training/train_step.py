@@ -1,0 +1,88 @@
+"""Loss + train step (rematerialized), shared by the launcher and examples."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward
+from repro.training.optimizer import AdamWConfig, OptState, apply_updates
+
+
+class TrainBatch(NamedTuple):
+    tokens: jnp.ndarray                # [B, S] int32
+    targets: jnp.ndarray               # [B, S] int32 (next-token labels)
+    valid: Optional[jnp.ndarray] = None      # [B, S] bool
+    embeds: Optional[jnp.ndarray] = None     # [B, S, d] vlm/audio stub inputs
+    positions: Optional[jnp.ndarray] = None
+
+
+def loss_fn(params, cfg: ModelConfig, batch: TrainBatch, remat: bool = True):
+    # remat is applied to each layer-scan BODY inside forward (per-layer
+    # checkpointing): XLA's while-loop autodiff otherwise stashes every
+    # per-layer intermediate regardless of an outer jax.checkpoint
+    # (EXPERIMENTS.md §Perf iteration A2).
+    out = forward(params, cfg,
+                  batch.tokens if batch.embeds is None else None,
+                  batch.embeds, batch.positions, batch.valid, False,
+                  remat=remat)
+    logits = out.logits
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jnp.take_along_axis(logp, batch.targets[..., None].astype(jnp.int32),
+                              axis=-1)[..., 0]
+    if batch.valid is not None:
+        w = batch.valid.astype(jnp.float32)
+        nll = -(tgt * w).sum() / jnp.clip(w.sum(), 1.0)
+    else:
+        nll = -tgt.mean()
+    loss = nll + out.aux_loss
+    return loss, {"nll": nll, "aux": out.aux_loss}
+
+
+def train_step(params, opt_state: OptState, batch: TrainBatch,
+               cfg: ModelConfig, opt_cfg: AdamWConfig, remat: bool = True,
+               microbatches: int = 1):
+    """One optimizer step; with microbatches > 1, gradients are accumulated
+    over batch slices (lax.scan) so peak activation memory scales with the
+    microbatch, not the global batch (§Perf A7)."""
+    if microbatches <= 1:
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch, remat)
+    else:
+        B = batch.targets.shape[0]
+        assert B % microbatches == 0, (B, microbatches)
+        mb = B // microbatches
+
+        def slice_mb(i):
+            sl = lambda a: (jax.lax.dynamic_slice_in_dim(a, i * mb, mb, 0)
+                            if a is not None else None)
+            return TrainBatch(sl(batch.tokens), sl(batch.targets),
+                              sl(batch.valid), sl(batch.embeds),
+                              sl(batch.positions))
+
+        def acc(carry, i):
+            loss_sum, parts_sum, gsum = carry
+            (loss, parts), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, cfg, slice_mb(i), remat)
+            gsum = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gsum, g)
+            parts_sum = jax.tree.map(lambda a, b: a + b, parts_sum, parts)
+            return (loss_sum + loss, parts_sum, gsum), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        p0 = {"nll": jnp.zeros(()), "aux": jnp.zeros(())}
+        (loss, parts, grads), _ = jax.lax.scan(
+            acc, (jnp.zeros(()), p0, g0), jnp.arange(microbatches))
+        inv = 1.0 / microbatches
+        loss = loss * inv
+        parts = jax.tree.map(lambda a: a * inv, parts)
+        grads = jax.tree.map(lambda a: a * inv, grads)
+    params, opt_state, om = apply_updates(opt_cfg, params, grads, opt_state)
+    metrics = {"loss": loss, **parts, **om}
+    return params, opt_state, metrics
+
+
+def eval_step(params, batch: TrainBatch, cfg: ModelConfig):
+    loss, parts = loss_fn(params, cfg, batch, remat=False)
+    return {"loss": loss, **parts}

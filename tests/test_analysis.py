@@ -1,0 +1,98 @@
+"""Roofline/HLO analysis: loop-aware FLOPs, collective parsing, term math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.hlo_flops import analyze
+from repro.analysis.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
+                                     wire_bytes)
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_flops():
+    L, M = 5, 128
+    w = jnp.ones((L, M, M), jnp.float32)
+    x = jnp.ones((M, M), jnp.float32)
+
+    def f(x, w):
+        return jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)[0]
+
+    res = analyze(_compile_text(f, x, w))
+    assert res["flops"] == pytest.approx(2 * L * M ** 3, rel=0.01)
+
+
+def test_nested_scan_flops():
+    Lo, Li, M = 3, 4, 64
+    w = jnp.ones((Lo, Li, M, M), jnp.float32)
+    x = jnp.ones((M, M), jnp.float32)
+
+    def inner(c, wi):
+        return jax.lax.scan(lambda a, b: (a @ b, None), c, wi)[0]
+
+    def f(x, w):
+        return jax.lax.scan(lambda c, wi: (inner(c, wi), None), x, w)[0]
+
+    res = analyze(_compile_text(f, x, w))
+    assert res["flops"] == pytest.approx(2 * Lo * Li * M ** 3, rel=0.01)
+
+
+def test_cond_weights_branches():
+    M = 128
+    x = jnp.ones((M, M), jnp.float32)
+
+    def g(x, i):
+        return jax.lax.cond(i > 0, lambda x: x @ x, lambda x: x + 1.0, x)
+
+    res = analyze(_compile_text(g, x, jnp.int32(1)))
+    assert res["flops"] == pytest.approx(M ** 3, rel=0.01)   # 2*M^3 * 1/2
+
+
+def test_collective_parse_on_psum():
+    import os
+    mesh = jax.make_mesh((1,), ("d",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from functools import partial
+    from jax.experimental.shard_map import shard_map
+
+    @partial(shard_map, mesh=mesh, in_specs=P("d"), out_specs=P())
+    def f(x):
+        return jax.lax.psum(x, "d")
+
+    x = jnp.ones((8, 128), jnp.float32)
+    txt = jax.jit(f).lower(x).compile().as_text()
+    colls = collective_bytes(txt)
+    assert colls.get("all-reduce", 0) > 0
+    assert wire_bytes(colls) >= colls["total"]   # all-reduce 2x accounted
+
+
+def test_roofline_terms():
+    rl = Roofline(arch="a", shape="s", mesh="single", chips=256,
+                  flops_global=256 * PEAK_FLOPS,        # exactly 1 s compute
+                  bytes_global=256 * HBM_BW * 2,        # 2 s memory
+                  wire_bytes_global=256 * ICI_BW * 0.5, # 0.5 s collective
+                  model_flops=256 * PEAK_FLOPS / 2)
+    assert rl.t_compute == pytest.approx(1.0)
+    assert rl.t_memory == pytest.approx(2.0)
+    assert rl.t_collective == pytest.approx(0.5)
+    assert rl.bottleneck == "memory"
+    assert rl.useful_flop_ratio == pytest.approx(0.5)
+    assert rl.mfu_bound == pytest.approx(0.25)
+
+
+def test_dryrun_plan_two_tiers():
+    from repro.configs import get_config
+    from repro.launch.specs import dryrun_plan
+    for arch in ("gemma2-27b", "qwen3-moe-235b-a22b", "zamba2-2.7b"):
+        cfg = get_config(arch)
+        plan = dryrun_plan(cfg, 32768, "squeeze")
+        assert plan.n_small > 0 and plan.n_big > 0
+        assert plan.b_small < plan.b_big
+        assert plan.b_small % 128 == 0 and plan.b_big % 128 == 0
+        assert plan.total <= plan.n_layers * plan.b_init
+        full = dryrun_plan(cfg, 32768, "full")
+        assert plan.total < full.total            # squeeze actually shrinks

@@ -1,0 +1,144 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles.
+
+All kernels run in interpret mode (CPU container; TPU is the lowering
+target).  Tolerances: fp32 ~1e-5, bf16 ~5e-2 (inputs are bf16-rounded but
+accumulation is fp32 in both kernel and oracle).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ref import decode_attention_ref
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_recurrent_ref
+from repro.kernels.swa_prefill.ops import swa_attention
+from repro.kernels.swa_prefill.ref import swa_attention_ref
+
+GLOBAL = 1 << 30
+
+
+# ------------------------------------------------------------- flash_decode
+@pytest.mark.parametrize("B,S,Hkv,G,hd,window,dtype,softcap", [
+    (2, 256, 2, 4, 64, GLOBAL, jnp.float32, None),
+    (2, 256, 2, 4, 64, 100, jnp.float32, None),
+    (1, 300, 1, 8, 128, GLOBAL, jnp.float32, None),     # pad path
+    (2, 256, 2, 4, 64, GLOBAL, jnp.bfloat16, None),
+    (2, 128, 4, 1, 32, 50, jnp.float32, 30.0),          # softcap (gemma2)
+    (1, 64, 2, 2, 16, 8, jnp.float32, None),            # tiny window
+])
+def test_flash_decode_matches_ref(B, S, Hkv, G, hd, window, dtype, softcap):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, Hkv, G, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32).astype(dtype)
+    pos = jax.random.randint(ks[3], (B, S), -1, 2 * S)
+    t = jnp.full((B,), int(1.5 * S), jnp.int32)
+    o1, c1 = flash_decode(q, k, v, pos, t, window, block_s=128,
+                          softcap=softcap, return_colsums=True)
+    o2, c2 = decode_attention_ref(q, k, v, pos, t, window, softcap=softcap)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=tol)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=tol)
+
+
+def test_flash_decode_empty_slots_ignored():
+    """Evicted (-1) slots never contribute attention mass."""
+    B, S, Hkv, G, hd = 1, 128, 1, 1, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, Hkv, G, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    pos = jnp.where(jnp.arange(S) < 64, jnp.arange(S), -1)[None]
+    t = jnp.asarray([1000], jnp.int32)
+    _, cols = flash_decode(q, k, v, pos, t, GLOBAL, block_s=64,
+                           return_colsums=True)
+    assert float(jnp.abs(cols[0, 0, 64:]).max()) == 0.0
+    assert np.isclose(float(cols.sum()), 1.0, atol=1e-5)   # probs sum to 1
+
+
+# ----------------------------------------------------------------- ssd_scan
+@pytest.mark.parametrize("B,S,H,P,N,chunk,dtype", [
+    (2, 64, 2, 32, 16, 16, jnp.float32),
+    (1, 128, 4, 64, 128, 32, jnp.float32),
+    (2, 40, 2, 32, 16, 16, jnp.float32),                # pad path
+    (2, 64, 2, 32, 16, 16, jnp.bfloat16),
+])
+def test_ssd_matches_recurrence(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    xh = (jax.random.normal(ks[0], (B, S, H, P)) * 0.5).astype(dtype)
+    bh = (jax.random.normal(ks[1], (B, S, N)) * 0.5).astype(dtype)
+    ch = (jax.random.normal(ks[2], (B, S, N)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)) - 2.0)
+    a_log = jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32))
+    d_skip = jnp.ones((H,), jnp.float32)
+    y1, f1 = ssd(xh, bh, ch, dt, a_log, d_skip, chunk=chunk)
+    y2, f2 = ssd_recurrent_ref(xh, bh, ch, dt, a_log, d_skip)
+    tol = 6e-2 if dtype == jnp.bfloat16 else 5e-4
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=tol)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=tol)
+
+
+def test_ssd_state_continuation():
+    """Scanning two halves with carried state == scanning the whole."""
+    from repro.models.ssm import ssd_chunked
+    B, S, H, P, N = 1, 64, 2, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    xh = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    bh = jax.random.normal(ks[1], (B, S, N)) * 0.5
+    ch = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)) - 2.0)
+    a_log = jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32))
+    d = jnp.ones((H,))
+    y_all, f_all = ssd_chunked(xh, bh, ch, dt, a_log, d, 16)
+    h_ = S // 2
+    y1, f1 = ssd_chunked(xh[:, :h_], bh[:, :h_], ch[:, :h_], dt[:, :h_],
+                         a_log, d, 16)
+    y2, f2 = ssd_chunked(xh[:, h_:], bh[:, h_:], ch[:, h_:], dt[:, h_:],
+                         a_log, d, 16, initial_state=f1)
+    np.testing.assert_allclose(np.asarray(y_all[:, h_:]), np.asarray(y2),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f_all), np.asarray(f2), atol=1e-4)
+
+
+# -------------------------------------------------------------- swa_prefill
+@pytest.mark.parametrize("B,Hq,Hkv,S,hd,window,dtype,softcap", [
+    (2, 4, 2, 256, 64, GLOBAL, jnp.float32, None),
+    (2, 4, 2, 256, 64, 64, jnp.float32, None),
+    (1, 8, 2, 256, 32, 100, jnp.float32, None),
+    (2, 4, 4, 200, 64, 64, jnp.float32, None),          # pad path
+    (2, 4, 2, 256, 64, 64, jnp.bfloat16, 50.0),
+])
+def test_swa_prefill_matches_ref(B, Hq, Hkv, S, hd, window, dtype, softcap):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd), jnp.float32).astype(dtype)
+    o1 = swa_attention(q, k, v, window=window, bq=64, bk=64,
+                       softcap=softcap).astype(jnp.float32)
+    o2 = swa_attention_ref(q, k, v, window, softcap)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=tol)
+
+
+def test_swa_matches_model_flash_path():
+    """Kernel == the pure-jnp flash used by the model stack (same geometry)."""
+    import repro.models.attention as A
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(name="t", arch_type="dense", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64)
+    B, S, hd = 1, 128, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, 4, S, hd))
+    k = jax.random.normal(ks[1], (B, 2, S, hd))
+    v = jax.random.normal(ks[2], (B, 2, S, hd))
+    o_kernel = swa_attention(q, k, v, window=32, bq=32, bk=32)
+    qf = q.transpose(0, 2, 1, 3).reshape(B, S, 2, 2, hd)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    o_flash, _ = A._flash_attention(qf, k.transpose(0, 2, 1, 3),
+                                    v.transpose(0, 2, 1, 3), pos, cfg, 32,
+                                    None, False, block=32)
+    o_flash = o_flash.reshape(B, S, 4, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_flash),
+                               atol=2e-5)

@@ -1,0 +1,97 @@
+"""Unit + property tests for KMeans layer clustering and Algorithm-1 budgets."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocation import allocate, uniform_plan
+from repro.core.kmeans import kmeans_1d, kmeans_1d_jax
+
+
+def test_kmeans_three_groups():
+    x = np.concatenate([np.full(3, 0.2), np.full(10, 0.55), np.full(19, 0.93)])
+    lab, cen = kmeans_1d(x, k=3)
+    assert (lab[:3] == 0).all() and (lab[3:13] == 1).all() and (lab[13:] == 2).all()
+    assert cen[0] < cen[1] < cen[2]
+
+
+def test_kmeans_jax_matches_numpy():
+    rng = np.random.RandomState(0)
+    for _ in range(5):
+        x = rng.rand(32)
+        l1, _ = kmeans_1d(x)
+        l2, _ = kmeans_1d_jax(x)
+        assert (np.asarray(l2) == l1).all()
+
+
+def test_kmeans_degenerate_inputs():
+    lab, _ = kmeans_1d(np.array([0.5, 0.5, 0.5, 0.5]), k=3)
+    assert lab.shape == (4,)
+    lab2, _ = kmeans_1d(np.array([0.1, 0.9]), k=3)   # n < k
+    assert lab2.shape == (2,)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n=st.integers(3, 96),
+    b_init=st.integers(64, 8192),
+    p=st.floats(0.05, 0.95),
+    seed=st.integers(0, 1000),
+)
+def test_allocation_conserves_budget(n, b_init, p, seed):
+    """Algorithm 1 invariant: total budget never grows, slack bounded by
+    bucket quantization."""
+    rng = np.random.RandomState(seed)
+    cos = np.clip(rng.normal(0.7, 0.2, n), 0, 1)
+    plan = allocate(cos, b_init, p=p, bucket=16, min_budget=16)
+    assert plan.n_layers == n
+    assert plan.total <= n * b_init + n * 16          # min_budget floor slack
+    # every layer got one of exactly two budgets
+    assert set(plan.budgets.tolist()) <= {plan.b_small, plan.b_big}
+
+
+@settings(max_examples=100, deadline=None)
+@given(n=st.integers(3, 96), seed=st.integers(0, 100))
+def test_allocation_squeezes_highest_similarity(n, seed):
+    """G3 (highest cosine sim) layers must get the SMALL budget."""
+    rng = np.random.RandomState(seed)
+    cos = np.clip(rng.normal(0.5, 0.25, n), 0, 1)
+    plan = allocate(cos, 1024, p=0.3, bucket=16)
+    if plan.p == 1.0:      # degenerate clustering fallback
+        return
+    small_sims = [cos[i] for i, s in enumerate(plan.is_small) if s]
+    big_sims = [cos[i] for i, s in enumerate(plan.is_small) if not s]
+    assert min(small_sims) >= max(big_sims) - 1e-9
+    assert plan.b_small <= plan.b_big
+
+
+def test_uniform_plan():
+    plan = uniform_plan(8, 512)
+    assert plan.total == 8 * 512
+    assert plan.n_small == 0
+
+
+def test_allocate_p1_is_uniform():
+    plan = allocate(np.linspace(0, 1, 10), 256, p=1.0)
+    assert plan.b_small == plan.b_big == 256
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(4, 96), seed=st.integers(0, 200))
+def test_allocate_jax_matches_host(n, seed):
+    """On-device Algorithm 1 == host Algorithm 1 (pre-quantization)."""
+    import jax
+    from repro.core.allocation import allocate_jax
+
+    rng = np.random.RandomState(seed)
+    cos = np.clip(rng.normal(0.6, 0.25, n), 0, 1)
+    budgets, is_small = jax.jit(
+        lambda c: allocate_jax(c, 1024, p=0.3))(cos)
+    budgets = np.asarray(budgets)
+    is_small = np.asarray(is_small)
+    # conservation (exact, pre-bucketing)
+    assert abs(budgets.sum() - n * 1024) < 1.0
+    host = allocate(cos, 1024, p=0.3, bucket=1, min_budget=1)
+    if host.p == 1.0:          # host degenerated -> jax must too
+        assert not is_small.any()
+    else:
+        assert (np.asarray(host.is_small) == is_small).all()

@@ -1,0 +1,30 @@
+"""Observation study: token x layer cosine matrix (paper Fig 2 / A.3)."""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.analysis.observe import cos_sim_matrix, important_set, task_stability
+from repro.configs import get_reduced
+from repro.models import init_params
+
+
+def test_cos_sim_matrix_shape_and_trend():
+    cfg = dataclasses.replace(get_reduced("llama2-7b"), n_layers=6)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 24)).astype(np.int32)
+    mat = cos_sim_matrix(params, cfg, toks)
+    assert mat.shape == (6, 24)
+    assert np.isfinite(mat).all()
+    per_layer = mat.mean(-1)
+    assert per_layer[-1] > per_layer[0]     # depth pattern (Fig 2)
+    imp = important_set(per_layer)
+    assert 0 < len(imp) < 6
+
+
+def test_task_stability_runs():
+    cfg = dataclasses.replace(get_reduced("mistral-7b"), n_layers=4)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    sets = task_stability(params, cfg, n_tasks=2, seq=24)
+    assert len(sets) == 2 and all(isinstance(s, set) for s in sets)

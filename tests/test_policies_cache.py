@@ -1,0 +1,137 @@
+"""Eviction-policy semantics over slot arenas (the paper's C_seq compressors)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import SlotCache, compact, pad_cache, write_token
+from repro.core.policies import PolicyConfig, keep_priority
+
+
+def _arena(L=1, B=1, P=16, H=2, D=4, scores=None):
+    k = jnp.arange(L * B * P * H * D, dtype=jnp.float32).reshape(L, B, P, H, D)
+    pos = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32), (L, B, P))
+    sc = jnp.asarray(scores, jnp.float32).reshape(L, B, P) if scores is not None \
+        else jnp.zeros((L, B, P))
+    return k, k + 1, pos, sc
+
+
+def test_sliding_window_keeps_most_recent():
+    k, v, pos, sc = _arena(P=16)
+    c = compact(PolicyConfig("sliding_window"), k, v, pos, sc, budget=6, t=16)
+    assert list(np.asarray(c.pos[0, 0])) == [10, 11, 12, 13, 14, 15]
+
+
+def test_streaming_llm_keeps_sinks():
+    k, v, pos, sc = _arena(P=16)
+    c = compact(PolicyConfig("streaming_llm", n_sink=4), k, v, pos, sc,
+                budget=6, t=16)
+    assert list(np.asarray(c.pos[0, 0])) == [0, 1, 2, 3, 14, 15]
+
+
+def test_h2o_keeps_heavy_hitters_plus_recent():
+    scores = np.zeros(16)
+    scores[[2, 5]] = 10.0                       # heavy hitters
+    k, v, pos, sc = _arena(P=16, scores=scores)
+    c = compact(PolicyConfig("h2o", recent_frac=0.5), k, v, pos, sc,
+                budget=8, t=16)
+    kept = set(np.asarray(c.pos[0, 0]).tolist())
+    assert {2, 5} <= kept                        # heavy hitters survive
+    assert {13, 14, 15} <= kept                  # recency window survives
+
+
+def test_compact_gathers_kv_consistently():
+    k, v, pos, sc = _arena(P=8, H=1, D=2)
+    c = compact(PolicyConfig("sliding_window"), k, v, pos, sc, budget=3, t=8)
+    # the K rows must be the rows of the kept positions
+    kept = np.asarray(c.pos[0, 0])
+    expect = np.asarray(k[0, 0])[kept]
+    assert np.allclose(np.asarray(c.k[0, 0]), expect)
+
+
+def test_write_token_fills_empty_first():
+    cache = SlotCache(
+        k=jnp.zeros((1, 4, 2, 2)), v=jnp.zeros((1, 4, 2, 2)),
+        pos=jnp.asarray([[0, 1, -1, -1]], jnp.int32),
+        score=jnp.zeros((1, 4)))
+    out = write_token(PolicyConfig("sliding_window"), cache,
+                      jnp.ones((1, 1, 2, 2)), jnp.ones((1, 1, 2, 2)),
+                      jnp.asarray([7]), jnp.zeros((1, 5)))
+    p = set(np.asarray(out.pos[0]).tolist())
+    assert 7 in p and 0 in p and 1 in p and -1 in p
+
+
+def test_write_token_evicts_oldest_when_full():
+    cache = SlotCache(
+        k=jnp.zeros((1, 4, 2, 2)), v=jnp.zeros((1, 4, 2, 2)),
+        pos=jnp.asarray([[3, 5, 4, 6]], jnp.int32),
+        score=jnp.zeros((1, 4)))
+    out = write_token(PolicyConfig("sliding_window"), cache,
+                      jnp.ones((1, 1, 2, 2)), jnp.ones((1, 1, 2, 2)),
+                      jnp.asarray([7]), jnp.zeros((1, 5)))
+    p = np.asarray(out.pos[0]).tolist()
+    assert 3 not in p and 7 in p
+
+
+def test_h2o_score_accumulation():
+    cache = SlotCache(
+        k=jnp.zeros((1, 4, 1, 1)), v=jnp.zeros((1, 4, 1, 1)),
+        pos=jnp.asarray([[0, 1, 2, 3]], jnp.int32),
+        score=jnp.asarray([[1.0, 0.1, 1.0, 1.0]]))
+    probs = jnp.asarray([[0.2, 0.0, 0.2, 0.2, 0.4]])  # last = new token
+    out = write_token(PolicyConfig("h2o", recent_frac=0.25), cache,
+                      jnp.ones((1, 1, 1, 1)), jnp.ones((1, 1, 1, 1)),
+                      jnp.asarray([4]), probs)
+    p = np.asarray(out.pos[0]).tolist()
+    assert 1 not in p                 # lowest accumulated score, not protected
+    assert 4 in p
+    new_slot = p.index(4)
+    assert np.isclose(np.asarray(out.score[0])[new_slot], 0.4)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    policy=st.sampled_from(["sliding_window", "streaming_llm", "h2o"]),
+    budget=st.integers(4, 16),
+    steps=st.integers(1, 12),
+    seed=st.integers(0, 99),
+)
+def test_arena_invariants_under_decode(policy, budget, steps, seed):
+    """Property: positions stay unique & valid; arena never exceeds budget;
+    the newest token is always present after a write."""
+    rng = np.random.RandomState(seed)
+    pol = PolicyConfig(policy, n_sink=2)      # sinks < min budget
+    P0 = budget
+    pos0 = np.arange(P0)
+    cache = SlotCache(
+        k=jnp.zeros((1, P0, 1, 2)), v=jnp.zeros((1, P0, 1, 2)),
+        pos=jnp.asarray(pos0[None], jnp.int32),
+        score=jnp.asarray(rng.rand(1, P0).astype(np.float32)))
+    t = P0
+    for _ in range(steps):
+        probs = rng.rand(1, cache.pos.shape[-1] + 1).astype(np.float32)
+        cache = write_token(pol, cache, jnp.ones((1, 1, 1, 2)),
+                            jnp.ones((1, 1, 1, 2)), jnp.asarray([t]),
+                            jnp.asarray(probs))
+        ps = np.asarray(cache.pos[0])
+        valid = ps[ps >= 0]
+        assert len(set(valid.tolist())) == len(valid)      # unique
+        assert t in ps                                      # newest present
+        assert len(ps) == P0                                # fixed arena
+        if policy == "streaming_llm":
+            assert 0 in ps and 1 in ps                      # sinks survive
+        t += 1
+
+
+def test_sink_h2o_protects_both_sets():
+    """Beyond-paper composite policy: sinks AND heavy hitters AND recents."""
+    scores = np.zeros(16)
+    scores[[5, 7]] = 10.0
+    k, v, pos, sc = _arena(P=16, scores=scores)
+    c = compact(PolicyConfig("sink_h2o", n_sink=2, recent_frac=0.25), k, v,
+                pos, sc, budget=8, t=16)
+    kept = set(np.asarray(c.pos[0, 0]).tolist())
+    assert {0, 1} <= kept          # sinks
+    assert {5, 7} <= kept          # heavy hitters
+    assert 15 in kept              # recency window (0.25 * 8 = 2 -> pos > 14)

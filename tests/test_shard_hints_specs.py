@@ -1,0 +1,55 @@
+"""Sharding hints + launch specs behave sanely without a mesh (CPU paths)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch.specs import SHAPES, dryrun_plan
+from repro.models.shard_hints import hint
+
+
+def test_hint_is_noop_without_mesh():
+    x = jnp.ones((8, 16))
+    y = hint(x, {0: "batch", 1: "model"})
+    assert (np.asarray(y) == 1).all()
+    assert y.shape == x.shape
+
+
+def test_hint_inside_jit_without_mesh():
+    f = jax.jit(lambda x: hint(x, {0: "model"}) * 2)
+    assert float(f(jnp.ones((4, 4))).sum()) == 32.0
+
+
+def test_shapes_table():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+    assert SHAPES["train_4k"].kind == "train"
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_dryrun_plans_all_archs():
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for seq in (32_768, 524_288):
+            full = dryrun_plan(cfg, seq, "full")
+            sq = dryrun_plan(cfg, seq, "squeeze")
+            assert full.total >= sq.total
+            if cfg.has_attention and full.n_layers > 1:
+                # squeeze budgets shard on the 16-way data axis (long_500k)
+                assert sq.b_small % 16 == 0 and sq.b_big % 16 == 0
+
+
+def test_padded_vocab_masking():
+    import dataclasses
+    from repro.models import ModelConfig, forward, init_params
+    cfg = ModelConfig(name="pv", arch_type="dense", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=50,
+                      padded_vocab=64, dtype="float32", param_dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    assert params["embed"].shape[0] == 64
+    toks = jnp.zeros((1, 4), jnp.int32)
+    out = forward(params, cfg, tokens=toks)
+    logits = np.asarray(out.logits)
+    assert logits.shape[-1] == 64
+    assert (logits[..., 50:] <= -1e29).all()      # pad region masked
+    assert (logits[..., :50] > -1e29).all()
