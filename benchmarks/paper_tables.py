@@ -42,14 +42,16 @@ def fig2_layer_importance(quick=False):
     return out
 
 
-def fig3_accuracy_vs_budget(quick=False):
+def fig3_accuracy_vs_budget(quick=False, policy="sliding_window"):
     params, cfg = trained_model()
     prompts = eval_prompts(4 if quick else 8)
     fracs = (0.3, 0.5) if quick else (0.2, 0.3, 0.5, 0.7)
     out = []
     for frac in fracs:
-        u = decode_fidelity(params, cfg, prompts, "uniform", budget_frac=frac)
-        s = decode_fidelity(params, cfg, prompts, "squeeze", budget_frac=frac)
+        u = decode_fidelity(params, cfg, prompts, "uniform", policy=policy,
+                            budget_frac=frac)
+        s = decode_fidelity(params, cfg, prompts, "squeeze", policy=policy,
+                            budget_frac=frac)
         out.append(row(
             f"fig3_budget_{int(frac*100)}pct",
             u["wall"] * 1e6,
@@ -59,7 +61,7 @@ def fig3_accuracy_vs_budget(quick=False):
     return out
 
 
-def table2_iso_accuracy(quick=False):
+def table2_iso_accuracy(quick=False, policy="sliding_window"):
     """Smallest budget reaching >= 90% agreement with full cache."""
     params, cfg = trained_model()
     prompts = eval_prompts(4)
@@ -67,7 +69,8 @@ def table2_iso_accuracy(quick=False):
     for mode in ("uniform", "squeeze"):
         best = None
         for frac in (0.2, 0.3, 0.4, 0.5, 0.7, 0.9):
-            r = decode_fidelity(params, cfg, prompts, mode, budget_frac=frac)
+            r = decode_fidelity(params, cfg, prompts, mode, policy=policy,
+                                budget_frac=frac)
             if r["agreement"] >= 0.9:
                 best = (frac, r)
                 break
@@ -104,14 +107,15 @@ def fig4_memory_per_token(quick=False):
     return out
 
 
-def table3_throughput(quick=False):
+def table3_throughput(quick=False, policy="sliding_window"):
     params, cfg = trained_model()
     out = []
     sizes = (1, 4) if quick else (1, 4, 8, 16)
     for bs in sizes:
         prompts = eval_prompts(bs, 96, cfg.vocab_size)
-        f = decode_fidelity(params, cfg, prompts, "full")
-        s = decode_fidelity(params, cfg, prompts, "squeeze", budget_frac=0.2)
+        f = decode_fidelity(params, cfg, prompts, "full", policy=policy)
+        s = decode_fidelity(params, cfg, prompts, "squeeze", policy=policy,
+                            budget_frac=0.2)
         out.append(row(
             f"table3_throughput_b{bs}",
             f["decode_seconds"] * 1e6,
@@ -165,13 +169,13 @@ def table45_overhead(quick=False):
     ]
 
 
-def a2_p_sweep(quick=False):
+def a2_p_sweep(quick=False, policy="sliding_window"):
     params, cfg = trained_model()
     prompts = eval_prompts(4)
     ps = (0.2, 0.5, 0.9) if quick else (0.1, 0.2, 0.35, 0.5, 0.7, 0.9)
     out = []
     for p in ps:
-        r = decode_fidelity(params, cfg, prompts, "squeeze",
+        r = decode_fidelity(params, cfg, prompts, "squeeze", policy=policy,
                             budget_frac=0.3, p=p)
         out.append(row(f"a2_p_{p}", r["wall"] * 1e6,
                        f"agree={r['agreement']:.3f};"

@@ -1,33 +1,52 @@
 """Benchmark harness: one function per paper table/figure + kernel micro-
-benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
+benchmarks + serving-loop traces.  Prints ``name,us_per_call,derived`` CSV
+rows.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig3] \
+        [--policy sink_h2o]
+
+`--policy` accepts every registered sequence-wise policy
+(repro.core.policies.POLICIES) and is forwarded to each benchmark that
+exercises the decode path.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
 
 def main() -> None:
+    from repro.core import POLICIES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark function names")
+    ap.add_argument("--policy", default="sliding_window",
+                    choices=list(POLICIES),
+                    help="sequence-wise policy for decode benchmarks")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, paper_tables
-    fns = list(paper_tables.ALL) + list(kernel_bench.ALL)
+    from benchmarks import kernel_bench, paper_tables, serving_bench
+    fns = list(paper_tables.ALL) + list(kernel_bench.ALL) \
+        + list(serving_bench.ALL)
     if args.only:
         fns = [f for f in fns if args.only in f.__name__]
 
     print("name,us_per_call,derived")
     failures = 0
     for fn in fns:
+        kw = {"quick": args.quick}
+        if "policy" in inspect.signature(fn).parameters:
+            kw["policy"] = args.policy
         try:
-            for r in fn(quick=args.quick):
-                print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"",
+            for r in fn(**kw):
+                derived = r["derived"]
+                if "policy" in kw:     # make policy sweeps attributable
+                    derived = f"{derived};policy={args.policy}"
+                print(f"{r['name']},{r['us_per_call']:.1f},\"{derived}\"",
                       flush=True)
         except Exception:  # noqa: BLE001
             failures += 1

@@ -1,0 +1,150 @@
+"""Serving-loop benchmark: wave vs continuous batching under a Poisson trace.
+
+Beyond the paper's Table 3 (fixed-shape batches): requests arrive with
+exponential inter-arrival gaps and *heterogeneous* generation lengths, the
+regime where lock-step waves waste decode steps — every wave member pays
+``max(max_new)`` steps and pad rows replicate request 0 — while the
+continuous engine retires rows on-device and recycles their slots.
+
+Reported per scheduler: total wall-clock to drain the trace, mean/p95
+request latency (arrival -> completion), and emitted tokens/s.  Both
+schedulers are warmed on the same shapes first so compile time is excluded.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import PolicyConfig
+from repro.models import ModelConfig, init_params
+from repro.serving import (ContinuousConfig, ContinuousScheduler,
+                           EngineConfig, SchedulerConfig, WaveScheduler)
+
+TRACE_CFG = ModelConfig(
+    name="trace-4l", arch_type="dense", n_layers=4, d_model=128,
+    n_heads=8, n_kv_heads=4, d_ff=256, vocab_size=256,
+    dtype="float32", param_dtype="float32")
+
+PROMPT_BUCKET = 32
+MAX_NEW_CAP = 48
+SHORT_NEW, LONG_NEW, P_LONG = 4, MAX_NEW_CAP, 0.25
+
+
+def _trace(n_req: int, seed: int = 7):
+    """(prompt, max_new, arrival_s) triples; Poisson arrivals, one prompt
+    bucket, bimodal max_new (chat-style: mostly short replies, a quarter
+    long generations).  With wave_size=4, ~68% of waves contain a long
+    request, so the whole wave pays ~LONG_NEW steps for a ~15-step mean —
+    the quantization continuous batching removes."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(scale=0.01, size=n_req)     # ~100 req/s offered
+    arrivals = np.cumsum(gaps)
+    out = []
+    for i in range(n_req):
+        plen = int(rng.integers(PROMPT_BUCKET // 2, PROMPT_BUCKET + 1))
+        max_new = LONG_NEW if rng.random() < P_LONG else SHORT_NEW
+        out.append((rng.integers(0, TRACE_CFG.vocab_size, (plen,)).astype(
+            np.int32), max_new, float(arrivals[i])))
+    return out
+
+
+def _drive(sched, trace, step_fn):
+    """Release requests at their arrival times, drain with `step_fn`."""
+    t0 = time.perf_counter()
+    pending = list(trace)
+    done = []
+    while pending or sched.queue or _n_inflight(sched):
+        now = time.perf_counter() - t0
+        while pending and pending[0][2] <= now:
+            prompt, max_new, _ = pending.pop(0)
+            sched.submit(prompt, max_new)
+        if sched.queue or _n_inflight(sched):
+            done.extend(step_fn(sched))
+        elif pending:
+            time.sleep(min(pending[0][2] - now, 1e-3))
+    wall = time.perf_counter() - t0
+    # latency_s is completion - submit, and submission happens at the
+    # simulated arrival instant, so this is arrival -> completion latency
+    lats = np.asarray([r.latency_s for r in done])
+    toks = sum(r.tokens.size for r in done)
+    return wall, lats, toks, done
+
+
+def _n_inflight(sched):
+    return sched.core.n_occupied if hasattr(sched, "core") else 0
+
+
+def _warm(sched, n=3):
+    rng = np.random.default_rng(0)
+    for _ in range(n):
+        sched.submit(rng.integers(0, TRACE_CFG.vocab_size,
+                                  (PROMPT_BUCKET,)).astype(np.int32),
+                     MAX_NEW_CAP)
+    sched.run_until_empty()
+
+
+def _best_of(sched, trace, step_fn, n_req, trials):
+    """Repeat the drain (same warmed scheduler, queue empties every trial)
+    and keep the fastest — real-time arrival release makes single passes
+    noisy on a shared CPU.  Lane utilization is snapshotted per trial (the
+    scheduler counters accumulate across warm-up and trials) and reported
+    for the kept trial."""
+    best = None
+    for _ in range(trials):
+        r0, u0 = sched.row_steps, sched.useful_row_steps
+        wall, lats, toks, done = _drive(sched, trace, step_fn)
+        util = (sched.useful_row_steps - u0) / max(sched.row_steps - r0, 1)
+        assert len(done) == n_req
+        if best is None or wall < best[0]:
+            best = (wall, lats, toks, util)
+    return best
+
+
+def serving_trace(quick=False, policy="sliding_window"):
+    # the trace length stays fixed (smaller samples of the bimodal max_new
+    # mix are unrepresentative); quick just takes fewer timing trials
+    n_req = 24
+    trials = 2 if quick else 3
+    params = init_params(jax.random.PRNGKey(0), TRACE_CFG)
+    ecfg = EngineConfig(mode="uniform", policy=PolicyConfig(policy),
+                        budget_abs=PROMPT_BUCKET // 2, bucket=4, min_budget=4)
+    trace = _trace(n_req)
+
+    wave = WaveScheduler(params, TRACE_CFG, ecfg, SchedulerConfig(
+        wave_size=4, prompt_bucket=PROMPT_BUCKET, max_wave_new=MAX_NEW_CAP))
+    _warm(wave)
+    w_wall, w_lat, w_toks, w_util = _best_of(
+        wave, trace, lambda s: s.run_wave(), n_req, trials)
+
+    cont = ContinuousScheduler(params, TRACE_CFG, ecfg, ContinuousConfig(
+        max_concurrency=4, prompt_bucket=PROMPT_BUCKET,
+        max_prompt_len=PROMPT_BUCKET, max_new_cap=MAX_NEW_CAP,
+        sync_every=4))
+    _warm(cont)
+    c_wall, c_lat, c_toks, c_util = _best_of(
+        cont, trace, lambda s: s.poll(), n_req, trials)
+    # decode-lane utilization — the fraction of batched decode-row-steps a
+    # live request actually wanted — is free of wall-clock measurement
+    # noise (though wave composition still depends on arrival interleaving)
+    return [
+        row("serving_trace_wave", w_wall * 1e6,
+            f"wall_ms={w_wall*1e3:.1f};mean_lat_ms={w_lat.mean()*1e3:.1f};"
+            f"p95_lat_ms={np.percentile(w_lat, 95)*1e3:.1f};"
+            f"tok_s={w_toks/max(w_wall, 1e-9):.1f};"
+            f"lane_util={w_util:.2f}"),
+        row("serving_trace_continuous", c_wall * 1e6,
+            f"wall_ms={c_wall*1e3:.1f};mean_lat_ms={c_lat.mean()*1e3:.1f};"
+            f"p95_lat_ms={np.percentile(c_lat, 95)*1e3:.1f};"
+            f"tok_s={c_toks/max(c_wall, 1e-9):.1f};"
+            f"lane_util={c_util:.2f}"),
+        row("serving_trace_speedup", 0.0,
+            f"wallclock_speedup={w_wall/max(c_wall, 1e-9):.2f}x;"
+            f"lane_util_gain={c_util/max(w_util, 1e-9):.2f}x;"
+            f"n_req={n_req};max_new={SHORT_NEW}|{LONG_NEW}@p{P_LONG}"),
+    ]
+
+
+ALL = [serving_trace]

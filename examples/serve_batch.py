@@ -3,34 +3,29 @@
     PYTHONPATH=src python examples/serve_batch.py [--batches 1 4 8]
 
 The paper's Table 3 experiment shape: fixed prompt/gen length, growing batch
-size, measuring tokens/s and KV memory.  Runs a reduced model on CPU; on a
-TPU mesh the same Engine code runs under the production sharding
-(launch/dryrun.py proves the lowering).
+size, measuring tokens/s and KV memory.  A second section serves the same
+requests with *heterogeneous* generation lengths through both schedulers —
+the regime where token-level continuous batching (slot recycling) beats
+lock-step waves.  Runs a reduced model on CPU; on a TPU mesh the same Engine
+code runs under the production sharding (launch/dryrun.py proves the
+lowering).
 """
 import argparse
 import dataclasses
+import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core import PolicyConfig, plan_cache_bytes
+from repro.core import POLICIES, PolicyConfig, plan_cache_bytes
 from repro.models import init_params
-from repro.serving import Engine, EngineConfig
+from repro.serving import (ContinuousConfig, ContinuousScheduler, Engine,
+                           EngineConfig, SchedulerConfig, WaveScheduler)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--batches", type=int, nargs="+", default=[1, 4, 8])
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen-len", type=int, default=32)
-    ap.add_argument("--policy", default="sliding_window")
-    args = ap.parse_args()
-
-    cfg = dataclasses.replace(get_reduced("mistral-7b"), n_layers=4)
-    params = init_params(jax.random.PRNGKey(0), cfg)
+def table3_section(params, cfg, args):
     rng = np.random.default_rng(0)
-
     print(f"{'batch':>5} {'mode':>8} {'tok/s':>9} {'KV slots':>9} {'KV MB':>8}")
     for bs in args.batches:
         prompt = rng.integers(0, cfg.vocab_size,
@@ -44,6 +39,57 @@ def main():
             mb = plan_cache_bytes(r.plan, bs, cfg.n_kv_heads, cfg.hd) / 1e6
             print(f"{bs:>5} {mode:>8} {r.tokens_per_second:>9.1f} "
                   f"{r.cache_slots:>9} {mb:>8.2f}")
+
+
+def continuous_section(params, cfg, args):
+    """Same requests, heterogeneous max_new: waves pay max(max_new) per
+    member, continuous retires rows early and recycles their slots."""
+    n_req = max(args.batches) * 4
+    rng = np.random.default_rng(1)
+    reqs = [(rng.integers(0, cfg.vocab_size, (args.prompt_len,)),
+             int(rng.integers(2, args.gen_len + 1))) for _ in range(n_req)]
+    ecfg = EngineConfig(mode="uniform", policy=PolicyConfig(args.policy),
+                        budget_abs=args.prompt_len // 2, bucket=4,
+                        min_budget=4)
+
+    def drain(sched):
+        for p, mn in reqs:
+            sched.submit(p, max_new=mn)
+        sched.run_until_empty()          # warm the executables
+        for p, mn in reqs:
+            sched.submit(p, max_new=mn)
+        t0 = time.perf_counter()
+        done = sched.run_until_empty()
+        wall = time.perf_counter() - t0
+        toks = sum(r.tokens.size for r in done)
+        return wall, toks
+
+    wave = WaveScheduler(params, cfg, ecfg, SchedulerConfig(
+        wave_size=4, prompt_bucket=args.prompt_len,
+        max_wave_new=args.gen_len))
+    cont = ContinuousScheduler(params, cfg, ecfg, ContinuousConfig(
+        max_concurrency=4, prompt_bucket=args.prompt_len,
+        max_prompt_len=args.prompt_len, max_new_cap=args.gen_len))
+    print(f"\nheterogeneous max_new (2..{args.gen_len}), {n_req} requests:")
+    print(f"{'scheduler':>11} {'wall ms':>9} {'tok/s':>9}")
+    for name, sched in (("wave", wave), ("continuous", cont)):
+        wall, toks = drain(sched)
+        print(f"{name:>11} {wall*1e3:>9.1f} {toks/max(wall,1e-9):>9.1f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batches", type=int, nargs="+", default=[1, 4, 8])
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--policy", default="sliding_window",
+                    choices=list(POLICIES))
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_reduced("mistral-7b"), n_layers=4)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    table3_section(params, cfg, args)
+    continuous_section(params, cfg, args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# CPU CI: tier-1 tests + the quickstart example.
+#
+#     scripts/ci.sh [--with-benchmarks]
+#
+# Mirrors the tier-1 verify command from ROADMAP.md exactly, then proves the
+# end-to-end serving flow (prefill -> KMeans/Algorithm-1 -> tiered decode)
+# still runs.  `--with-benchmarks` additionally drains the quick benchmark
+# suite (several minutes on CPU).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1: pytest =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+echo "== quickstart example =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py
+
+if [[ "${1:-}" == "--with-benchmarks" ]]; then
+    echo "== quick benchmarks =="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick
+fi
+
+echo "CI OK"

@@ -84,6 +84,36 @@ def pad_cache(cache: SlotCache, slots: int) -> SlotCache:
     )
 
 
+def insert_row(arena: SlotCache, row_cache: SlotCache, row) -> SlotCache:
+    """Write one request's [L, 1, S, ...] cache into batch row `row`.
+
+    `row` may be a traced int32 scalar: continuous-batching admission compiles
+    ONE insert executable per (max_concurrency, tier size) and reuses it for
+    every slot — admitting a request never retraces the decode step.
+    """
+    def upd(a, u):
+        return jax.lax.dynamic_update_slice_in_dim(a, u.astype(a.dtype),
+                                                   row, axis=1)
+    return SlotCache(*(upd(a, u) for a, u in zip(tuple(arena),
+                                                 tuple(row_cache))))
+
+
+def clear_row(arena: SlotCache, row) -> SlotCache:
+    """Mark every slot of batch row `row` empty (pos -1, score 0).
+
+    Called at retirement so a recycled row carries no stale positions; the
+    k/v bits are left in place — empty slots are masked out of attention by
+    `pos < 0`, so only the metadata needs resetting.
+    """
+    L, _, S = arena.pos.shape
+    return arena._replace(
+        pos=jax.lax.dynamic_update_slice_in_dim(
+            arena.pos, jnp.full((L, 1, S), -1, arena.pos.dtype), row, axis=1),
+        score=jax.lax.dynamic_update_slice_in_dim(
+            arena.score, jnp.zeros((L, 1, S), arena.score.dtype), row, axis=1),
+    )
+
+
 def write_token(
     pol: PolicyConfig,
     layer_cache: SlotCache,    # UNstacked: k/v [B, S, Hkv, hd], pos/score [B, S]

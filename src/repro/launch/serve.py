@@ -3,55 +3,34 @@
     PYTHONPATH=src python -m repro.launch.serve --arch mistral-7b --reduced \
         --mode squeeze --policy sliding_window --budget-frac 0.4
 
+    # token-level continuous batching over the persistent budget-tier arenas
+    PYTHONPATH=src python -m repro.launch.serve --arch mistral-7b --reduced \
+        --batching continuous --batch 6 --max-concurrency 4
+
 Loads a config (reduced for CPU; full configs serve under the production
 mesh proven by launch/dryrun.py), optionally restores a checkpoint, and
-runs batched generation with the requested KV-cache mode.
+runs batched generation with the requested KV-cache mode.  `--policy`
+accepts every registered sequence-wise policy (repro.core.policies.POLICIES),
+including the composed `sink_h2o`.
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
 
 from repro import checkpoint as ckpt
 from repro.configs import get_config, get_reduced
-from repro.core import PolicyConfig
+from repro.core import POLICIES, PolicyConfig
 from repro.models import init_params
-from repro.serving import Engine, EngineConfig, SamplerConfig
+from repro.serving import (ContinuousConfig, ContinuousScheduler, Engine,
+                           EngineConfig, SamplerConfig)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="mistral-7b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--mode", default="squeeze",
-                    choices=["full", "uniform", "squeeze"])
-    ap.add_argument("--policy", default="sliding_window",
-                    choices=["sliding_window", "streaming_llm", "h2o"])
-    ap.add_argument("--budget-frac", type=float, default=0.4)
-    ap.add_argument("--p", type=float, default=0.35)
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--max-new", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    params = init_params(jax.random.PRNGKey(args.seed), cfg)
-    if args.ckpt_dir and (s := ckpt.latest_step(args.ckpt_dir)) is not None:
-        params = ckpt.restore(args.ckpt_dir, s, params)
-        print(f"restored step {s} from {args.ckpt_dir}")
-
-    eng = Engine(params, cfg, EngineConfig(
-        mode=args.mode, policy=PolicyConfig(args.policy),
-        budget_frac=args.budget_frac, p=args.p, max_new_tokens=args.max_new,
-        bucket=16 if not args.reduced else 4,
-        min_budget=16 if not args.reduced else 4,
-        sampler=SamplerConfig(temperature=args.temperature)))
-
+def _run_oneshot(params, cfg, ecfg, args):
+    eng = Engine(params, cfg, ecfg)
     rng = np.random.default_rng(args.seed)
     prompt = rng.integers(0, cfg.vocab_size,
                           (args.batch, args.prompt_len)).astype(np.int32)
@@ -67,6 +46,79 @@ def main():
           f"| {r.tokens_per_second:.1f} tok/s")
     for b in range(min(args.batch, 2)):
         print(f"out[{b}]: {r.tokens[b].tolist()}")
+
+
+def _run_continuous(params, cfg, ecfg, args):
+    """Heterogeneous-length traffic through the persistent-arena core."""
+    bucket = args.prompt_len  # one prefill bucket = the requested length
+    ccfg = ContinuousConfig(
+        max_concurrency=args.max_concurrency, prompt_bucket=bucket,
+        max_prompt_len=bucket, max_new_cap=args.max_new,
+        sync_every=args.sync_every)
+    sched = ContinuousScheduler(params, cfg, ecfg, ccfg, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    t0 = time.perf_counter()
+    for i in range(args.batch):
+        plen = int(rng.integers(max(4, args.prompt_len // 2),
+                                args.prompt_len + 1))
+        max_new = int(rng.integers(max(2, args.max_new // 4),
+                                   args.max_new + 1))
+        sched.submit(rng.integers(0, cfg.vocab_size, (plen,)), max_new)
+    n_tok = 0
+    while sched.queue or sched.core.n_occupied:
+        for r in sched.poll():     # stream completions as they finish
+            n_tok += r.tokens.size
+            print(f"rid={r.rid} done: {r.tokens.size} tokens, "
+                  f"latency {r.latency_s*1e3:.1f}ms")
+    wall = time.perf_counter() - t0
+    plan = sched.core.plan
+    print(f"mode={args.mode} policy={args.policy} "
+          f"concurrency={args.max_concurrency}")
+    if plan is not None:     # no plan until a first request calibrates it
+        print(f"plan: {plan.n_big}x{plan.b_big} + "
+              f"{plan.n_small}x{plan.b_small} slots per row")
+    print(f"{args.batch} requests, {n_tok} tokens in {wall*1e3:.1f}ms "
+          f"({n_tok/max(wall, 1e-9):.1f} tok/s incl. compile)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mistral-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--mode", default="squeeze",
+                    choices=["full", "uniform", "squeeze"])
+    ap.add_argument("--policy", default="sliding_window",
+                    choices=list(POLICIES))
+    ap.add_argument("--batching", default="oneshot",
+                    choices=["oneshot", "continuous"])
+    ap.add_argument("--max-concurrency", type=int, default=4)
+    ap.add_argument("--sync-every", type=int, default=4)
+    ap.add_argument("--budget-frac", type=float, default=0.4)
+    ap.add_argument("--p", type=float, default=0.35)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    if args.ckpt_dir and (s := ckpt.latest_step(args.ckpt_dir)) is not None:
+        params = ckpt.restore(args.ckpt_dir, s, params)
+        print(f"restored step {s} from {args.ckpt_dir}")
+
+    ecfg = EngineConfig(
+        mode=args.mode, policy=PolicyConfig(args.policy),
+        budget_frac=args.budget_frac, p=args.p, max_new_tokens=args.max_new,
+        bucket=16 if not args.reduced else 4,
+        min_budget=16 if not args.reduced else 4,
+        sampler=SamplerConfig(temperature=args.temperature))
+    if args.batching == "continuous":
+        _run_continuous(params, cfg, ecfg, args)
+    else:
+        _run_oneshot(params, cfg, ecfg, args)
 
 
 if __name__ == "__main__":

@@ -1,12 +1,17 @@
+from repro.serving.continuous import (Completed, ContinuousConfig,
+                                      ContinuousEngine, ContinuousState)
 from repro.serving.decode import DecodeState, make_tier_indices, serve_step
 from repro.serving.engine import Engine, EngineConfig, GenerationResult
-from repro.serving.prefill import PrefillOut, prefill
-from repro.serving.scheduler import Request, SchedulerConfig, WaveScheduler
+from repro.serving.prefill import PrefillOut, pad_prompt, pad_prompts, prefill
 from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.scheduler import (ContinuousScheduler, Request,
+                                     SchedulerConfig, WaveScheduler)
 
 __all__ = [
     "DecodeState", "make_tier_indices", "serve_step",
     "Engine", "EngineConfig", "GenerationResult",
-    "PrefillOut", "prefill", "SamplerConfig", "sample",
-    "Request", "SchedulerConfig", "WaveScheduler",
+    "PrefillOut", "prefill", "pad_prompt", "pad_prompts",
+    "SamplerConfig", "sample",
+    "Completed", "ContinuousConfig", "ContinuousEngine", "ContinuousState",
+    "ContinuousScheduler", "Request", "SchedulerConfig", "WaveScheduler",
 ]

@@ -1,0 +1,305 @@
+"""Continuous-batching serving core: persistent budget-tier arenas.
+
+The wave path (scheduler.py) decodes whole fixed-shape batches in lock-step:
+every request in a wave pays ``max(max_new)`` decode steps and pad rows burn
+compute.  This module is the token-level alternative (DESIGN.md §5):
+
+  * ONE persistent `DecodeState` holds `max_concurrency` request rows across
+    the two SqueezeAttention budget tiers; tier sizes are fixed once (from
+    the engine config, plus Algorithm-1 calibration on the first admitted
+    request in squeeze mode), so the decode step compiles exactly once.
+  * **Admission**: a request is prefilled alone (prompt bucketed, batch 1),
+    then one fused admit executable per bucket compacts it into the fixed
+    tier budgets (the same Algorithm-1 machinery the one-shot engine uses),
+    samples its first token and writes the row slice (`insert_row`) — the
+    row index is *traced*, so inserting into any slot reuses the executable
+    and never touches the decode step.
+  * **Retirement**: the decode step itself lowers a row's `active` flag when
+    it emits EOS or exhausts its token budget — liveness is decided on
+    device with no host round-trip in the hot loop.  The host reads the mask
+    only every `sync_every` steps, clears the retired row's slots
+    (`clear_row`) and recycles it.
+  * **Streaming**: completed requests are harvested at every sync point, so
+    short requests leave (and new ones enter) while long ones keep decoding.
+
+Retired rows still occupy SIMD lanes until recycled (dense batched compute
+cannot drop a row), but they stop extending their caches and — the actual
+throughput lever — their slots immediately host new requests instead of
+idling until the longest wave member finishes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocation import BudgetPlan
+from repro.core.cache import clear_row, empty_cache, insert_row
+from repro.serving.decode import DecodeState, make_tier_indices, serve_step
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.prefill import pad_prompt
+from repro.serving.sampler import sample
+
+
+@dataclasses.dataclass(frozen=True)
+class ContinuousConfig:
+    max_concurrency: int = 8      # persistent batch rows (compiled once)
+    prompt_bucket: int = 32       # admission prefill shape quantization
+    max_prompt_len: int = 128     # admission cap (sizes full-cache arenas)
+    max_new_cap: int = 64         # per-request max_new clamp (ditto)
+    sync_every: int = 4           # decode steps between host syncs
+
+
+class ContinuousState(NamedTuple):
+    """Carried across decode blocks; `dec.active` is the on-device liveness."""
+    dec: DecodeState
+    token: jnp.ndarray       # [B] int32 next input token per row
+    remaining: jnp.ndarray   # [B] int32 tokens each row may still emit
+    key: jnp.ndarray         # PRNG key (stochastic sampling only)
+
+
+@dataclasses.dataclass
+class Completed:
+    slot: int
+    tokens: np.ndarray       # [n_emitted] int32 (includes EOS if hit)
+    decode_steps: int        # steps this request spent in the decode loop
+
+
+class ContinuousEngine:
+    """Persistent-arena decode core.  Thin clients: `ContinuousScheduler`
+    (request queue + interleave loop) and the benchmarks."""
+
+    def __init__(self, params, cfg, ecfg: EngineConfig,
+                 ccfg: ContinuousConfig = ContinuousConfig(), seed: int = 0):
+        if cfg.is_ssm_only or cfg.is_hybrid:
+            raise NotImplementedError(
+                "continuous batching currently serves attention models; "
+                "SSM/hybrid rows need per-row recurrent-state insertion "
+                "(DESIGN.md §5)")
+        self.engine = Engine(params, cfg, ecfg)   # shared prefill/compaction
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.ccfg = ccfg
+        self.plan: Optional[BudgetPlan] = None
+        self.state: Optional[ContinuousState] = None
+        B = ccfg.max_concurrency
+        self._free: List[int] = list(range(B))
+        self._buf: List[List[int]] = [[] for _ in range(B)]
+        self._max_new = [0] * B
+        self._steps = [0] * B
+        self._occupied: List[int] = []
+        self._completed: List[Completed] = []
+        # decode-lane accounting (cf. WaveScheduler): every block burns
+        # max_concurrency rows per step; useful = rows that were live
+        self.row_steps = 0
+        self.useful_row_steps = 0
+        # distinct streams: admission first-token sampling (host side) vs
+        # the decode loop's per-step sampling key carried in the state —
+        # reusing one key would draw correlated samples on both sides
+        self._host_key, self._state_key = jax.random.split(
+            jax.random.PRNGKey(seed))
+        # donation lets XLA update the arenas in place; CPU ignores it
+        self._donate = {} if jax.default_backend() == "cpu" \
+            else {"donate_argnums": (1,)}
+        self._step_fn = None
+        self._clear_fn = None
+        self._admit_fns = {}     # prompt bucket P -> compiled admit
+
+    # ------------------------------------------------------------ properties
+    @property
+    def has_free(self) -> bool:
+        return bool(self._free)
+
+    @property
+    def n_occupied(self) -> int:
+        return len(self._occupied)
+
+    # ---------------------------------------------------------------- jit fns
+    def _build_fns(self):
+        cfg, pol, sc = self.cfg, self.ecfg.policy, self.ecfg.sampler
+        eos = self.ecfg.eos_token
+
+        def step(params, state: ContinuousState):
+            key, sub = jax.random.split(state.key)
+            active_prev = state.dec.active
+            logits, dec = serve_step(params, cfg, pol, state.dec, state.token)
+            nxt = sample(logits, sub, sc)
+            rem = state.remaining - active_prev.astype(jnp.int32)
+            done = active_prev & (rem <= 0)
+            if eos >= 0:
+                done = done | (active_prev & (nxt == eos))
+            dec = dec._replace(active=active_prev & ~done)
+            return nxt, active_prev, ContinuousState(dec, nxt, rem, key)
+
+        def clear(state: ContinuousState, row):
+            dec = state.dec
+            return state._replace(dec=dec._replace(
+                big=clear_row(dec.big, row),
+                small=clear_row(dec.small, row),
+                active=dec.active.at[row].set(False)))
+
+        donate0 = {} if not self._donate else {"donate_argnums": (0,)}
+        self._step_fn = jax.jit(step, **self._donate)
+        self._clear_fn = jax.jit(clear, **donate0)
+
+    def _admit_jit(self, P: int):
+        """Compiled admission for one prompt bucket: Algorithm-1 compaction
+        of the prefill into row-shaped tier arenas, fused with the
+        `insert_request` row write and first-token sampling.  One executable
+        per (bucket, max_concurrency, tier sizes) — the row index is traced,
+        so admitting into ANY slot reuses it.  (Running the compaction
+        eagerly instead costs ~100ms of op-dispatch per admission — it
+        dominated the serving trace before this was fused.)"""
+        if P not in self._admit_fns:
+            eng, plan, sc = self.engine, self.plan, self.ecfg.sampler
+            eos = self.ecfg.eos_token
+
+            def admit_fn(state: ContinuousState, row, pre, rem0, key):
+                rs = eng.build_state(pre, plan, 1)     # [L, 1, S, ...] rows
+                token0 = sample(pre.last_logits, key, sc)[0]
+                act0 = jnp.asarray(rem0 > 0)
+                if eos >= 0:
+                    act0 = act0 & (token0 != eos)
+                dec = state.dec
+                dec = dec._replace(
+                    big=insert_row(dec.big, rs.big, row),
+                    small=insert_row(dec.small, rs.small, row),
+                    t=dec.t.at[row].set(rs.t[0].astype(dec.t.dtype)),
+                    active=dec.active.at[row].set(act0))
+                return token0, ContinuousState(
+                    dec,
+                    state.token.at[row].set(token0.astype(state.token.dtype)),
+                    state.remaining.at[row].set(rem0),
+                    state.key)
+
+            donate0 = {} if not self._donate else {"donate_argnums": (0,)}
+            self._admit_fns[P] = jax.jit(admit_fn, **donate0)
+        return self._admit_fns[P]
+
+    # ------------------------------------------------------------- state init
+    def _init_state(self) -> ContinuousState:
+        cfg, plan = self.cfg, self.plan
+        B = self.ccfg.max_concurrency
+        dtype = jnp.dtype(cfg.dtype)
+
+        def tier(n_layers, budget):
+            if n_layers == 0:    # mirror Engine's dummy arena for empty tiers
+                return empty_cache(1, B, 16, cfg.n_kv_heads, cfg.hd, dtype)
+            return empty_cache(n_layers, B, budget, cfg.n_kv_heads, cfg.hd,
+                               dtype)
+
+        is_small, tier_index = make_tier_indices(plan.is_small)
+        dec = DecodeState(
+            big=tier(plan.n_big, plan.b_big),
+            small=tier(plan.n_small, plan.b_small),
+            group_is_small=is_small, tier_index=tier_index,
+            ssm_state=(), conv_state=(),
+            t=jnp.zeros((B,), jnp.int32),
+            active=jnp.zeros((B,), bool))
+        return ContinuousState(
+            dec,
+            token=jnp.zeros((B,), jnp.int32),
+            remaining=jnp.zeros((B,), jnp.int32),
+            key=self._state_key)
+
+    def _ensure_plan(self, pre):
+        """Fix (tier sizes, layer grouping) on first admission.
+
+        In squeeze mode the grouping calibrates on the first request's
+        cosine sims (Algorithm 1); full/uniform are request-independent.
+        Everything afterwards reuses the same compiled executables.
+        """
+        if self.plan is not None:
+            return
+        cos = np.asarray(pre.cos_sims).mean(axis=-1) if pre.cos_sims.size \
+            else np.zeros(0)
+        self.plan = self.engine.plan_budgets(
+            cos, self.ccfg.max_prompt_len, self.ccfg.max_new_cap)
+        self.state = self._init_state()
+        self._build_fns()
+
+    # -------------------------------------------------------------- admission
+    def admit(self, prompt: np.ndarray, max_new: int) -> int:
+        """Prefill one request and insert it into a free row; returns the
+        slot.  Raises if no row is free (callers check `has_free`)."""
+        assert self._free, "no free slot — check has_free before admit"
+        max_new = min(max_new, self.ccfg.max_new_cap)
+        toks, valid = pad_prompt(np.asarray(prompt, np.int32),
+                                 self.ccfg.prompt_bucket,
+                                 self.ccfg.max_prompt_len)
+        B, P = toks.shape
+        pre = self.engine.prefill_jit(B, P)(self.params, toks, None, None,
+                                            valid)
+        self._ensure_plan(pre)
+
+        self._host_key, sub = jax.random.split(self._host_key)
+        rem0 = max_new - 1
+        slot = self._free.pop(0)
+        token0, self.state = self._admit_jit(P)(
+            self.state, slot, pre, rem0, sub)
+        tok0 = int(token0)
+        eos = self.ecfg.eos_token
+        act0 = rem0 > 0 and not (eos >= 0 and tok0 == eos)
+        self._buf[slot] = [tok0]
+        self._max_new[slot] = max_new
+        self._steps[slot] = 0
+        self._occupied.append(slot)
+        if not act0:
+            self._retire(slot)
+        return slot
+
+    # ------------------------------------------------------------ decode loop
+    def decode_block(self) -> int:
+        """Run `sync_every` decode steps, harvest emissions, retire finished
+        rows.  Returns the number of requests completed in this block."""
+        if not self._occupied:
+            return 0
+        # the host knows an exact upper bound on useful steps this block:
+        # EOS can only retire rows EARLIER, so don't burn whole-batch steps
+        # past the longest remaining token budget
+        bound = max(self._max_new[s] - 1 - self._steps[s]
+                    for s in self._occupied)
+        trace = []
+        for _ in range(max(1, min(self.ccfg.sync_every, bound))):
+            nxt, act_prev, self.state = self._step_fn(self.params, self.state)
+            trace.append((nxt, act_prev))
+        before = len(self._completed)
+        for nxt, act_prev in trace:
+            nxt, act_prev = np.asarray(nxt), np.asarray(act_prev)
+            self.row_steps += self.ccfg.max_concurrency
+            self.useful_row_steps += int(act_prev.sum())
+            for s in self._occupied:
+                if act_prev[s]:
+                    self._buf[s].append(int(nxt[s]))
+                    self._steps[s] += 1
+        active_now = np.asarray(self.state.dec.active)
+        for s in list(self._occupied):
+            if not active_now[s]:
+                self._retire(s)
+        return len(self._completed) - before
+
+    def _retire(self, slot: int):
+        """Free a finished row: clear its slots on-device and recycle it."""
+        self.state = self._clear_fn(self.state, slot)
+        self._occupied.remove(slot)
+        self._free.append(slot)
+        toks = np.asarray(self._buf[slot], np.int32)
+        eos = self.ecfg.eos_token
+        if eos >= 0 and toks.size < self._max_new[slot]:
+            # parity with Engine.generate's post-EOS masking: the tail of a
+            # request that stopped early reads as EOS
+            toks = np.concatenate(
+                [toks, np.full(self._max_new[slot] - toks.size, eos,
+                               np.int32)])
+        self._completed.append(Completed(slot, toks, self._steps[slot]))
+        self._buf[slot] = []
+
+    def pop_completed(self) -> List[Completed]:
+        out, self._completed = self._completed, []
+        return out
+
+

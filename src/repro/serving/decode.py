@@ -38,6 +38,10 @@ class DecodeState(NamedTuple):
     ssm_state: jnp.ndarray | tuple        # [n_ssm, B, H, P, N]
     conv_state: jnp.ndarray | tuple       # [n_ssm, B, W-1, C]
     t: jnp.ndarray                # [B] next token's position
+    # [B] bool row liveness for continuous batching: retirement lowers a
+    # row's flag ON DEVICE (no host sync) and its position stops advancing;
+    # () = every row live forever (the one-shot generate/wave paths).
+    active: jnp.ndarray | tuple = ()
 
 
 def make_tier_indices(is_small) -> tuple:
@@ -123,6 +127,15 @@ def serve_step(
     """One decode step: token -> logits [B, V], updated DecodeState."""
     x = _embed_token(params, cfg, token) if embeds is None else embeds
     t = state.t
+    if isinstance(state.active, tuple):
+        inc = 1
+    else:
+        # Retired rows freeze: their position stops advancing, and their
+        # effective position becomes -1 — the empty-slot sentinel — so the
+        # unconditional eviction write below lands as an EMPTY slot and a
+        # cleared row stays logically empty until a new request is inserted.
+        inc = state.active.astype(state.t.dtype)
+        t = jnp.where(state.active, t, -1)
 
     if cfg.is_ssm_only:
         def body(carry, inp):
@@ -135,7 +148,7 @@ def serve_step(
 
         x, (sts, cvs) = jax.lax.scan(
             body, x, (params["layers"], state.ssm_state, state.conv_state))
-        new_state = state._replace(ssm_state=sts, conv_state=cvs, t=t + 1)
+        new_state = state._replace(ssm_state=sts, conv_state=cvs, t=state.t + inc)
 
     elif cfg.is_hybrid:
         sp = params["shared_attn"]
@@ -169,7 +182,7 @@ def serve_step(
             (params["layers"], sts, state.group_is_small, state.tier_index))
         flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), (sts2, cvs2))
         new_state = state._replace(big=big, small=small,
-                                   ssm_state=flat[0], conv_state=flat[1], t=t + 1)
+                                   ssm_state=flat[0], conv_state=flat[1], t=state.t + inc)
 
     else:
         windows = layer_windows(cfg)
@@ -185,7 +198,7 @@ def serve_step(
         (x, big, small), _ = jax.lax.scan(
             body, (x, state.big, state.small),
             (params["layers"], windows, state.group_is_small, state.tier_index))
-        new_state = state._replace(big=big, small=small, t=t + 1)
+        new_state = state._replace(big=big, small=small, t=state.t + inc)
 
     x = apply_norm(params["final_norm"], x, cfg)
     logits = (x[:, 0] @ params["unembed"]).astype(jnp.float32)

@@ -14,6 +14,12 @@ Compiled executables are memoized on the static shape key (batch, prompt len,
 tier sizes), so repeated traffic with the same bucketed allocation reuses
 them — the KMeans/allocation overhead is the one-time host-side cost the
 paper measures in Table 5.
+
+Two serving clients share this core (DESIGN.md §5): the one-shot
+`generate` below (which the wave scheduler batches), and the
+continuous-batching `ContinuousEngine` (continuous.py), which reuses
+`prefill_jit` / `plan_budgets` / `build_state` per request and owns its own
+persistent decode loop.
 """
 from __future__ import annotations
 
@@ -81,6 +87,11 @@ class Engine:
         self._step_cache = {}
 
     # ------------------------------------------------------------------ jit
+    def prefill_jit(self, batch: int, prompt_len: int):
+        """The memoized prefill executable for one (batch, prompt) bucket.
+        Called per request by continuous-batching admission."""
+        return self._prefill_fn((batch, prompt_len))
+
     def _prefill_fn(self, key):
         if key not in self._prefill_cache:
             self._prefill_cache[key] = jax.jit(
@@ -113,7 +124,13 @@ class Engine:
                         min_budget=self.ecfg.min_budget)
 
     # ------------------------------------------------------------ state init
-    def _build_state(self, pre, plan: BudgetPlan, batch: int) -> DecodeState:
+    def build_state(self, pre, plan: BudgetPlan, batch: int) -> DecodeState:
+        """Compact a prefill into budget-tier arenas (Algorithm 1 line 12).
+
+        With ``batch=1`` this doubles as continuous-batching admission: the
+        returned row-shaped arenas are what `insert_request` writes into a
+        free row of the persistent state.
+        """
         cfg, pol = self.cfg, self.ecfg.policy
         if cfg.is_ssm_only:
             st, cv = pre.ssm_state
@@ -173,7 +190,7 @@ class Engine:
         cos = np.asarray(pre.cos_sims).mean(axis=-1) if pre.cos_sims.size \
             else np.zeros(0)
         plan = self.plan_budgets(cos, P, max_new)
-        state = self._build_state(pre, plan, B)
+        state = self.build_state(pre, plan, B)
         t2 = time.perf_counter()
 
         shape_key = (B, P, plan.b_big, plan.b_small, plan.n_big, plan.n_small)

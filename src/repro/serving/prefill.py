@@ -6,12 +6,43 @@ the budget arenas, and the H2O prefill column-sum statistics.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Sequence
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.transformer import forward
+
+
+def pad_prompts(prompts: Sequence[np.ndarray], bucket: int,
+                batch: Optional[int] = None):
+    """Host-side shape bucketing shared by every serving client.
+
+    Right-pads 1-D prompts to the next multiple of `bucket` (over the longest
+    prompt) and to `batch` rows, returning ``(tokens [B, P] int32,
+    valid [B, P] bool)``.  Prefill executables are memoized on (B, P), so
+    bucketing here is what makes repeated traffic hit compiled code.
+    """
+    B = batch if batch is not None else len(prompts)
+    assert len(prompts) <= B
+    plen = max(len(p) for p in prompts)
+    P = ((plen + bucket - 1) // bucket) * bucket
+    toks = np.zeros((B, P), np.int32)
+    valid = np.zeros((B, P), bool)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+        valid[i, :len(p)] = True
+    return toks, valid
+
+
+def pad_prompt(prompt: np.ndarray, bucket: int,
+               max_len: Optional[int] = None):
+    """Single-request `pad_prompts` (continuous-batching admission)."""
+    if max_len is not None and len(prompt) > max_len:
+        raise ValueError(
+            f"prompt length {len(prompt)} exceeds max_prompt_len {max_len}")
+    return pad_prompts([np.asarray(prompt, np.int32)], bucket)
 
 
 class PrefillOut(NamedTuple):

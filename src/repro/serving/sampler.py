@@ -14,9 +14,12 @@ class SamplerConfig:
 
 
 def sample(logits: jnp.ndarray, key, sc: SamplerConfig) -> jnp.ndarray:
-    """logits [B, V] -> tokens [B]."""
+    """logits [B, V] -> tokens [B].  `key` may be None for greedy decoding
+    (the continuous-batching admission path samples a request's first token
+    without threading a per-request key)."""
     if sc.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert key is not None, "stochastic sampling needs a PRNG key"
     logits = logits / sc.temperature
     if sc.top_k > 0:
         vals, _ = jax.lax.top_k(logits, sc.top_k)

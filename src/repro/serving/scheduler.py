@@ -1,21 +1,31 @@
-"""Wave scheduler: request-queue batched serving on top of the Engine.
+"""Request schedulers: lock-step waves and token-level continuous batching.
 
-Production serving groups incoming requests into fixed-shape waves (prompt
-lengths padded to buckets, batch padded to the wave size) so each wave hits
-an already-compiled (batch, prompt-bucket, budget-tier) executable.  This is
-the batching model behind the paper's Table 3 throughput runs; true
-token-level continuous batching would additionally interleave prefills into
-the decode loop — noted as future work in DESIGN.md.
+Production serving has two batching regimes over the same SqueezeAttention
+engine core (DESIGN.md §5):
+
+  * `WaveScheduler` — groups requests into fixed-shape waves (prompt lengths
+    padded to buckets, batch padded to the wave size) so each wave hits an
+    already-compiled (batch, prompt-bucket, budget-tier) executable.  Simple
+    and wholly synchronous, but every wave member pays ``max(max_new)``
+    decode steps and pad rows burn compute — the paper's Table 3 batching
+    model.
+  * `ContinuousScheduler` — interleaves per-request prefill+admission with
+    batched decode blocks over the persistent budget-tier arenas of
+    `ContinuousEngine` (continuous.py).  Finished rows retire on-device and
+    their slots recycle immediately, so heterogeneous ``max_new`` traffic
+    no longer quantizes to the slowest wave member.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.serving.continuous import ContinuousConfig, ContinuousEngine
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.prefill import pad_prompts
 
 
 @dataclasses.dataclass
@@ -35,12 +45,10 @@ class SchedulerConfig:
     max_wave_new: int = 64              # decode steps per wave
 
 
-class WaveScheduler:
-    def __init__(self, params, cfg, ecfg: EngineConfig,
-                 scfg: SchedulerConfig = SchedulerConfig()):
-        self.engine = Engine(params, cfg, ecfg)
-        self.cfg = cfg
-        self.scfg = scfg
+class _RequestQueue:
+    """Shared request intake for both schedulers."""
+
+    def __init__(self):
         self.queue: List[Request] = []
         self._next_id = 0
 
@@ -51,18 +59,25 @@ class WaveScheduler:
                                   max_new, time.perf_counter()))
         return rid
 
+
+class WaveScheduler(_RequestQueue):
+    def __init__(self, params, cfg, ecfg: EngineConfig,
+                 scfg: SchedulerConfig = SchedulerConfig()):
+        super().__init__()
+        self.engine = Engine(params, cfg, ecfg)
+        self.cfg = cfg
+        self.scfg = scfg
+        # decode-lane accounting: every wave burns wave_size rows for
+        # n_new steps; useful = steps a real request actually wanted
+        self.row_steps = 0
+        self.useful_row_steps = 0
+
     def _pad_wave(self, wave: List[Request]):
-        B = self.scfg.wave_size
-        bucket = self.scfg.prompt_bucket
-        plen = max(len(r.prompt) for r in wave)
-        plen = ((plen + bucket - 1) // bucket) * bucket
-        toks = np.zeros((B, plen), np.int32)
-        valid = np.zeros((B, plen), bool)
-        for i, r in enumerate(wave):
-            toks[i, :len(r.prompt)] = r.prompt
-            valid[i, :len(r.prompt)] = True
-        for i in range(len(wave), B):    # pad rows replicate request 0
-            toks[i] = toks[0]
+        toks, valid = pad_prompts([r.prompt for r in wave],
+                                  self.scfg.prompt_bucket,
+                                  batch=self.scfg.wave_size)
+        for i in range(len(wave), self.scfg.wave_size):
+            toks[i] = toks[0]           # pad rows replicate request 0
             valid[i] = valid[0]
         return toks, valid
 
@@ -78,6 +93,8 @@ class WaveScheduler:
         res = self.engine.generate(tokens=toks, valid=valid,
                                    max_new_tokens=n_new)
         t1 = time.perf_counter()
+        self.row_steps += self.scfg.wave_size * n_new
+        self.useful_row_steps += sum(min(r.max_new, n_new) for r in wave)
         for i, r in enumerate(wave):
             r.tokens = res.tokens[i, :r.max_new]
             r.latency_s = t1 - r.submitted_at
@@ -87,4 +104,62 @@ class WaveScheduler:
         done: List[Request] = []
         while self.queue:
             done.extend(self.run_wave())
+        return done
+
+
+class ContinuousScheduler(_RequestQueue):
+    """Interleaved admit/decode loop over the persistent-arena core.
+
+    Same submit/run_until_empty surface as `WaveScheduler`; each `poll`
+    fills every free row from the queue (prefill → fused admit), then
+    decodes one block, streaming out whatever finished.  Under greedy
+    sampling per-request outputs are token-identical to solo
+    `Engine.generate` runs *when budgets are request-independent* — mode
+    "full", or `budget_abs` set (with `budget_frac` the continuous plan
+    derives from `max_prompt_len` while solo derives from each prompt, so
+    budgets and therefore outputs differ).  Stochastic sampling draws from
+    one engine-level key stream instead of per-request streams.
+    """
+
+    def __init__(self, params, cfg, ecfg: EngineConfig,
+                 ccfg: ContinuousConfig = ContinuousConfig(), seed: int = 0):
+        super().__init__()
+        self.core = ContinuousEngine(params, cfg, ecfg, ccfg, seed=seed)
+        self._slot_req: Dict[int, Request] = {}
+
+    @property
+    def row_steps(self) -> int:
+        return self.core.row_steps
+
+    @property
+    def useful_row_steps(self) -> int:
+        return self.core.useful_row_steps
+
+    def _harvest(self) -> List[Request]:
+        """Resolve finished slots to their requests.  Must run before a
+        freed slot can be re-admitted, or the slot→request map would be
+        clobbered — hence the harvest after every admission below."""
+        done = []
+        for c in self.core.pop_completed():
+            r = self._slot_req.pop(c.slot)
+            r.tokens = c.tokens[:r.max_new]
+            r.latency_s = time.perf_counter() - r.submitted_at
+            done.append(r)
+        return done
+
+    def poll(self) -> List[Request]:
+        """One scheduler iteration: admit → decode block → harvest."""
+        done = self._harvest()
+        while self.queue and self.core.has_free:
+            r = self.queue.pop(0)
+            self._slot_req[self.core.admit(r.prompt, r.max_new)] = r
+            done.extend(self._harvest())   # instant EOS / max_new == 1
+        self.core.decode_block()
+        done.extend(self._harvest())
+        return done
+
+    def run_until_empty(self) -> List[Request]:
+        done: List[Request] = []
+        while self.queue or self.core.n_occupied:
+            done.extend(self.poll())
         return done

@@ -1,0 +1,156 @@
+"""Continuous-batching invariants: admission, retirement, slot recycling.
+
+The load-bearing property is the first test: per-request outputs through the
+persistent-arena engine are token-identical to solo `Engine.generate` runs
+under greedy sampling — continuous batching is a scheduling change, not a
+model change.  (Identity requires request-independent budgets: `budget_abs`
+here; with `budget_frac` solo budgets scale with each prompt while the
+continuous plan is fixed, so outputs legitimately differ.)
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PolicyConfig
+from repro.core.cache import SlotCache, clear_row, empty_cache, insert_row
+from repro.models import ModelConfig, init_params
+from repro.serving import (ContinuousConfig, ContinuousScheduler, Engine,
+                           EngineConfig, pad_prompt)
+
+CFG = ModelConfig(name="s", arch_type="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                  dtype="float32", param_dtype="float32")
+
+ECFG = EngineConfig(mode="uniform", policy=PolicyConfig("sliding_window"),
+                    budget_abs=12, bucket=4, min_budget=4)
+CCFG = ContinuousConfig(max_concurrency=3, prompt_bucket=8, max_prompt_len=24,
+                        max_new_cap=8, sync_every=2)
+
+
+def _params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+# --------------------------------------------------------------- cache units
+def test_insert_row_and_clear_row():
+    arena = empty_cache(2, 4, 6, 2, 4, jnp.float32)
+    row_cache = SlotCache(
+        k=jnp.ones((2, 1, 6, 2, 4)), v=jnp.full((2, 1, 6, 2, 4), 2.0),
+        pos=jnp.arange(6, dtype=jnp.int32).reshape(1, 1, 6).repeat(2, 0),
+        score=jnp.full((2, 1, 6), 0.5))
+    # traced row index: one executable serves every slot
+    ins = jax.jit(insert_row)
+    arena = ins(arena, row_cache, 2)
+    assert np.asarray(arena.pos[:, 2]).tolist() == [list(range(6))] * 2
+    assert (np.asarray(arena.pos[:, 0]) == -1).all()      # other rows empty
+    assert (np.asarray(arena.k[:, 2]) == 1.0).all()
+    arena = ins(arena, row_cache, 0)
+    assert ins._cache_size() == 1                          # no retrace
+
+    cleared = jax.jit(clear_row)(arena, 2)
+    assert (np.asarray(cleared.pos[:, 2]) == -1).all()
+    assert (np.asarray(cleared.score[:, 2]) == 0.0).all()
+    assert np.asarray(cleared.pos[:, 0]).tolist() == [list(range(6))] * 2
+
+
+# ------------------------------------------------------------ token identity
+def test_continuous_matches_solo_generate_greedy():
+    """Mixed prompt lengths AND mixed max_new: every request's continuous
+    output must equal its solo greedy `Engine.generate` output."""
+    params = _params()
+    sched = ContinuousScheduler(params, CFG, ECFG, CCFG)
+    rng = np.random.default_rng(0)
+    specs = [(5, 4), (11, 7), (16, 8), (3, 1), (9, 6), (20, 5)]
+    prompts = [rng.integers(0, 97, (n,)).astype(np.int32) for n, _ in specs]
+    rids = [sched.submit(p, max_new=mn)
+            for p, (_, mn) in zip(prompts, specs)]
+    done = {r.rid: r for r in sched.run_until_empty()}
+    assert len(done) == len(specs)
+
+    solo = Engine(params, CFG, ECFG)
+    for rid, p, (_, mn) in zip(rids, prompts, specs):
+        toks, valid = pad_prompt(p, CCFG.prompt_bucket)
+        ref = solo.generate(tokens=toks, valid=valid,
+                            max_new_tokens=mn).tokens[0]
+        assert done[rid].tokens.tolist() == ref.tolist(), rid
+
+
+def test_admission_never_retraces_decode_or_insert():
+    """Fixed (max_concurrency, tier sizes) => one compiled step, one
+    compiled admit per prompt bucket, serving the whole request stream."""
+    params = _params()
+    sched = ContinuousScheduler(params, CFG, ECFG, CCFG)
+    rng = np.random.default_rng(1)
+    for n in (5, 11, 16, 9, 20, 7, 13):
+        sched.submit(rng.integers(0, 97, (n,)), max_new=4)
+    done = sched.run_until_empty()
+    assert len(done) == 7
+    core = sched.core
+    assert core._step_fn._cache_size() == 1
+    assert core._clear_fn._cache_size() == 1
+    # prompts bucket to P in {8, 16, 24}: one admit executable each, and
+    # re-admission into different slots never retraced any of them
+    assert sorted(core._admit_fns) == [8, 16, 24]
+    assert all(fn._cache_size() == 1 for fn in core._admit_fns.values())
+
+
+# ------------------------------------------------------- retirement/recycle
+def test_retired_slot_is_recycled_and_cleared():
+    params = _params()
+    sched = ContinuousScheduler(params, CFG, ECFG, CCFG)
+    rng = np.random.default_rng(2)
+    n_slots = CCFG.max_concurrency
+    # twice as many requests as slots forces recycling
+    for i in range(2 * n_slots):
+        sched.submit(rng.integers(0, 97, (8,)), max_new=2 + i % 3)
+    done = sched.run_until_empty()
+    assert len(done) == 2 * n_slots
+    core = sched.core
+    assert sorted(core._free) == list(range(n_slots))      # all recycled
+    assert core.n_occupied == 0
+    # retired rows were cleared on-device: every slot of every row is empty
+    pos = np.asarray(core.state.dec.big.pos)
+    assert (pos == -1).all()
+    assert not np.asarray(core.state.dec.active).any()
+
+
+def test_eos_retires_row_early():
+    params = _params()
+    prompt = np.random.default_rng(3).integers(0, 97, (10,)).astype(np.int32)
+    # probe what greedy emits so we can use it as the EOS token
+    toks, valid = pad_prompt(prompt, CCFG.prompt_bucket)
+    probe = Engine(params, CFG, ECFG)
+    ref = probe.generate(tokens=toks, valid=valid, max_new_tokens=8).tokens[0]
+    eos = int(ref[2])
+
+    ecfg = EngineConfig(mode=ECFG.mode, policy=ECFG.policy,
+                        budget_abs=ECFG.budget_abs, bucket=ECFG.bucket,
+                        min_budget=ECFG.min_budget, eos_token=eos)
+    sched = ContinuousScheduler(params, CFG, ecfg, CCFG)
+    rid = sched.submit(prompt, max_new=8)
+    done = {r.rid: r for r in sched.run_until_empty()}
+    out = done[rid].tokens
+    hit = np.where(out == eos)[0]
+    assert hit.size > 0
+    assert (out[hit[0]:] == eos).all()          # post-EOS tail masked to EOS
+    # the row actually stopped decoding: it spent fewer steps than max_new-1
+    assert not np.asarray(sched.core.state.dec.active).any()
+
+
+def test_continuous_squeeze_mode_serves():
+    """Algorithm-1 tier plan calibrated on the first request, then reused."""
+    params = _params()
+    ecfg = EngineConfig(mode="squeeze", policy=PolicyConfig("sink_h2o"),
+                        budget_abs=12, bucket=4, min_budget=4)
+    sched = ContinuousScheduler(params, CFG, ecfg, CCFG)
+    rng = np.random.default_rng(4)
+    for n in (6, 14, 21):
+        sched.submit(rng.integers(0, 97, (n,)), max_new=5)
+    done = sched.run_until_empty()
+    assert len(done) == 3
+    plan = sched.core.plan
+    assert plan is not None and plan.n_layers == 2
+    for r in done:
+        assert r.tokens.shape == (5,)
+        assert (r.tokens >= 0).all() and (r.tokens < 97).all()

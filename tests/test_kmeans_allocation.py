@@ -1,7 +1,8 @@
 """Unit + property tests for KMeans layer clustering and Algorithm-1 budgets."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.allocation import allocate, uniform_plan
 from repro.core.kmeans import kmeans_1d, kmeans_1d_jax

@@ -5,7 +5,8 @@ import jax
 
 from repro.core import PolicyConfig
 from repro.models import ModelConfig, init_params
-from repro.serving import Engine, EngineConfig, SchedulerConfig, WaveScheduler
+from repro.serving import (Engine, EngineConfig, SchedulerConfig,
+                           WaveScheduler, pad_prompt, pad_prompts)
 
 CFG = ModelConfig(name="s", arch_type="dense", n_layers=2, d_model=64,
                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
@@ -51,6 +52,42 @@ def test_padded_rows_do_not_change_real_rows():
         return done[rid].tokens.tolist()
 
     assert serve(0) == serve(3)
+
+
+def test_partial_wave_smaller_than_wave_size():
+    """queue < wave_size: the wave pads with replicas of request 0 and every
+    real request still gets its own output."""
+    sched = WaveScheduler(
+        _params(), CFG, EngineConfig(mode="full"),
+        SchedulerConfig(wave_size=8, prompt_bucket=4, max_wave_new=4))
+    rng = np.random.default_rng(5)
+    rids = [sched.submit(rng.integers(0, 97, (n,)), max_new=3)
+            for n in (7, 12)]                       # 2 requests, wave of 8
+    done = sched.run_until_empty()
+    assert len(done) == 2
+    assert sorted(r.rid for r in done) == sorted(rids)
+    assert not sched.queue
+    for r in done:
+        assert r.tokens.shape == (3,)
+
+
+def test_pad_prompts_bucketing_and_valid_masks():
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, 97, (n,)).astype(np.int32) for n in (5, 11, 9)]
+    toks, valid = pad_prompts(prompts, bucket=8, batch=4)
+    assert toks.shape == valid.shape == (4, 16)     # 11 -> bucket 16
+    for i, p in enumerate(prompts):
+        assert (toks[i, :len(p)] == p).all()
+        assert valid[i, :len(p)].all() and not valid[i, len(p):].any()
+    assert not valid[3].any()                        # pad row: all invalid
+
+    t1, v1 = pad_prompt(prompts[0], bucket=8)
+    assert t1.shape == (1, 8) and v1[0, :5].all() and not v1[0, 5:].any()
+    try:
+        pad_prompt(np.zeros(20, np.int32), bucket=8, max_len=16)
+        assert False, "expected ValueError"
+    except ValueError:
+        pass
 
 
 def test_eos_early_stop_and_masking():
