@@ -6,12 +6,30 @@ regime where lock-step waves waste decode steps — every wave member pays
 ``max(max_new)`` steps and pad rows replicate request 0 — while the
 continuous engine retires rows on-device and recycles their slots.
 
+Three schedulers are driven over the SAME trace:
+
+  * ``wave``          — lock-step waves (paper Table 3 batching model)
+  * ``continuous_step`` — persistent arenas, ``sync_every=1``: one decode
+    dispatch per token, the PR-1 host-interaction regime (the "before")
+  * ``continuous``    — fused decode blocks (``sync_every=4``): one dispatch
+    and one device→host drain per block (the "after")
+
 Reported per scheduler: total wall-clock to drain the trace, mean/p95
-request latency (arrival -> completion), and emitted tokens/s.  Both
-schedulers are warmed on the same shapes first so compile time is excluded.
+request latency (arrival -> completion), emitted tokens/s, and the host
+dispatch counters (decode dispatches per decoded token / per decode step).
+Both are warmed on the same shapes first so compile time is excluded.
+
+Results are appended to ``BENCH_serving.json`` at the repo root so the perf
+trajectory is machine-readable across PRs; the fused run ASSERTS that its
+dispatch rate beats the per-step regime.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench [--quick|--smoke]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
@@ -31,6 +49,10 @@ TRACE_CFG = ModelConfig(
 PROMPT_BUCKET = 32
 MAX_NEW_CAP = 48
 SHORT_NEW, LONG_NEW, P_LONG = 4, MAX_NEW_CAP, 0.25
+SYNC_EVERY = 4
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_serving.json")
 
 
 def _trace(n_req: int, seed: int = 7):
@@ -77,36 +99,101 @@ def _n_inflight(sched):
     return sched.core.n_occupied if hasattr(sched, "core") else 0
 
 
-def _warm(sched, n=3):
+def _counters(sched):
+    """(decode_dispatches, decode_steps, tokens) snapshot for either kind."""
+    if hasattr(sched, "core"):
+        c = sched.core
+        return (c.decode_dispatches, c.decode_steps, c.tokens_emitted,
+                c.admit_dispatches, c.admitted)
+    e = sched.engine
+    return (e.decode_dispatches, 0, 0, 0, 0)
+
+
+def _warm(sched, n=6):
+    """Warm the compiled shapes: prompt buckets, admit-batch buckets, and —
+    via a spread of max_new — the bound-clamped fused block lengths."""
     rng = np.random.default_rng(0)
-    for _ in range(n):
+    news = [1, 2, 3, SYNC_EVERY, MAX_NEW_CAP, MAX_NEW_CAP]
+    for i in range(n):
         sched.submit(rng.integers(0, TRACE_CFG.vocab_size,
                                   (PROMPT_BUCKET,)).astype(np.int32),
-                     MAX_NEW_CAP)
+                     news[i % len(news)])
     sched.run_until_empty()
 
 
 def _best_of(sched, trace, step_fn, n_req, trials):
     """Repeat the drain (same warmed scheduler, queue empties every trial)
     and keep the fastest — real-time arrival release makes single passes
-    noisy on a shared CPU.  Lane utilization is snapshotted per trial (the
-    scheduler counters accumulate across warm-up and trials) and reported
-    for the kept trial."""
+    noisy on a shared CPU.  Lane utilization and the dispatch counters are
+    snapshotted per trial (the scheduler counters accumulate across warm-up
+    and trials) and reported for the kept trial."""
     best = None
     for _ in range(trials):
         r0, u0 = sched.row_steps, sched.useful_row_steps
+        c0 = _counters(sched)
         wall, lats, toks, done = _drive(sched, trace, step_fn)
         util = (sched.useful_row_steps - u0) / max(sched.row_steps - r0, 1)
+        dd, ds, te, ad, na = (b - a for a, b in zip(c0, _counters(sched)))
         assert len(done) == n_req
-        if best is None or wall < best[0]:
-            best = (wall, lats, toks, util)
+        if best is None or wall < best["wall"]:
+            best = {"wall": wall, "lats": lats, "toks": toks, "util": util,
+                    "decode_dispatches": dd, "decode_steps": ds,
+                    "tokens_emitted": te, "admit_dispatches": ad,
+                    "admitted": na}
     return best
 
 
-def serving_trace(quick=False, policy="sliding_window"):
+def _metrics(b):
+    """JSON-ready metrics for one kept trial."""
+    m = {
+        "wall_s": round(b["wall"], 4),
+        "tokens": int(b["toks"]),
+        "tokens_per_s": round(b["toks"] / max(b["wall"], 1e-9), 1),
+        "mean_latency_ms": round(float(b["lats"].mean()) * 1e3, 2),
+        "p95_latency_ms": round(float(np.percentile(b["lats"], 95)) * 1e3, 2),
+        "lane_util": round(b["util"], 3),
+    }
+    if b["decode_steps"]:
+        m["decode_dispatches"] = int(b["decode_dispatches"])
+        m["decode_steps"] = int(b["decode_steps"])
+        m["dispatches_per_token"] = round(
+            b["decode_dispatches"] / max(b["tokens_emitted"], 1), 4)
+        m["dispatches_per_step"] = round(
+            b["decode_dispatches"] / max(b["decode_steps"], 1), 4)
+        m["admit_dispatches"] = int(b["admit_dispatches"])
+        m["admitted"] = int(b["admitted"])
+    return m
+
+
+def _append_json(record, path=BENCH_JSON):
+    """Append one run record to the cross-PR perf trajectory file."""
+    data = {"runs": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {"runs": []}
+    data.setdefault("runs", []).append(record)
+    # atomic replace: an interrupted run must not truncate the trajectory
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def _continuous(params, ecfg, sync_every, max_concurrency=4):
+    return ContinuousScheduler(params, TRACE_CFG, ecfg, ContinuousConfig(
+        max_concurrency=max_concurrency, prompt_bucket=PROMPT_BUCKET,
+        max_prompt_len=PROMPT_BUCKET, max_new_cap=MAX_NEW_CAP,
+        sync_every=sync_every))
+
+
+def serving_trace(quick=False, policy="sliding_window", n_req=24,
+                  write_json=True):
     # the trace length stays fixed (smaller samples of the bimodal max_new
     # mix are unrepresentative); quick just takes fewer timing trials
-    n_req = 24
     trials = 2 if quick else 3
     params = init_params(jax.random.PRNGKey(0), TRACE_CFG)
     ecfg = EngineConfig(mode="uniform", policy=PolicyConfig(policy),
@@ -116,35 +203,91 @@ def serving_trace(quick=False, policy="sliding_window"):
     wave = WaveScheduler(params, TRACE_CFG, ecfg, SchedulerConfig(
         wave_size=4, prompt_bucket=PROMPT_BUCKET, max_wave_new=MAX_NEW_CAP))
     _warm(wave)
-    w_wall, w_lat, w_toks, w_util = _best_of(
-        wave, trace, lambda s: s.run_wave(), n_req, trials)
+    w = _best_of(wave, trace, lambda s: s.run_wave(), n_req, trials)
 
-    cont = ContinuousScheduler(params, TRACE_CFG, ecfg, ContinuousConfig(
-        max_concurrency=4, prompt_bucket=PROMPT_BUCKET,
-        max_prompt_len=PROMPT_BUCKET, max_new_cap=MAX_NEW_CAP,
-        sync_every=4))
+    # "before": PR-1 host-interaction regime — one decode dispatch per token
+    step = _continuous(params, ecfg, sync_every=1)
+    _warm(step)
+    s = _best_of(step, trace, lambda x: x.poll(), n_req, trials)
+
+    # "after": fused decode blocks, one dispatch + one drain per block
+    cont = _continuous(params, ecfg, sync_every=SYNC_EVERY)
     _warm(cont)
-    c_wall, c_lat, c_toks, c_util = _best_of(
-        cont, trace, lambda s: s.poll(), n_req, trials)
-    # decode-lane utilization — the fraction of batched decode-row-steps a
-    # live request actually wanted — is free of wall-clock measurement
-    # noise (though wave composition still depends on arrival interleaving)
+    c = _best_of(cont, trace, lambda x: x.poll(), n_req, trials)
+
+    wm, sm, cm = _metrics(w), _metrics(s), _metrics(c)
+    # the tentpole claim, asserted: fused blocks cut host dispatches per
+    # decoded token from ~1/step to ~1/sync_every
+    assert sm["dispatches_per_step"] == 1.0, sm
+    assert cm["dispatches_per_step"] <= 0.5, cm
+    assert cm["decode_dispatches"] < sm["decode_dispatches"]
+
+    if write_json:
+        _append_json({
+            "bench": "serving_trace_poisson",
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "backend": jax.default_backend(),
+            "policy": policy,
+            "n_req": n_req,
+            "max_new": {"short": SHORT_NEW, "long": LONG_NEW,
+                        "p_long": P_LONG},
+            "sync_every": SYNC_EVERY,
+            "wave": wm,
+            "continuous_per_step": sm,
+            "continuous_fused": cm,
+            "speedup_fused_vs_wave": round(w["wall"] / max(c["wall"], 1e-9),
+                                           3),
+            "speedup_fused_vs_per_step": round(
+                s["wall"] / max(c["wall"], 1e-9), 3),
+        })
+
+    def _row(name, b, m):
+        extra = ""
+        if "dispatches_per_step" in m:
+            extra = (f";disp_per_tok={m['dispatches_per_token']};"
+                     f"disp_per_step={m['dispatches_per_step']};"
+                     f"admits={m['admit_dispatches']}/{m['admitted']}")
+        return row(name, b["wall"] * 1e6,
+                   f"wall_ms={b['wall']*1e3:.1f};"
+                   f"mean_lat_ms={m['mean_latency_ms']:.1f};"
+                   f"p95_lat_ms={m['p95_latency_ms']:.1f};"
+                   f"tok_s={m['tokens_per_s']:.1f};"
+                   f"lane_util={m['lane_util']:.2f}" + extra)
+
     return [
-        row("serving_trace_wave", w_wall * 1e6,
-            f"wall_ms={w_wall*1e3:.1f};mean_lat_ms={w_lat.mean()*1e3:.1f};"
-            f"p95_lat_ms={np.percentile(w_lat, 95)*1e3:.1f};"
-            f"tok_s={w_toks/max(w_wall, 1e-9):.1f};"
-            f"lane_util={w_util:.2f}"),
-        row("serving_trace_continuous", c_wall * 1e6,
-            f"wall_ms={c_wall*1e3:.1f};mean_lat_ms={c_lat.mean()*1e3:.1f};"
-            f"p95_lat_ms={np.percentile(c_lat, 95)*1e3:.1f};"
-            f"tok_s={c_toks/max(c_wall, 1e-9):.1f};"
-            f"lane_util={c_util:.2f}"),
+        _row("serving_trace_wave", w, wm),
+        _row("serving_trace_continuous_step", s, sm),
+        _row("serving_trace_continuous_fused", c, cm),
         row("serving_trace_speedup", 0.0,
-            f"wallclock_speedup={w_wall/max(c_wall, 1e-9):.2f}x;"
-            f"lane_util_gain={c_util/max(w_util, 1e-9):.2f}x;"
+            f"fused_vs_wave={w['wall']/max(c['wall'], 1e-9):.2f}x;"
+            f"fused_vs_per_step={s['wall']/max(c['wall'], 1e-9):.2f}x;"
+            f"lane_util_gain={c['util']/max(w['util'], 1e-9):.2f}x;"
             f"n_req={n_req};max_new={SHORT_NEW}|{LONG_NEW}@p{P_LONG}"),
     ]
 
 
+def smoke():
+    """CI smoke: prove the fused decode block + batched admission compile
+    and run, and that the dispatch counters show the fusion — tiny trace,
+    one trial, no JSON write."""
+    for r in serving_trace(quick=True, n_req=8, write_json=False):
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    print("serving_bench smoke OK")
+
+
 ALL = [serving_trace]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run: compile + dispatch-counter asserts, "
+                         "no BENCH_serving.json write")
+    ap.add_argument("--policy", default="sliding_window")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        for r in serving_trace(quick=args.quick, policy=args.policy):
+            print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")

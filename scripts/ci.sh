@@ -18,6 +18,9 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 echo "== quickstart example =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py
 
+echo "== serving bench smoke (fused decode blocks) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serving_bench --smoke
+
 if [[ "${1:-}" == "--with-benchmarks" ]]; then
     echo "== quick benchmarks =="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick

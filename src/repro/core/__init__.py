@@ -2,7 +2,8 @@
 # Algorithm-1 budget reallocation -> policy-driven slot arenas.
 from repro.core.allocation import BudgetPlan, allocate, plan_cache_bytes, uniform_plan
 from repro.core.cache import (SlotCache, clear_row, compact, empty_cache,
-                              insert_row, pad_cache, write_token)
+                              insert_row, insert_rows, pad_cache,
+                              write_token)
 from repro.core.kmeans import kmeans_1d, kmeans_1d_jax
 from repro.core.policies import (H2O, POLICIES, SINK_H2O, SLIDING_WINDOW,
                                  STREAMING_LLM, PolicyConfig)
@@ -10,7 +11,7 @@ from repro.core.policies import (H2O, POLICIES, SINK_H2O, SLIDING_WINDOW,
 __all__ = [
     "BudgetPlan", "allocate", "uniform_plan", "plan_cache_bytes",
     "SlotCache", "compact", "empty_cache", "pad_cache", "write_token",
-    "insert_row", "clear_row",
+    "insert_row", "insert_rows", "clear_row",
     "kmeans_1d", "kmeans_1d_jax",
     "PolicyConfig", "POLICIES", "SLIDING_WINDOW", "STREAMING_LLM", "H2O",
     "SINK_H2O",

@@ -98,6 +98,21 @@ def insert_row(arena: SlotCache, row_cache: SlotCache, row) -> SlotCache:
                                                  tuple(row_cache))))
 
 
+def insert_rows(arena: SlotCache, rows_cache: SlotCache, rows) -> SlotCache:
+    """Scatter `n` requests' [L, n, S, ...] caches into batch rows `rows`.
+
+    Batched-admission analogue of `insert_row`: `rows` is a traced int32
+    vector, so one compiled scatter serves every combination of free slots.
+    Row indices >= the arena batch are DROPPED (``mode="drop"``) — a partial
+    admit batch pads with the sentinel index `max_concurrency` and its pad
+    rows never land.
+    """
+    def upd(a, u):
+        return a.at[:, rows].set(u.astype(a.dtype), mode="drop")
+    return SlotCache(*(upd(a, u) for a, u in zip(tuple(arena),
+                                                 tuple(rows_cache))))
+
+
 def clear_row(arena: SlotCache, row) -> SlotCache:
     """Mark every slot of batch row `row` empty (pos -1, score 0).
 

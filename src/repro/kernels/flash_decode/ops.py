@@ -1,5 +1,14 @@
-"""jit'd wrapper: pad -> kernel partials -> combine epilogue (+H2O pass)."""
+"""jit'd wrapper: pad -> kernel partials -> combine epilogue (+H2O pass).
+
+The combine epilogue also folds in the current decode token's self-attention
+term (``extra_kv``): the new token is one more split-S partial with a single
+slot, so the serving hot path (`models/attention.decode_attention` with
+``use_flash=True``) gets a jointly-normalized softmax over cache + new token
+without a cache-sized concatenate.
+"""
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -19,12 +28,16 @@ def _pad_arena(k, v, pos, block_s):
 
 
 def flash_decode(q, k, v, pos, t, window, *, block_s: int = 512,
-                 softcap=None, return_colsums: bool = False,
+                 softcap=None, extra_kv=None, return_colsums: bool = False,
                  interpret: bool = True):
     """Budgeted decode attention via the Pallas split-S kernel.
 
     q [B,Hkv,G,hd], k/v [B,S,Hkv,hd], pos [B,S], t [B], window scalar.
-    Returns (out [B,Hkv,G,hd] f32, colsums [B,Hkv,S] f32 | None).
+    ``extra_kv`` (k_new, v_new) [B,1,Hkv,hd] appends the current token as a
+    jointly-softmaxed extra slot (the serving decode step's self-attention
+    term).  Returns (out [B,Hkv,G,hd] f32, colsums f32 | None); colsums are
+    [B,Hkv,S] — or [B,Hkv,S+1] with ``extra_kv``, the last column being the
+    new token's mass (summed over the q-group, matching the ref oracle).
     """
     S_orig = k.shape[1]
     block_s = min(block_s, max(64, 1 << (S_orig - 1).bit_length()))
@@ -33,6 +46,23 @@ def flash_decode(q, k, v, pos, t, window, *, block_s: int = 512,
     m_p, l_p, acc_p = K.flash_decode_partials(
         q, k, v, pos, t, window, block_s=block_s, softcap=softcap,
         interpret=interpret)
+    s_new = None
+    if extra_kv is not None:
+        # the new token is one more partial: a single always-valid slot with
+        # m = its score, l = 1, acc = v_new (broadcast over the q-group)
+        k_new, v_new = extra_kv
+        scale = 1.0 / math.sqrt(q.shape[-1])
+        s_new = jnp.einsum("bngd,bnd->bng", q.astype(jnp.float32),
+                           k_new[:, 0].astype(jnp.float32)) * scale
+        if softcap:
+            s_new = jnp.tanh(s_new / softcap) * softcap
+        m_p = jnp.concatenate([m_p, s_new[:, :, None, :]], axis=2)
+        l_p = jnp.concatenate([l_p, jnp.ones_like(s_new)[:, :, None, :]],
+                              axis=2)
+        v_b = jnp.broadcast_to(
+            v_new[:, 0].astype(jnp.float32)[:, :, None, None, :],
+            acc_p.shape[:2] + (1,) + acc_p.shape[3:])
+        acc_p = jnp.concatenate([acc_p, v_b], axis=2)
     # ---- combine split-S partials (tiny epilogue) ----------------------------
     m = jnp.max(m_p, axis=2)                              # [B,Hkv,G]
     w = jnp.exp(m_p - m[:, :, None])                      # [B,Hkv,nS,G]
@@ -46,4 +76,7 @@ def flash_decode(q, k, v, pos, t, window, *, block_s: int = 512,
         colsums = K.flash_decode_colsums(
             q, k, pos, t, window, m, linv, block_s=block_s, softcap=softcap,
             interpret=interpret)[:, :, :S_orig]
+        if s_new is not None:
+            col_new = jnp.sum(jnp.exp(s_new - m) * linv, axis=-1)  # [B,Hkv]
+            colsums = jnp.concatenate([colsums, col_new[..., None]], axis=-1)
     return out, colsums

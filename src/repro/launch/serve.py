@@ -77,8 +77,12 @@ def _run_continuous(params, cfg, ecfg, args):
     if plan is not None:     # no plan until a first request calibrates it
         print(f"plan: {plan.n_big}x{plan.b_big} + "
               f"{plan.n_small}x{plan.b_small} slots per row")
+    core = sched.core
     print(f"{args.batch} requests, {n_tok} tokens in {wall*1e3:.1f}ms "
           f"({n_tok/max(wall, 1e-9):.1f} tok/s incl. compile)")
+    print(f"host dispatches: {core.decode_dispatches} fused decode blocks "
+          f"for {core.decode_steps} steps (sync_every={args.sync_every}), "
+          f"{core.admit_dispatches} admissions for {core.admitted} requests")
 
 
 def main():
@@ -93,7 +97,12 @@ def main():
     ap.add_argument("--batching", default="oneshot",
                     choices=["oneshot", "continuous"])
     ap.add_argument("--max-concurrency", type=int, default=4)
-    ap.add_argument("--sync-every", type=int, default=4)
+    ap.add_argument("--sync-every", type=int, default=4,
+                    help="decode steps fused into one dispatched block "
+                         "(continuous batching)")
+    ap.add_argument("--flash-decode", action="store_true",
+                    help="route decode attention through the Pallas "
+                         "flash-decode kernel (interpret mode off-TPU)")
     ap.add_argument("--budget-frac", type=float, default=0.4)
     ap.add_argument("--p", type=float, default=0.35)
     ap.add_argument("--batch", type=int, default=2)
@@ -114,7 +123,8 @@ def main():
         budget_frac=args.budget_frac, p=args.p, max_new_tokens=args.max_new,
         bucket=16 if not args.reduced else 4,
         min_budget=16 if not args.reduced else 4,
-        sampler=SamplerConfig(temperature=args.temperature))
+        sampler=SamplerConfig(temperature=args.temperature),
+        use_flash_decode=args.flash_decode)
     if args.batching == "continuous":
         _run_continuous(params, cfg, ecfg, args)
     else:

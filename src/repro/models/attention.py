@@ -210,11 +210,18 @@ def decode_attention(
     slot_pos: jnp.ndarray,     # [B, S_slots] original positions, -1 = empty
     cfg,
     window: jnp.ndarray | int = GLOBAL_WINDOW,
+    use_flash: bool = False,   # Pallas split-S flash-decode kernel path
 ) -> DecodeAttnOut:
     """One-token attention over the compressed cache + the current token.
 
     The new token's KV is attended in-place (appended logically as slot S);
     the caller decides which physical slot it overwrites afterwards.
+
+    With ``use_flash`` the arena read runs through the Pallas flash-decode
+    kernel (`kernels/flash_decode`): split-S partials + combine epilogue,
+    with the new token's self-attention term folded in as one extra partial
+    (``extra_kv``).  Masking (validity/causality/window) and the H2O slot
+    statistic match this dense path; interpret mode is used off-TPU.
     """
     B, S = slot_pos.shape
     pos = t[:, None] if t.ndim == 1 else t          # [B,1] (or [B,1,3] mrope)
@@ -222,6 +229,18 @@ def decode_attention(
     G = cfg.n_heads // cfg.n_kv_heads
     qf = q.reshape(B, cfg.n_kv_heads, G, cfg.hd).astype(jnp.float32)
     t1 = (t if t.ndim == 1 else t[..., 0]).reshape(B)
+
+    if use_flash:
+        from repro.kernels.flash_decode.ops import flash_decode
+        out_f, cols = flash_decode(
+            qf, cache_k, cache_v, slot_pos, t1, window,
+            softcap=cfg.attn_softcap, extra_kv=(k_new, v_new),
+            return_colsums=True,
+            interpret=jax.default_backend() != "tpu")
+        out = out_f.reshape(B, 1, cfg.q_dim).astype(x.dtype) @ p.wo
+        # kernel colsums sum over the q-group; the H2O statistic here is the
+        # group mean, matching the dense branch below
+        return DecodeAttnOut(out, cols / G, k_new, v_new)
 
     # The arena is read exactly once for K and once for V, in its own bf16
     # dtype (an `astype(f32)` here materializes an f32 copy of the WHOLE

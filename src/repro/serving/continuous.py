@@ -8,19 +8,26 @@ compute.  This module is the token-level alternative (DESIGN.md §5):
     the two SqueezeAttention budget tiers; tier sizes are fixed once (from
     the engine config, plus Algorithm-1 calibration on the first admitted
     request in squeeze mode), so the decode step compiles exactly once.
-  * **Admission**: a request is prefilled alone (prompt bucketed, batch 1),
-    then one fused admit executable per bucket compacts it into the fixed
-    tier budgets (the same Algorithm-1 machinery the one-shot engine uses),
-    samples its first token and writes the row slice (`insert_row`) — the
-    row index is *traced*, so inserting into any slot reuses the executable
-    and never touches the decode step.
+  * **Admission**: queued arrivals are prefilled *together* (prompts
+    bucketed to one shape, the admission batch padded to a power of two so
+    burst sizes reuse executables), then one fused admit executable per
+    (batch, prompt) bucket compacts them into the fixed tier budgets (the
+    same Algorithm-1 machinery the one-shot engine uses), samples their
+    first tokens and scatters the row slices (`insert_rows`) — row indices
+    are *traced*, so inserting into any slots reuses the executable and
+    never touches the decode step.
+  * **Fused decode blocks**: the host does NOT dispatch per token.  One
+    donated `lax.scan` executable runs `sync_every` decode steps back to
+    back, appending each step's ``(token, active)`` into an on-device
+    emission buffer carried in `ContinuousState`; `decode_block` launches
+    it once and drains the buffer with one device→host read per block.
   * **Retirement**: the decode step itself lowers a row's `active` flag when
     it emits EOS or exhausts its token budget — liveness is decided on
     device with no host round-trip in the hot loop.  The host reads the mask
-    only every `sync_every` steps, clears the retired row's slots
-    (`clear_row`) and recycles it.
-  * **Streaming**: completed requests are harvested at every sync point, so
-    short requests leave (and new ones enter) while long ones keep decoding.
+    only at block boundaries, clears the retired row's slots (`clear_row`)
+    and recycles it.
+  * **Streaming**: completed requests are harvested at every block boundary,
+    so short requests leave (and new ones enter) while long ones decode.
 
 Retired rows still occupy SIMD lanes until recycled (dense batched compute
 cannot drop a row), but they stop extending their caches and — the actual
@@ -30,17 +37,18 @@ idling until the longest wave member finishes.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, NamedTuple, Optional
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.allocation import BudgetPlan
-from repro.core.cache import clear_row, empty_cache, insert_row
-from repro.serving.decode import DecodeState, make_tier_indices, serve_step
+from repro.core.cache import clear_row, empty_cache, insert_rows
+from repro.serving.decode import (DecodeState, make_tier_indices,
+                                  sampled_step)
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.prefill import pad_prompt
+from repro.serving.prefill import pad_prompts
 from repro.serving.sampler import sample
 
 
@@ -50,15 +58,24 @@ class ContinuousConfig:
     prompt_bucket: int = 32       # admission prefill shape quantization
     max_prompt_len: int = 128     # admission cap (sizes full-cache arenas)
     max_new_cap: int = 64         # per-request max_new clamp (ditto)
-    sync_every: int = 4           # decode steps between host syncs
+    sync_every: int = 4           # decode steps fused into one block
 
 
 class ContinuousState(NamedTuple):
-    """Carried across decode blocks; `dec.active` is the on-device liveness."""
+    """Carried across decode blocks; `dec.active` is the on-device liveness.
+
+    ``emit_tok`` / ``emit_act`` are the on-device emission buffer: slot ``i``
+    holds step ``i``-of-the-block's sampled tokens and the pre-step active
+    mask (whether the emission counts for that row).  The buffer lives on
+    device so a fused block never ships per-step arrays to the host; the
+    host drains rows ``[0, n_block)`` once per block.
+    """
     dec: DecodeState
     token: jnp.ndarray       # [B] int32 next input token per row
     remaining: jnp.ndarray   # [B] int32 tokens each row may still emit
     key: jnp.ndarray         # PRNG key (stochastic sampling only)
+    emit_tok: jnp.ndarray    # [sync_every, B] int32 emission buffer
+    emit_act: jnp.ndarray    # [sync_every, B] bool: emission was live
 
 
 @dataclasses.dataclass
@@ -66,6 +83,10 @@ class Completed:
     slot: int
     tokens: np.ndarray       # [n_emitted] int32 (includes EOS if hit)
     decode_steps: int        # steps this request spent in the decode loop
+
+
+def _pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
 
 
 class ContinuousEngine:
@@ -97,6 +118,14 @@ class ContinuousEngine:
         # max_concurrency rows per step; useful = rows that were live
         self.row_steps = 0
         self.useful_row_steps = 0
+        # host-interaction accounting for the perf trajectory
+        # (benchmarks/serving_bench.py): a "dispatch" is one launched
+        # executable; fused blocks make decode_dispatches ~ steps/sync_every
+        self.decode_dispatches = 0
+        self.decode_steps = 0
+        self.admit_dispatches = 0     # prefill+admit launches (batched)
+        self.admitted = 0             # requests admitted
+        self.tokens_emitted = 0       # live tokens streamed to request bufs
         # distinct streams: admission first-token sampling (host side) vs
         # the decode loop's per-step sampling key carried in the state —
         # reusing one key would draw correlated samples on both sides
@@ -105,9 +134,9 @@ class ContinuousEngine:
         # donation lets XLA update the arenas in place; CPU ignores it
         self._donate = {} if jax.default_backend() == "cpu" \
             else {"donate_argnums": (1,)}
-        self._step_fn = None
+        self._block_fns = {}     # n_steps -> compiled fused decode block
         self._clear_fn = None
-        self._admit_fns = {}     # prompt bucket P -> compiled admit
+        self._admit_fns = {}     # (admit batch NB, prompt bucket P) -> admit
 
     # ------------------------------------------------------------ properties
     @property
@@ -115,26 +144,15 @@ class ContinuousEngine:
         return bool(self._free)
 
     @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
     def n_occupied(self) -> int:
         return len(self._occupied)
 
     # ---------------------------------------------------------------- jit fns
     def _build_fns(self):
-        cfg, pol, sc = self.cfg, self.ecfg.policy, self.ecfg.sampler
-        eos = self.ecfg.eos_token
-
-        def step(params, state: ContinuousState):
-            key, sub = jax.random.split(state.key)
-            active_prev = state.dec.active
-            logits, dec = serve_step(params, cfg, pol, state.dec, state.token)
-            nxt = sample(logits, sub, sc)
-            rem = state.remaining - active_prev.astype(jnp.int32)
-            done = active_prev & (rem <= 0)
-            if eos >= 0:
-                done = done | (active_prev & (nxt == eos))
-            dec = dec._replace(active=active_prev & ~done)
-            return nxt, active_prev, ContinuousState(dec, nxt, rem, key)
-
         def clear(state: ContinuousState, row):
             dec = state.dec
             return state._replace(dec=dec._replace(
@@ -143,47 +161,90 @@ class ContinuousEngine:
                 active=dec.active.at[row].set(False)))
 
         donate0 = {} if not self._donate else {"donate_argnums": (0,)}
-        self._step_fn = jax.jit(step, **self._donate)
         self._clear_fn = jax.jit(clear, **donate0)
 
-    def _admit_jit(self, P: int):
-        """Compiled admission for one prompt bucket: Algorithm-1 compaction
-        of the prefill into row-shaped tier arenas, fused with the
-        `insert_request` row write and first-token sampling.  One executable
-        per (bucket, max_concurrency, tier sizes) — the row index is traced,
-        so admitting into ANY slot reuses it.  (Running the compaction
-        eagerly instead costs ~100ms of op-dispatch per admission — it
-        dominated the serving trace before this was fused.)"""
-        if P not in self._admit_fns:
+    def _block_jit(self, n_steps: int):
+        """Compiled fused decode block: `n_steps` serve_step iterations in
+        ONE donated `lax.scan` executable.  Each step samples, updates the
+        on-device `active` mask (EOS / budget exhaustion) and appends
+        ``(token, pre-step active)`` to the emission buffer; the host sees
+        nothing until it drains the buffer at the block boundary.  Memoized
+        per block length — the tail of a drain runs shorter blocks, so at
+        most `sync_every` executables exist."""
+        if n_steps not in self._block_fns:
+            cfg, pol, sc = self.cfg, self.ecfg.policy, self.ecfg.sampler
+            eos = self.ecfg.eos_token
+            use_flash = self.ecfg.use_flash_decode
+
+            def block(params, state: ContinuousState) -> ContinuousState:
+                def body(st, i):
+                    active_prev = st.dec.active
+                    nxt, dec, key = sampled_step(
+                        params, cfg, pol, sc, st.dec, st.token, st.key,
+                        use_flash=use_flash)
+                    rem = st.remaining - active_prev.astype(jnp.int32)
+                    done = active_prev & (rem <= 0)
+                    if eos >= 0:
+                        done = done | (active_prev & (nxt == eos))
+                    dec = dec._replace(active=active_prev & ~done)
+                    return ContinuousState(
+                        dec, nxt, rem, key,
+                        jax.lax.dynamic_update_index_in_dim(
+                            st.emit_tok, nxt, i, 0),
+                        jax.lax.dynamic_update_index_in_dim(
+                            st.emit_act, active_prev, i, 0)), None
+
+                state, _ = jax.lax.scan(body, state,
+                                        jnp.arange(n_steps, dtype=jnp.int32))
+                return state
+
+            self._block_fns[n_steps] = jax.jit(block, **self._donate)
+        return self._block_fns[n_steps]
+
+    def _admit_jit(self, NB: int, P: int):
+        """Compiled admission for one (admit batch, prompt) bucket:
+        Algorithm-1 compaction of the batched prefill into row-shaped tier
+        arenas, fused with the `insert_rows` scatter and first-token
+        sampling.  One executable per (NB, P, max_concurrency, tier sizes) —
+        row indices are traced, so admitting into ANY slots reuses it, and
+        pad rows of a partial admit batch carry the drop sentinel
+        ``max_concurrency`` so their scatter is discarded.  (Running the
+        compaction eagerly instead costs ~100ms of op-dispatch per
+        admission — it dominated the serving trace before this was fused.)"""
+        key = (NB, P)
+        if key not in self._admit_fns:
             eng, plan, sc = self.engine, self.plan, self.ecfg.sampler
             eos = self.ecfg.eos_token
 
-            def admit_fn(state: ContinuousState, row, pre, rem0, key):
-                rs = eng.build_state(pre, plan, 1)     # [L, 1, S, ...] rows
-                token0 = sample(pre.last_logits, key, sc)[0]
-                act0 = jnp.asarray(rem0 > 0)
+            def admit_fn(state: ContinuousState, rows, pre, rem0, akey):
+                rs = eng.build_state(pre, plan, NB)   # [L, NB, S, ...] rows
+                token0 = sample(pre.last_logits, akey, sc)       # [NB]
+                act0 = rem0 > 0
                 if eos >= 0:
                     act0 = act0 & (token0 != eos)
                 dec = state.dec
                 dec = dec._replace(
-                    big=insert_row(dec.big, rs.big, row),
-                    small=insert_row(dec.small, rs.small, row),
-                    t=dec.t.at[row].set(rs.t[0].astype(dec.t.dtype)),
-                    active=dec.active.at[row].set(act0))
+                    big=insert_rows(dec.big, rs.big, rows),
+                    small=insert_rows(dec.small, rs.small, rows),
+                    t=dec.t.at[rows].set(rs.t.astype(dec.t.dtype),
+                                         mode="drop"),
+                    active=dec.active.at[rows].set(act0, mode="drop"))
                 return token0, ContinuousState(
                     dec,
-                    state.token.at[row].set(token0.astype(state.token.dtype)),
-                    state.remaining.at[row].set(rem0),
-                    state.key)
+                    state.token.at[rows].set(
+                        token0.astype(state.token.dtype), mode="drop"),
+                    state.remaining.at[rows].set(rem0, mode="drop"),
+                    state.key, state.emit_tok, state.emit_act)
 
             donate0 = {} if not self._donate else {"donate_argnums": (0,)}
-            self._admit_fns[P] = jax.jit(admit_fn, **donate0)
-        return self._admit_fns[P]
+            self._admit_fns[key] = jax.jit(admit_fn, **donate0)
+        return self._admit_fns[key]
 
     # ------------------------------------------------------------- state init
     def _init_state(self) -> ContinuousState:
         cfg, plan = self.cfg, self.plan
         B = self.ccfg.max_concurrency
+        E = self.ccfg.sync_every
         dtype = jnp.dtype(cfg.dtype)
 
         def tier(n_layers, budget):
@@ -204,14 +265,17 @@ class ContinuousEngine:
             dec,
             token=jnp.zeros((B,), jnp.int32),
             remaining=jnp.zeros((B,), jnp.int32),
-            key=self._state_key)
+            key=self._state_key,
+            emit_tok=jnp.zeros((E, B), jnp.int32),
+            emit_act=jnp.zeros((E, B), bool))
 
     def _ensure_plan(self, pre):
         """Fix (tier sizes, layer grouping) on first admission.
 
-        In squeeze mode the grouping calibrates on the first request's
-        cosine sims (Algorithm 1); full/uniform are request-independent.
-        Everything afterwards reuses the same compiled executables.
+        In squeeze mode the grouping calibrates on the first admitted
+        batch's cosine sims (Algorithm 1, batch-averaged); full/uniform are
+        request-independent.  Everything afterwards reuses the same
+        compiled executables.
         """
         if self.plan is not None:
             return
@@ -226,36 +290,63 @@ class ContinuousEngine:
     def admit(self, prompt: np.ndarray, max_new: int) -> int:
         """Prefill one request and insert it into a free row; returns the
         slot.  Raises if no row is free (callers check `has_free`)."""
-        assert self._free, "no free slot — check has_free before admit"
-        max_new = min(max_new, self.ccfg.max_new_cap)
-        toks, valid = pad_prompt(np.asarray(prompt, np.int32),
-                                 self.ccfg.prompt_bucket,
-                                 self.ccfg.max_prompt_len)
-        B, P = toks.shape
-        pre = self.engine.prefill_jit(B, P)(self.params, toks, None, None,
-                                            valid)
+        return self.admit_many([(prompt, max_new)])[0]
+
+    def admit_many(self, reqs: Sequence[Tuple[np.ndarray, int]]) -> List[int]:
+        """Admit up to `n_free` requests with ONE prefill dispatch and ONE
+        fused admit executable (MaxText `prefill_insert_batch` style).
+
+        Prompts are bucketed together (`pad_prompts`), the admit batch is
+        padded to a power of two (pad rows replicate request 0 and are
+        dropped by the scatter's sentinel row index), so a handful of
+        (batch, prompt) buckets serves any arrival burst.  Returns the slot
+        per request, in order.
+        """
+        assert reqs, "admit_many needs at least one request"
+        assert len(reqs) <= len(self._free), \
+            "not enough free slots — check n_free before admit_many"
+        prompts = [np.asarray(p, np.int32) for p, _ in reqs]
+        max_news = [min(mn, self.ccfg.max_new_cap) for _, mn in reqs]
+        n = len(reqs)
+        NB = _pow2(n)
+        toks, valid = pad_prompts(prompts, self.ccfg.prompt_bucket,
+                                  batch=NB, max_len=self.ccfg.max_prompt_len)
+        for i in range(n, NB):        # pad rows replicate request 0
+            toks[i], valid[i] = toks[0], valid[0]
+        P = toks.shape[1]
+        pre = self.engine.prefill_jit(NB, P)(self.params, toks, None, None,
+                                             valid)
         self._ensure_plan(pre)
+        self.admit_dispatches += 1
 
         self._host_key, sub = jax.random.split(self._host_key)
-        rem0 = max_new - 1
-        slot = self._free.pop(0)
-        token0, self.state = self._admit_jit(P)(
-            self.state, slot, pre, rem0, sub)
-        tok0 = int(token0)
+        slots = [self._free.pop(0) for _ in range(n)]
+        B = self.ccfg.max_concurrency
+        rows = np.asarray(slots + [B] * (NB - n), np.int32)   # B = drop
+        rem0 = np.asarray([mn - 1 for mn in max_news] + [0] * (NB - n),
+                          np.int32)
+        token0, self.state = self._admit_jit(NB, P)(
+            self.state, rows, pre, rem0, sub)
+        tok0 = np.asarray(token0)
         eos = self.ecfg.eos_token
-        act0 = rem0 > 0 and not (eos >= 0 and tok0 == eos)
-        self._buf[slot] = [tok0]
-        self._max_new[slot] = max_new
-        self._steps[slot] = 0
-        self._occupied.append(slot)
-        if not act0:
-            self._retire(slot)
-        return slot
+        for i, slot in enumerate(slots):
+            t0 = int(tok0[i])
+            self._buf[slot] = [t0]
+            self._max_new[slot] = max_news[i]
+            self._steps[slot] = 0
+            self._occupied.append(slot)
+            self.admitted += 1
+            self.tokens_emitted += 1
+            if not (rem0[i] > 0 and not (eos >= 0 and t0 == eos)):
+                self._retire(slot)
+        return slots
 
     # ------------------------------------------------------------ decode loop
     def decode_block(self) -> int:
-        """Run `sync_every` decode steps, harvest emissions, retire finished
-        rows.  Returns the number of requests completed in this block."""
+        """Run one fused block of up to `sync_every` decode steps (ONE
+        dispatch), drain the on-device emission buffer (ONE device→host
+        read), retire finished rows.  Returns the number of requests
+        completed in this block."""
         if not self._occupied:
             return 0
         # the host knows an exact upper bound on useful steps this block:
@@ -263,20 +354,23 @@ class ContinuousEngine:
         # past the longest remaining token budget
         bound = max(self._max_new[s] - 1 - self._steps[s]
                     for s in self._occupied)
-        trace = []
-        for _ in range(max(1, min(self.ccfg.sync_every, bound))):
-            nxt, act_prev, self.state = self._step_fn(self.params, self.state)
-            trace.append((nxt, act_prev))
+        n = max(1, min(self.ccfg.sync_every, bound))
+        self.state = self._block_jit(n)(self.params, self.state)
+        self.decode_dispatches += 1
+        self.decode_steps += n
+        # the block's only device→host transfer: emissions + liveness
+        emit_tok, emit_act, active_now = jax.device_get(
+            (self.state.emit_tok, self.state.emit_act, self.state.dec.active))
         before = len(self._completed)
-        for nxt, act_prev in trace:
-            nxt, act_prev = np.asarray(nxt), np.asarray(act_prev)
+        for i in range(n):
+            nxt, act_prev = emit_tok[i], emit_act[i]
             self.row_steps += self.ccfg.max_concurrency
             self.useful_row_steps += int(act_prev.sum())
             for s in self._occupied:
                 if act_prev[s]:
                     self._buf[s].append(int(nxt[s]))
                     self._steps[s] += 1
-        active_now = np.asarray(self.state.dec.active)
+                    self.tokens_emitted += 1
         for s in list(self._occupied):
             if not active_now[s]:
                 self._retire(s)
@@ -301,5 +395,3 @@ class ContinuousEngine:
     def pop_completed(self) -> List[Completed]:
         out, self._completed = self._completed, []
         return out
-
-

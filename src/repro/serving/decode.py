@@ -27,6 +27,7 @@ from repro.models import ssm as ssm_lib
 from repro.models.config import ModelConfig
 from repro.models.norms import apply_norm
 from repro.models.transformer import layer_windows
+from repro.serving.sampler import sample
 
 
 class DecodeState(NamedTuple):
@@ -67,11 +68,16 @@ def _tier_write(tier: SlotCache, lc: SlotCache, j) -> SlotCache:
         tuple(tier), tuple(lc)))
 
 
-def _attend_tier(bp, cfg, pol, h, t, tier, j, window):
-    """Attention over one layer's arena in `tier`; in-place arena update."""
+def _attend_tier(bp, cfg, pol, h, t, tier, j, window, use_flash=False):
+    """Attention over one layer's arena in `tier`; in-place arena update.
+
+    ``use_flash`` routes the arena read through the Pallas flash-decode
+    kernel (split-S partials + combine epilogue) instead of the dense einsum
+    — same masking, same H2O statistic, chosen by `EngineConfig`."""
     lc = _tier_read(tier, j)
     ap = attn_lib.AttnParams(**bp["attn"])
-    out = attn_lib.decode_attention(ap, h, t, lc.k, lc.v, lc.pos, cfg, window)
+    out = attn_lib.decode_attention(ap, h, t, lc.k, lc.v, lc.pos, cfg, window,
+                                    use_flash=use_flash)
     probs = out.slot_probs.mean(axis=1)          # [B, S+1] kv-head mean
     # barrier: k/v_new are bf16 casts of f32 rope outputs; without it XLA's
     # convert-sinking rewrites the slot write into an f32 scatter over the
@@ -81,16 +87,18 @@ def _attend_tier(bp, cfg, pol, h, t, tier, j, window):
     return out.out, _tier_write(tier, new_lc, j)
 
 
-def _attn_decode_block(bp, cfg, pol, x, t, big, small, is_small, j, window):
+def _attn_decode_block(bp, cfg, pol, x, t, big, small, is_small, j, window,
+                       use_flash=False):
     """norm -> tiered cached attention -> residual."""
     h = apply_norm(bp["attn_norm"], x, cfg)
 
     def on_small(_):
-        o, small2 = _attend_tier(bp, cfg, pol, h, t, small, j, window)
+        o, small2 = _attend_tier(bp, cfg, pol, h, t, small, j, window,
+                                 use_flash)
         return o, big, small2
 
     def on_big(_):
-        o, big2 = _attend_tier(bp, cfg, pol, h, t, big, j, window)
+        o, big2 = _attend_tier(bp, cfg, pol, h, t, big, j, window, use_flash)
         return o, big2, small
 
     out, big, small = jax.lax.cond(is_small == 1, on_small, on_big, None)
@@ -123,6 +131,7 @@ def serve_step(
     state: DecodeState,
     token: jnp.ndarray,          # [B] int32 current input token
     embeds: Optional[jnp.ndarray] = None,   # [B, 1, d] overrides token embed
+    use_flash: bool = False,     # Pallas flash-decode for the arena reads
 ):
     """One decode step: token -> logits [B, V], updated DecodeState."""
     x = _embed_token(params, cfg, token) if embeds is None else embeds
@@ -172,7 +181,7 @@ def serve_step(
             x, (st2, cv2) = jax.lax.scan(inner, x, (bps, st_sb, cv_sb))
             x, big, small = _attn_decode_block(
                 sp, cfg, pol, x, t, big, small, is_small, j,
-                attn_lib.GLOBAL_WINDOW)
+                attn_lib.GLOBAL_WINDOW, use_flash)
             h2 = apply_norm(sp["mlp_norm"], x, cfg)
             x = x + mlp_lib.apply_mlp(mlp_lib.MlpParams(**sp["mlp"]), h2, cfg)
             return (x, big, small), (st2, cv2)
@@ -191,7 +200,8 @@ def serve_step(
             x, big, small = carry
             bp, window, is_small, j = inp
             x, big, small = _attn_decode_block(
-                bp, cfg, pol, x, t, big, small, is_small, j, window)
+                bp, cfg, pol, x, t, big, small, is_small, j, window,
+                use_flash)
             x = _ffn_decode(bp, cfg, x)
             return (x, big, small), None
 
@@ -208,3 +218,17 @@ def serve_step(
         logits = jnp.where(jnp.arange(cfg.v_padded) >= cfg.vocab_size,
                            -1e30, logits)
     return logits, new_state
+
+
+def sampled_step(params, cfg, pol, sc, state: DecodeState, token, key,
+                 use_flash: bool = False):
+    """split key -> serve_step -> sample: the shared core of every fused
+    decode scan body (one-shot `Engine._block_fn` blocks and the continuous
+    engine's `_block_jit` blocks) — kept in ONE place so the per-step
+    PRNG-split discipline can never diverge between the two paths.
+
+    Returns (next_token [B], new DecodeState, advanced key)."""
+    key, sub = jax.random.split(key)
+    logits, state = serve_step(params, cfg, pol, state, token,
+                               use_flash=use_flash)
+    return sample(logits, sub, sc), state, key

@@ -36,7 +36,8 @@ from repro.core.cache import SlotCache, compact, pad_cache
 from repro.core.policies import PolicyConfig
 from repro.models.config import ModelConfig
 from repro.models.transformer import n_attn_layers
-from repro.serving.decode import DecodeState, make_tier_indices, serve_step
+from repro.serving.decode import (DecodeState, make_tier_indices,
+                                  sampled_step, serve_step)
 from repro.serving.prefill import prefill
 from repro.serving.sampler import SamplerConfig, sample
 
@@ -53,7 +54,8 @@ class EngineConfig:
     max_new_tokens: int = 64
     sampler: SamplerConfig = SamplerConfig()
     eos_token: int = -1                # >=0: stop rows at EOS (masked to eos)
-    eos_check_every: int = 8           # host sync cadence for early exit
+    eos_check_every: int = 8           # fused decode-block length / early exit
+    use_flash_decode: bool = False     # Pallas flash-decode for arena reads
 
     def b_init(self, prompt_len: int, max_new: int) -> int:
         if self.mode == "full":
@@ -85,6 +87,8 @@ class Engine:
         self.ecfg = ecfg
         self._prefill_cache = {}
         self._step_cache = {}
+        self._block_cache = {}
+        self.decode_dispatches = 0    # fused-block executable launches
 
     # ------------------------------------------------------------------ jit
     def prefill_jit(self, batch: int, prompt_len: int):
@@ -100,16 +104,49 @@ class Engine:
         return self._prefill_cache[key]
 
     def _step_fn(self, key):
+        """Single decode step (one dispatch per token).  The generate loop
+        runs on `_block_fn` instead; this stays as the per-step reference
+        the fused path is pinned against (tests/test_fused_decode.py)."""
         if key not in self._step_cache:
             cfg, pol = self.cfg, self.ecfg.policy
+            use_flash = self.ecfg.use_flash_decode
 
             def step(params, state, token, rngkey):
-                logits, state = serve_step(params, cfg, pol, state, token)
+                logits, state = serve_step(params, cfg, pol, state, token,
+                                           use_flash=use_flash)
                 nxt = sample(logits, rngkey, self.ecfg.sampler)
                 return nxt, logits, state
 
             self._step_cache[key] = jax.jit(step)
         return self._step_cache[key]
+
+    def _block_fn(self, shape_key, n_steps: int):
+        """Fused decode block: `n_steps` serve_step+sample iterations in one
+        `lax.scan` executable, emitting the block's tokens [n_steps, B] and
+        carrying a running per-row `done` mask — the host checks EOS once
+        per block on the mask instead of re-scanning emitted tokens."""
+        key = (shape_key, n_steps)
+        if key not in self._block_cache:
+            cfg, pol, sc = self.cfg, self.ecfg.policy, self.ecfg.sampler
+            eos = self.ecfg.eos_token
+            use_flash = self.ecfg.use_flash_decode
+
+            def block(params, state, token, rngkey, done):
+                def body(carry, _):
+                    state, token, rngkey, done = carry
+                    if eos >= 0:
+                        done = done | (token == eos)
+                    nxt, state, rngkey = sampled_step(
+                        params, cfg, pol, sc, state, token, rngkey,
+                        use_flash=use_flash)
+                    return (state, nxt, rngkey, done), token
+
+                (state, token, rngkey, done), toks = jax.lax.scan(
+                    body, (state, token, rngkey, done), None, length=n_steps)
+                return toks, state, token, rngkey, done
+
+            self._block_cache[key] = jax.jit(block)
+        return self._block_cache[key]
 
     # ----------------------------------------------------------- allocation
     def plan_budgets(self, cos_sims: np.ndarray, prompt_len: int,
@@ -194,26 +231,40 @@ class Engine:
         t2 = time.perf_counter()
 
         shape_key = (B, P, plan.b_big, plan.b_small, plan.n_big, plan.n_small)
-        step = self._step_fn(shape_key)
         token = sample(pre.last_logits, jax.random.PRNGKey(seed),
                        self.ecfg.sampler)
-        out = []
         key = jax.random.PRNGKey(seed + 1)
         eos = self.ecfg.eos_token
-        for i in range(max_new):
-            out.append(token)
-            key, sub = jax.random.split(key)
-            token, _, state = step(self.params, state, token, sub)
-            if eos >= 0 and (i + 1) % self.ecfg.eos_check_every == 0:
-                done = np.asarray(jnp.stack(out) == eos).any(axis=0)
-                if done.all():
-                    break
+        done = jnp.zeros((B,), bool)
+        # block schedule: with no EOS there is nothing to check between
+        # steps, so the WHOLE generation fuses into one dispatch; with EOS,
+        # blocks of `eos_check_every` steps and one host look at the running
+        # `done` mask per block (the old loop re-stacked every emitted token
+        # per check — O(steps^2) host work)
+        if eos >= 0:
+            every = max(1, self.ecfg.eos_check_every)
+            sizes = [every] * (max_new // every)
+            if max_new % every:
+                sizes.append(max_new % every)
+        else:
+            sizes = [max_new]
+        blocks = []
+        emitted = 0
+        for nblk in sizes:
+            btoks, state, token, key, done = self._block_fn(
+                shape_key, nblk)(self.params, state, token, key, done)
+            self.decode_dispatches += 1
+            blocks.append(btoks)
+            emitted += nblk
+            if eos >= 0 and emitted < max_new \
+                    and bool(np.asarray(done).all()):
+                break
         jax.block_until_ready(token)
         t3 = time.perf_counter()
 
         slots = 0 if self.cfg.is_ssm_only else \
             plan.n_big * plan.b_big + plan.n_small * plan.b_small
-        toks = np.stack([np.asarray(t) for t in out], axis=1)
+        toks = np.concatenate([np.asarray(b) for b in blocks], axis=0).T
         if eos >= 0:   # mask everything after the first EOS per row
             hit = np.cumsum(toks == eos, axis=1) > 0
             mask = np.concatenate(

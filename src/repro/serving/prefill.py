@@ -16,16 +16,24 @@ from repro.models.transformer import forward
 
 
 def pad_prompts(prompts: Sequence[np.ndarray], bucket: int,
-                batch: Optional[int] = None):
+                batch: Optional[int] = None,
+                max_len: Optional[int] = None):
     """Host-side shape bucketing shared by every serving client.
 
     Right-pads 1-D prompts to the next multiple of `bucket` (over the longest
     prompt) and to `batch` rows, returning ``(tokens [B, P] int32,
     valid [B, P] bool)``.  Prefill executables are memoized on (B, P), so
     bucketing here is what makes repeated traffic hit compiled code.
+    `max_len` raises on over-long prompts (the continuous-batching admission
+    cap — arena sizes are fixed at plan time).
     """
     B = batch if batch is not None else len(prompts)
     assert len(prompts) <= B
+    if max_len is not None:
+        for p in prompts:
+            if len(p) > max_len:
+                raise ValueError(f"prompt length {len(p)} exceeds "
+                                 f"max_prompt_len {max_len}")
     plen = max(len(p) for p in prompts)
     P = ((plen + bucket - 1) // bucket) * bucket
     toks = np.zeros((B, P), np.int32)
@@ -38,11 +46,9 @@ def pad_prompts(prompts: Sequence[np.ndarray], bucket: int,
 
 def pad_prompt(prompt: np.ndarray, bucket: int,
                max_len: Optional[int] = None):
-    """Single-request `pad_prompts` (continuous-batching admission)."""
-    if max_len is not None and len(prompt) > max_len:
-        raise ValueError(
-            f"prompt length {len(prompt)} exceeds max_prompt_len {max_len}")
-    return pad_prompts([np.asarray(prompt, np.int32)], bucket)
+    """Single-request `pad_prompts`."""
+    return pad_prompts([np.asarray(prompt, np.int32)], bucket,
+                       max_len=max_len)
 
 
 class PrefillOut(NamedTuple):

@@ -111,8 +111,9 @@ class ContinuousScheduler(_RequestQueue):
     """Interleaved admit/decode loop over the persistent-arena core.
 
     Same submit/run_until_empty surface as `WaveScheduler`; each `poll`
-    fills every free row from the queue (prefill → fused admit), then
-    decodes one block, streaming out whatever finished.  Under greedy
+    fills every free row from the queue with ONE batched admission
+    (bucketed multi-request prefill → fused admit scatter), then decodes
+    one fused block, streaming out whatever finished.  Under greedy
     sampling per-request outputs are token-identical to solo
     `Engine.generate` runs *when budgets are request-independent* — mode
     "full", or `budget_abs` set (with `budget_frac` the continuous plan
@@ -151,8 +152,14 @@ class ContinuousScheduler(_RequestQueue):
         """One scheduler iteration: admit → decode block → harvest."""
         done = self._harvest()
         while self.queue and self.core.has_free:
-            r = self.queue.pop(0)
-            self._slot_req[self.core.admit(r.prompt, r.max_new)] = r
+            # batched admission: every queued arrival that fits a free row
+            # shares ONE bucketed prefill and ONE fused admit executable
+            take = min(len(self.queue), self.core.n_free)
+            reqs, self.queue = self.queue[:take], self.queue[take:]
+            slots = self.core.admit_many(
+                [(r.prompt, r.max_new) for r in reqs])
+            for r, s in zip(reqs, slots):
+                self._slot_req[s] = r
             done.extend(self._harvest())   # instant EOS / max_new == 1
         self.core.decode_block()
         done.extend(self._harvest())

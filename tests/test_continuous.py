@@ -54,6 +54,34 @@ def test_insert_row_and_clear_row():
     assert np.asarray(cleared.pos[:, 0]).tolist() == [list(range(6))] * 2
 
 
+def test_insert_rows_scatter_and_drop_sentinel():
+    """Batched admission scatter: traced row-index vectors reuse one
+    executable; indices >= batch (pad rows of a partial admit batch) are
+    dropped, never clamped onto a real row."""
+    from repro.core.cache import insert_rows
+    B = 4
+    arena = empty_cache(2, B, 6, 2, 4, jnp.float32)
+    rows_cache = SlotCache(
+        k=jnp.ones((2, 2, 6, 2, 4)), v=jnp.full((2, 2, 6, 2, 4), 2.0),
+        pos=jnp.arange(6, dtype=jnp.int32).reshape(1, 1, 6).repeat(
+            2, 0).repeat(2, 1) + jnp.asarray([[10], [20]], jnp.int32)[None],
+        score=jnp.full((2, 2, 6), 0.5))
+    ins = jax.jit(insert_rows)
+    out = ins(arena, rows_cache, jnp.asarray([3, 1], jnp.int32))
+    assert np.asarray(out.pos[:, 3, 0]).tolist() == [10, 10]
+    assert np.asarray(out.pos[:, 1, 0]).tolist() == [20, 20]
+    assert (np.asarray(out.pos[:, 0]) == -1).all()
+    assert (np.asarray(out.pos[:, 2]) == -1).all()
+    # different slots, same executable (traced indices)
+    out = ins(arena, rows_cache, jnp.asarray([0, 2], jnp.int32))
+    assert ins._cache_size() == 1
+    # drop sentinel: row index B vanishes instead of clamping onto row B-1
+    out = ins(arena, rows_cache, jnp.asarray([1, B], jnp.int32))
+    assert np.asarray(out.pos[:, 1, 0]).tolist() == [10, 10]
+    assert (np.asarray(out.pos[:, B - 1]) == -1).all()
+    assert (np.asarray(out.k[:, B - 1]) == 0.0).all()
+
+
 # ------------------------------------------------------------ token identity
 def test_continuous_matches_solo_generate_greedy():
     """Mixed prompt lengths AND mixed max_new: every request's continuous
@@ -77,8 +105,9 @@ def test_continuous_matches_solo_generate_greedy():
 
 
 def test_admission_never_retraces_decode_or_insert():
-    """Fixed (max_concurrency, tier sizes) => one compiled step, one
-    compiled admit per prompt bucket, serving the whole request stream."""
+    """Fixed (max_concurrency, tier sizes) => one compiled fused block per
+    block length, one compiled admit per (batch, prompt) bucket, serving the
+    whole request stream."""
     params = _params()
     sched = ContinuousScheduler(params, CFG, ECFG, CCFG)
     rng = np.random.default_rng(1)
@@ -87,12 +116,20 @@ def test_admission_never_retraces_decode_or_insert():
     done = sched.run_until_empty()
     assert len(done) == 7
     core = sched.core
-    assert core._step_fn._cache_size() == 1
+    # fused decode blocks memoize per length, at most sync_every of them,
+    # each compiled exactly once
+    assert set(core._block_fns) <= set(range(1, CCFG.sync_every + 1))
+    assert all(fn._cache_size() == 1 for fn in core._block_fns.values())
     assert core._clear_fn._cache_size() == 1
-    # prompts bucket to P in {8, 16, 24}: one admit executable each, and
-    # re-admission into different slots never retraced any of them
-    assert sorted(core._admit_fns) == [8, 16, 24]
+    # admit executables key on (pow2 admit batch, prompt bucket); admitting
+    # into different slots (traced row indices) never retraced any of them
+    for nb, p in core._admit_fns:
+        assert nb in (1, 2, 4) and p % CCFG.prompt_bucket == 0
     assert all(fn._cache_size() == 1 for fn in core._admit_fns.values())
+    # the whole 7-request stream amortized into few admission dispatches
+    assert core.admit_dispatches < core.admitted == 7
+    # fused blocks: strictly fewer dispatches than decode steps
+    assert core.decode_dispatches < core.decode_steps
 
 
 # ------------------------------------------------------- retirement/recycle

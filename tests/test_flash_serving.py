@@ -1,0 +1,137 @@
+"""Flash-decode in the serving hot path: parity on serving shapes.
+
+Three layers of pinning (ISSUE 2 satellite):
+  * ops-level: `flash_decode` (+`extra_kv` new-token fold) vs the pure-jnp
+    `decode_attention_ref` oracle on serving shapes — GQA groups, batch > 1,
+    padded/evicted slots (pos = -1), sliding windows, softcap.
+  * module-level: `decode_attention(use_flash=True)` vs the dense einsum
+    branch — same `DecodeAttnOut` (output, H2O slot mass, new KV).
+  * engine-level: the `EngineConfig.use_flash_decode` flag is
+    token-identity-preserving through `Engine.generate` AND the continuous
+    persistent-arena path (the kernel sits inside `_attend_tier` under
+    `lax.cond` + `lax.scan` + the fused decode block).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PolicyConfig
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ref import decode_attention_ref
+from repro.models import ModelConfig, init_params
+from repro.models import attention as attn_lib
+from repro.serving import (ContinuousConfig, ContinuousScheduler, Engine,
+                           EngineConfig)
+
+GLOBAL = 1 << 30
+
+CFG = ModelConfig(name="s", arch_type="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                  dtype="float32", param_dtype="float32")
+
+
+def _params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+# ---------------------------------------------------------------- ops level
+@pytest.mark.parametrize("B,S,Hkv,G,hd,window,softcap", [
+    (3, 12, 2, 2, 16, GLOBAL, None),      # serving arena: tiny S, batch 3
+    (2, 24, 2, 4, 32, 10, None),          # GQA 4, sliding window
+    (2, 16, 1, 8, 16, GLOBAL, 25.0),      # softcap
+])
+def test_flash_extra_kv_matches_ref(B, S, Hkv, G, hd, window, softcap):
+    """flash_decode with the new-token fold == ref over [cache ++ new]."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    q = jax.random.normal(ks[0], (B, Hkv, G, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    k_new = jax.random.normal(ks[3], (B, 1, Hkv, hd))
+    v_new = jax.random.normal(ks[4], (B, 1, Hkv, hd))
+    # half the slots evicted/empty, incl. a fully-empty row's worth
+    pos = jnp.where(jax.random.bernoulli(ks[5], 0.5, (B, S)),
+                    jax.random.randint(ks[5], (B, S), 0, 2 * S), -1)
+    t = jnp.arange(B, dtype=jnp.int32) * 7 + S
+    out, cols = flash_decode(q, k, v, pos, t, window, softcap=softcap,
+                             extra_kv=(k_new, v_new), return_colsums=True)
+    # oracle: the new token is one more always-valid slot at position t
+    k_all = jnp.concatenate([k, k_new], axis=1)
+    v_all = jnp.concatenate([v, v_new], axis=1)
+    pos_all = jnp.concatenate([pos, t[:, None]], axis=1)
+    ref_out, ref_cols = decode_attention_ref(q, k_all, v_all, pos_all, t,
+                                             window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(cols), np.asarray(ref_cols),
+                               atol=2e-5)
+    assert cols.shape == (B, Hkv, S + 1)
+
+
+# ------------------------------------------------------------- module level
+def test_decode_attention_flash_matches_dense():
+    """use_flash=True reproduces the dense branch of decode_attention:
+    output, H2O slot statistic and the new token's KV, including a retired
+    row (t = -1, every cache slot masked)."""
+    B, S = 3, 12
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    p = attn_lib.init_attn(ks[0], CFG)
+    x = jax.random.normal(ks[1], (B, 1, CFG.d_model))
+    t = jnp.asarray([7, 30, -1], jnp.int32)
+    k = jax.random.normal(ks[2], (B, S, CFG.n_kv_heads, CFG.hd))
+    v = jax.random.normal(ks[3], (B, S, CFG.n_kv_heads, CFG.hd))
+    pos = jax.random.randint(ks[4], (B, S), -1, 32)
+    for window in (GLOBAL, 8):
+        dense = attn_lib.decode_attention(p, x, t, k, v, pos, CFG, window)
+        flash = attn_lib.decode_attention(p, x, t, k, v, pos, CFG, window,
+                                          use_flash=True)
+        np.testing.assert_allclose(np.asarray(flash.out),
+                                   np.asarray(dense.out), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(flash.slot_probs),
+                                   np.asarray(dense.slot_probs), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(flash.k_new),
+                                   np.asarray(dense.k_new), atol=1e-6)
+    # retired row: all mass on the new token in both branches
+    assert np.allclose(np.asarray(flash.slot_probs)[2, :, :S], 0.0)
+    assert np.allclose(np.asarray(flash.slot_probs)[2, :, S], 1.0, atol=1e-5)
+
+
+# ------------------------------------------------------------- engine level
+def test_engine_flash_flag_token_identity():
+    """Flagged Engine.generate (flash inside the fused scan blocks) emits
+    the same greedy tokens as the dense path — batch > 1, GQA, budgeted
+    arenas with empty (pos=-1) slots."""
+    params = _params()
+    prompts = np.random.default_rng(7).integers(
+        0, 97, (2, 8)).astype(np.int32)
+    base = dict(mode="uniform", policy=PolicyConfig("sink_h2o"),
+                budget_abs=12, bucket=4, min_budget=4)
+    dense = Engine(params, CFG, EngineConfig(**base)).generate(
+        tokens=prompts, max_new_tokens=8)
+    flash = Engine(params, CFG, EngineConfig(
+        **base, use_flash_decode=True)).generate(
+        tokens=prompts, max_new_tokens=8)
+    assert flash.tokens.tolist() == dense.tokens.tolist()
+
+
+def test_continuous_flash_flag_token_identity():
+    """The flag holds through the continuous path too: fused blocks,
+    admission inserts, on-device retirement."""
+    params = _params()
+    ccfg = ContinuousConfig(max_concurrency=2, prompt_bucket=8,
+                            max_prompt_len=16, max_new_cap=6, sync_every=3)
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, 97, (n,)).astype(np.int32) for n in (5, 11, 9)]
+
+    def run(use_flash):
+        ecfg = EngineConfig(mode="uniform",
+                            policy=PolicyConfig("sliding_window"),
+                            budget_abs=12, bucket=4, min_budget=4,
+                            use_flash_decode=use_flash)
+        sched = ContinuousScheduler(params, CFG, ecfg, ccfg)
+        rids = [sched.submit(p, max_new=5) for p in prompts]
+        done = {r.rid: r for r in sched.run_until_empty()}
+        return [done[rid].tokens.tolist() for rid in rids]
+
+    assert run(False) == run(True)
