@@ -1,27 +1,54 @@
 #!/usr/bin/env bash
-# CPU CI: tier-1 tests + the quickstart example.
+# CPU CI, tiered (DESIGN.md §5):
 #
-#     scripts/ci.sh [--with-benchmarks]
+#     scripts/ci.sh --fast                 # unit lane: pytest -m fast, <2 min
+#     scripts/ci.sh --full                 # system + kernel lane + smoke gate
+#     scripts/ci.sh                        # everything (tier-1 verify exact)
+#     scripts/ci.sh --with-benchmarks      # ... plus the quick benchmark suite
 #
-# Mirrors the tier-1 verify command from ROADMAP.md exactly, then proves the
-# end-to-end serving flow (prefill -> KMeans/Algorithm-1 -> tiered decode)
-# still runs.  `--with-benchmarks` additionally drains the quick benchmark
-# suite (several minutes on CPU).
+# The fast lane runs the unit-level tests only (marker `fast`, registered in
+# pyproject.toml; --strict-markers makes unknown marks collection errors).
+# The full lane runs the complement (system + interpret-mode kernel tests),
+# the quickstart example, and the serving-bench smoke, which doubles as the
+# bench-regression gate: it compares dispatches-per-decode-step and the
+# fused/per-step wall-clock ratio against the last BENCH_serving.json entry
+# and fails on >20% regression.  The default (no flag) mirrors the tier-1
+# verify command from ROADMAP.md exactly, then runs the example + smoke.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-echo "== tier-1: pytest =="
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+run_pytest() {
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+}
+
+lane="${1:-}"
+
+case "$lane" in
+    --fast)
+        echo "== fast lane: unit tests (-m fast) =="
+        run_pytest -m fast
+        echo "CI OK (fast lane)"
+        exit 0
+        ;;
+    --full)
+        echo "== full lane: system + kernel tests (-m 'not fast') =="
+        run_pytest -m "not fast"
+        ;;
+    *)
+        echo "== tier-1: pytest =="
+        run_pytest
+        ;;
+esac
 
 echo "== quickstart example =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py
 
-echo "== serving bench smoke (fused decode blocks) =="
+echo "== serving bench smoke + regression gate =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serving_bench --smoke
 
-if [[ "${1:-}" == "--with-benchmarks" ]]; then
+if [[ "$lane" == "--with-benchmarks" ]]; then
     echo "== quick benchmarks =="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --quick
 fi

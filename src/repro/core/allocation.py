@@ -145,3 +145,57 @@ def plan_cache_bytes(plan: BudgetPlan, batch: int, kv_heads: int, head_dim: int,
     """Physical KV arena size implied by a plan (both K and V)."""
     slots = plan.n_small * plan.b_small + plan.n_big * plan.b_big
     return 2 * slots * batch * kv_heads * head_dim * bytes_per_el
+
+
+# --------------------------------------------------------------------------- #
+# recurrent layers: the fixed-cost tier
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class RecurrentTier:
+    """The degenerate budget tier of SSM / hybrid models.
+
+    A recurrent layer's state is O(1) in sequence length — its "budget" is a
+    constant that Algorithm 1 can neither squeeze nor boost.  The allocator
+    therefore treats recurrent layers as a *fixed-cost* tier: they are
+    excluded from the KMeans clustering and the budget split entirely (a
+    hybrid model splits ``n_attn * b_init`` across its attention layers
+    only), and this record carries the per-row cost the tier pins so memory
+    accounting (`total_state_bytes`) stays honest about it.
+    """
+    n_layers: int
+    state_elems: int           # per-layer per-row SSD state elements (H*P*N)
+    conv_elems: int            # per-layer per-row conv-tail elements ((W-1)*C)
+
+    @property
+    def is_empty(self) -> bool:
+        return self.n_layers == 0
+
+    def bytes_per_row(self, state_bytes: int = 4, act_bytes: int = 2) -> int:
+        """Fixed state bytes one batch row pins across all recurrent layers
+        (SSD state accumulates fp32; the conv tail is model-dtype acts)."""
+        return self.n_layers * (self.state_elems * state_bytes
+                                + self.conv_elems * act_bytes)
+
+
+def recurrent_tier(cfg) -> RecurrentTier:
+    """Fixed-cost tier of a `ModelConfig` (empty for attention-only models)."""
+    # deferred import: core stays importable without the models package at
+    # module-load time, and the conv layout has exactly one owner (ssm.py)
+    from repro.models.ssm import conv_channels
+
+    if not (cfg.is_ssm_only or cfg.is_hybrid):
+        return RecurrentTier(0, 0, 0)
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv = (cfg.ssm_conv_width - 1) * conv_channels(cfg)
+    return RecurrentTier(cfg.n_layers, H * P * N, conv)
+
+
+def total_state_bytes(plan: BudgetPlan, rtier: RecurrentTier, batch: int,
+                      kv_heads: int, head_dim: int,
+                      kv_bytes_per_el: int = 2) -> int:
+    """Budgeted KV arenas + the fixed recurrent tier: the full per-batch
+    decode-state footprint (the 2D budget picture for hybrid families)."""
+    kv = 0 if plan is None else plan_cache_bytes(
+        plan, batch, kv_heads, head_dim, kv_bytes_per_el)
+    return kv + batch * rtier.bytes_per_row(act_bytes=kv_bytes_per_el)

@@ -129,6 +129,49 @@ def clear_row(arena: SlotCache, row) -> SlotCache:
     )
 
 
+# --------------------------------------------------------------------------- #
+# recurrent-state arenas (SSM / hybrid rows)
+# --------------------------------------------------------------------------- #
+# A recurrent layer's "KV cache" is a fixed-size state — the degenerate budget
+# tier (DESIGN.md §4).  Continuous batching stores those states in the same
+# [L, B, ...] stacked-arena layout as the KV tiers (batch on axis 1), and the
+# three functions below are the exact counterparts of insert_row /
+# insert_rows / clear_row: traced row indices, one compiled executable per
+# arena shape, drop-sentinel scatter for pad rows of a partial admit batch.
+
+def insert_state_row(arena: jnp.ndarray, row_state: jnp.ndarray,
+                     row) -> jnp.ndarray:
+    """Write one request's [L, 1, ...] recurrent state into batch row `row`.
+
+    `row` may be a traced int32 scalar (same no-retrace discipline as
+    `insert_row`)."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        arena, row_state.astype(arena.dtype), row, axis=1)
+
+
+def insert_state_rows(arena: jnp.ndarray, rows_state: jnp.ndarray,
+                      rows) -> jnp.ndarray:
+    """Scatter `n` requests' [L, n, ...] recurrent states into rows `rows`.
+
+    Row indices >= the arena batch are DROPPED (``mode="drop"``), mirroring
+    `insert_rows`: a partial admit batch pads with the sentinel index
+    `max_concurrency` and its pad rows never land."""
+    return arena.at[:, rows].set(rows_state.astype(arena.dtype), mode="drop")
+
+
+def clear_state_row(arena: jnp.ndarray, row) -> jnp.ndarray:
+    """Zero batch row `row` of a recurrent-state arena.
+
+    Unlike KV slots (where stale k/v bits are masked by ``pos < 0``), a
+    recurrent state has no per-slot emptiness sentinel — the whole row is
+    the state — so retirement really zeroes it.  Together with the decode
+    step freezing inactive rows, a cleared row stays exactly zero until a
+    new request is inserted (asserted by tests/test_continuous_ssm.py)."""
+    shape = (arena.shape[0], 1) + arena.shape[2:]
+    return jax.lax.dynamic_update_slice_in_dim(
+        arena, jnp.zeros(shape, arena.dtype), row, axis=1)
+
+
 def write_token(
     pol: PolicyConfig,
     layer_cache: SlotCache,    # UNstacked: k/v [B, S, Hkv, hd], pos/score [B, S]

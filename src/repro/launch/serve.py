@@ -50,12 +50,14 @@ def _run_oneshot(params, cfg, ecfg, args):
 
 def _run_continuous(params, cfg, ecfg, args):
     """Heterogeneous-length traffic through the persistent-arena core."""
-    bucket = args.prompt_len  # one prefill bucket = the requested length
+    bucket = max(4, args.prompt_len // 2)   # two buckets: length-sorted path
     ccfg = ContinuousConfig(
         max_concurrency=args.max_concurrency, prompt_bucket=bucket,
-        max_prompt_len=bucket, max_new_cap=args.max_new,
-        sync_every=args.sync_every)
+        max_prompt_len=args.prompt_len, max_new_cap=args.max_new,
+        sync_every=args.sync_every,
+        length_sorted=not args.no_length_sort)
     sched = ContinuousScheduler(params, cfg, ecfg, ccfg, seed=args.seed)
+    print(f"capability: {sched.capability.describe()}")
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
     for i in range(args.batch):
@@ -74,15 +76,25 @@ def _run_continuous(params, cfg, ecfg, args):
     plan = sched.core.plan
     print(f"mode={args.mode} policy={args.policy} "
           f"concurrency={args.max_concurrency}")
-    if plan is not None:     # no plan until a first request calibrates it
+    cap = sched.capability
+    if cap.budgeted and plan is not None:  # calibrated on the first request
         print(f"plan: {plan.n_big}x{plan.b_big} + "
               f"{plan.n_small}x{plan.b_small} slots per row")
+    if cap.n_recurrent_layers:
+        act_bytes = np.dtype(cfg.dtype).itemsize    # match state_bytes below
+        print(f"fixed recurrent tier: {cap.n_recurrent_layers} layer(s), "
+              f"{cap.recurrent.bytes_per_row(act_bytes=act_bytes)} bytes/row")
     core = sched.core
+    print(f"decode-state footprint: {core.state_bytes} bytes "
+          f"across {args.max_concurrency} rows")
     print(f"{args.batch} requests, {n_tok} tokens in {wall*1e3:.1f}ms "
           f"({n_tok/max(wall, 1e-9):.1f} tok/s incl. compile)")
     print(f"host dispatches: {core.decode_dispatches} fused decode blocks "
           f"for {core.decode_steps} steps (sync_every={args.sync_every}), "
-          f"{core.admit_dispatches} admissions for {core.admitted} requests")
+          f"{core.admit_dispatches} admissions for {core.admitted} requests; "
+          f"prefill pad tokens {core.prefill_pad_tokens} for "
+          f"{core.prompt_tokens} prompt tokens"
+          f" (length_sorted={ccfg.length_sorted})")
 
 
 def main():
@@ -100,6 +112,9 @@ def main():
     ap.add_argument("--sync-every", type=int, default=4,
                     help="decode steps fused into one dispatched block "
                          "(continuous batching)")
+    ap.add_argument("--no-length-sort", action="store_true",
+                    help="disable length-sorted admission (pad every "
+                         "burst to its longest prompt)")
     ap.add_argument("--flash-decode", action="store_true",
                     help="route decode attention through the Pallas "
                          "flash-decode kernel (interpret mode off-TPU)")

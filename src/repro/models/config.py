@@ -157,5 +157,12 @@ class ModelConfig:
         if self.is_ssm_only or self.is_hybrid:
             assert self.ssm_state > 0
             assert self.d_inner % self.ssm_head_dim == 0
+        if self.is_hybrid:
+            # the hybrid stack materializes (n_layers // attn_period) super-
+            # blocks; an indivisible count would silently drop layers AND
+            # mis-size the recurrent-state arenas (capability/recurrent_tier
+            # count n_layers)
+            assert self.n_layers % self.attn_period == 0, \
+                (self.n_layers, self.attn_period)
         if self.mrope_sections is not None:
             assert sum(self.mrope_sections) == self.hd // 2

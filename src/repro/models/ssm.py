@@ -49,6 +49,26 @@ def init_ssm(key, cfg) -> SsmParams:
     )
 
 
+def conv_channels(cfg) -> int:
+    """Channels of the depthwise causal conv input (x, B, C stacked)."""
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def empty_decode_state(cfg, n_layers: int, batch: int):
+    """Zero per-row recurrent-state arenas for `n_layers` stacked SSM blocks.
+
+    Returns ``(ssm_state [L, B, H, P, N] float32, conv_state [L, B, W-1, C]
+    model-dtype)`` — the layout `ssm_decode_step` carries and continuous
+    batching scatters per-row (`core.cache.insert_state_rows`).  The SSD
+    state accumulates in fp32 (`ssd_chunked` emits fp32 finals); the conv
+    tail is raw activations, so it stays in the model dtype.
+    """
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    W, C = cfg.ssm_conv_width, conv_channels(cfg)
+    return (jnp.zeros((n_layers, batch, H, P, N), jnp.float32),
+            jnp.zeros((n_layers, batch, W - 1, C), jnp.dtype(cfg.dtype)))
+
+
 def _split_proj(p: SsmParams, x, cfg):
     di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
     zxbcdt = x @ p.w_in

@@ -1,5 +1,6 @@
-from repro.serving.continuous import (Completed, ContinuousConfig,
-                                      ContinuousEngine, ContinuousState)
+from repro.serving.continuous import (Capability, Completed, ContinuousConfig,
+                                      ContinuousEngine, ContinuousState,
+                                      continuous_capability)
 from repro.serving.decode import DecodeState, make_tier_indices, serve_step
 from repro.serving.engine import Engine, EngineConfig, GenerationResult
 from repro.serving.prefill import PrefillOut, pad_prompt, pad_prompts, prefill
@@ -12,6 +13,7 @@ __all__ = [
     "Engine", "EngineConfig", "GenerationResult",
     "PrefillOut", "prefill", "pad_prompt", "pad_prompts",
     "SamplerConfig", "sample",
+    "Capability", "continuous_capability",
     "Completed", "ContinuousConfig", "ContinuousEngine", "ContinuousState",
     "ContinuousScheduler", "Request", "SchedulerConfig", "WaveScheduler",
 ]

@@ -29,6 +29,19 @@ compute.  This module is the token-level alternative (DESIGN.md §5):
   * **Streaming**: completed requests are harvested at every block boundary,
     so short requests leave (and new ones enter) while long ones decode.
 
+The engine is **family-agnostic** (DESIGN.md §4/§5): recurrent (SSM /
+hybrid) rows carry per-row `ssm_state`/`conv_state` arenas alongside the KV
+tiers — the degenerate fixed-cost budget tier — with the same traced-row
+insert/clear discipline (`core.cache.insert_state_rows`), so mamba2 and
+zamba2 configs run the identical admission → fused decode → retirement →
+recycling path as dense models; the Algorithm-1 budget split applies to the
+attention layers only.
+
+Admission is **length-sorted**: a burst's prompts are partitioned by their
+padded length bucket and each bucket prefills separately, so a bimodal
+burst stops padding every short prompt to the longest arrival
+(`prefill_pad_tokens` counts what is actually dispatched).
+
 Retired rows still occupy SIMD lanes until recycled (dense batched compute
 cannot drop a row), but they stop extending their caches and — the actual
 throughput lever — their slots immediately host new requests instead of
@@ -43,12 +56,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.allocation import BudgetPlan
-from repro.core.cache import clear_row, empty_cache, insert_rows
+from repro.core.allocation import (BudgetPlan, RecurrentTier, recurrent_tier,
+                                   total_state_bytes)
+from repro.core.cache import (clear_row, clear_state_row, empty_cache,
+                              insert_rows, insert_state_rows)
+from repro.models.ssm import empty_decode_state
+from repro.models.transformer import n_attn_layers
 from repro.serving.decode import (DecodeState, make_tier_indices,
                                   sampled_step)
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.prefill import pad_prompts
+from repro.serving.prefill import group_by_bucket, pad_prompts
 from repro.serving.sampler import sample
 
 
@@ -59,6 +76,62 @@ class ContinuousConfig:
     max_prompt_len: int = 128     # admission cap (sizes full-cache arenas)
     max_new_cap: int = 64         # per-request max_new clamp (ditto)
     sync_every: int = 4           # decode steps fused into one block
+    # length-sorted admission: partition a burst by padded prompt bucket and
+    # prefill each bucket separately instead of padding the whole burst to
+    # its longest arrival.  Off = the pad-to-longest baseline (benchmarked).
+    length_sorted: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Capability:
+    """Config-driven report of what the continuous engine does with a model.
+
+    Every architecture family in `configs/` maps onto the persistent-arena
+    core; `ok=False` carries the one precise reason a config cannot admit
+    (`ContinuousEngine.__init__` raises it verbatim).
+    """
+    family: str                # dense | moe | vlm | audio | ssm | hybrid
+    ok: bool
+    reason: str                # "" when ok; the exact refusal otherwise
+    n_attn_layers: int         # layers under Algorithm-1 budget tiers
+    n_recurrent_layers: int    # layers in the fixed-cost recurrent tier
+    recurrent: RecurrentTier   # per-row fixed state cost of those layers
+
+    @property
+    def budgeted(self) -> bool:
+        """Algorithm 1 has something to reallocate (attention layers exist)."""
+        return self.n_attn_layers > 0
+
+    def describe(self) -> str:
+        if not self.ok:
+            return f"{self.family}: NOT admissible — {self.reason}"
+        parts = []
+        if self.n_attn_layers:
+            parts.append(f"{self.n_attn_layers} budget-tiered attention "
+                         f"layer(s)")
+        if self.n_recurrent_layers:
+            parts.append(f"{self.n_recurrent_layers} fixed-cost recurrent "
+                         f"layer(s)")
+        return f"{self.family}: " + " + ".join(parts)
+
+
+def continuous_capability(cfg) -> Capability:
+    """What the continuous engine can do with `cfg`, decided from config
+    alone (no params, no tracing).  Single source of truth for the
+    admission-time check — tests sweep every family in `configs/` through
+    this and assert admit-or-precise-error."""
+    rec = cfg.n_layers if (cfg.is_ssm_only or cfg.is_hybrid) else 0
+    ok, reason = True, ""
+    if cfg.frontend_tokens > 0:
+        ok = False
+        reason = (f"admission prefills token prompts only, but "
+                  f"{cfg.name!r} requires {cfg.frontend_tokens} precomputed "
+                  f"{cfg.frontend or 'frontend'} embeddings per request; "
+                  f"feed embeds through the one-shot Engine.generate instead")
+    return Capability(family=cfg.arch_type, ok=ok, reason=reason,
+                      n_attn_layers=n_attn_layers(cfg),
+                      n_recurrent_layers=rec,
+                      recurrent=recurrent_tier(cfg))
 
 
 class ContinuousState(NamedTuple):
@@ -95,16 +168,17 @@ class ContinuousEngine:
 
     def __init__(self, params, cfg, ecfg: EngineConfig,
                  ccfg: ContinuousConfig = ContinuousConfig(), seed: int = 0):
-        if cfg.is_ssm_only or cfg.is_hybrid:
-            raise NotImplementedError(
-                "continuous batching currently serves attention models; "
-                "SSM/hybrid rows need per-row recurrent-state insertion "
-                "(DESIGN.md §5)")
+        cfg.validate()   # e.g. hybrid layer count divisible by attn_period
+        self.cap = continuous_capability(cfg)
+        if not self.cap.ok:
+            raise ValueError(self.cap.reason)
         self.engine = Engine(params, cfg, ecfg)   # shared prefill/compaction
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
         self.ccfg = ccfg
+        self._has_attn = cfg.has_attention
+        self._has_rec = self.cap.n_recurrent_layers > 0
         self.plan: Optional[BudgetPlan] = None
         self.state: Optional[ContinuousState] = None
         B = ccfg.max_concurrency
@@ -126,6 +200,11 @@ class ContinuousEngine:
         self.admit_dispatches = 0     # prefill+admit launches (batched)
         self.admitted = 0             # requests admitted
         self.tokens_emitted = 0       # live tokens streamed to request bufs
+        # admission prefill padding accounting (length-sorted admission):
+        # pad tokens = what the prefill executables actually processed,
+        # prompt tokens = what the requests actually contained
+        self.prefill_pad_tokens = 0
+        self.prompt_tokens = 0
         # distinct streams: admission first-token sampling (host side) vs
         # the decode loop's per-step sampling key carried in the state —
         # reusing one key would draw correlated samples on both sides
@@ -151,14 +230,31 @@ class ContinuousEngine:
     def n_occupied(self) -> int:
         return len(self._occupied)
 
+    @property
+    def state_bytes(self) -> int:
+        """Persistent decode-state footprint across all rows: budgeted KV
+        arenas (0 until the plan is calibrated) plus the fixed-cost
+        recurrent tier — the full 2D budget picture for hybrid families."""
+        plan = self.plan if self._has_attn else None
+        return total_state_bytes(plan, self.cap.recurrent,
+                                 self.ccfg.max_concurrency,
+                                 self.cfg.n_kv_heads, self.cfg.hd,
+                                 jnp.dtype(self.cfg.dtype).itemsize)
+
     # ---------------------------------------------------------------- jit fns
     def _build_fns(self):
+        has_attn, has_rec = self._has_attn, self._has_rec
+
         def clear(state: ContinuousState, row):
             dec = state.dec
-            return state._replace(dec=dec._replace(
-                big=clear_row(dec.big, row),
-                small=clear_row(dec.small, row),
-                active=dec.active.at[row].set(False)))
+            upd = {"active": dec.active.at[row].set(False)}
+            if has_attn:
+                upd["big"] = clear_row(dec.big, row)
+                upd["small"] = clear_row(dec.small, row)
+            if has_rec:
+                upd["ssm_state"] = clear_state_row(dec.ssm_state, row)
+                upd["conv_state"] = clear_state_row(dec.conv_state, row)
+            return state._replace(dec=dec._replace(**upd))
 
         donate0 = {} if not self._donate else {"donate_argnums": (0,)}
         self._clear_fn = jax.jit(clear, **donate0)
@@ -215,6 +311,7 @@ class ContinuousEngine:
         if key not in self._admit_fns:
             eng, plan, sc = self.engine, self.plan, self.ecfg.sampler
             eos = self.ecfg.eos_token
+            has_attn, has_rec = self._has_attn, self._has_rec
 
             def admit_fn(state: ContinuousState, rows, pre, rem0, akey):
                 rs = eng.build_state(pre, plan, NB)   # [L, NB, S, ...] rows
@@ -223,12 +320,20 @@ class ContinuousEngine:
                 if eos >= 0:
                     act0 = act0 & (token0 != eos)
                 dec = state.dec
-                dec = dec._replace(
-                    big=insert_rows(dec.big, rs.big, rows),
-                    small=insert_rows(dec.small, rs.small, rows),
-                    t=dec.t.at[rows].set(rs.t.astype(dec.t.dtype),
-                                         mode="drop"),
-                    active=dec.active.at[rows].set(act0, mode="drop"))
+                upd = {
+                    "t": dec.t.at[rows].set(rs.t.astype(dec.t.dtype),
+                                            mode="drop"),
+                    "active": dec.active.at[rows].set(act0, mode="drop"),
+                }
+                if has_attn:
+                    upd["big"] = insert_rows(dec.big, rs.big, rows)
+                    upd["small"] = insert_rows(dec.small, rs.small, rows)
+                if has_rec:   # fixed-cost tier: whole-row state scatter
+                    upd["ssm_state"] = insert_state_rows(
+                        dec.ssm_state, rs.ssm_state, rows)
+                    upd["conv_state"] = insert_state_rows(
+                        dec.conv_state, rs.conv_state, rows)
+                dec = dec._replace(**upd)
                 return token0, ContinuousState(
                     dec,
                     state.token.at[rows].set(
@@ -253,12 +358,21 @@ class ContinuousEngine:
             return empty_cache(n_layers, B, budget, cfg.n_kv_heads, cfg.hd,
                                dtype)
 
-        is_small, tier_index = make_tier_indices(plan.is_small)
+        if self._has_attn:
+            is_small, tier_index = make_tier_indices(plan.is_small)
+            big = tier(plan.n_big, plan.b_big)
+            small = tier(plan.n_small, plan.b_small)
+        else:                     # ssm-only: no KV tiers exist at all
+            is_small = tier_index = big = small = ()
+        if self._has_rec:         # fixed-cost recurrent tier, one row each
+            ssm, conv = empty_decode_state(cfg, self.cap.n_recurrent_layers,
+                                           B)
+        else:
+            ssm = conv = ()
         dec = DecodeState(
-            big=tier(plan.n_big, plan.b_big),
-            small=tier(plan.n_small, plan.b_small),
+            big=big, small=small,
             group_is_small=is_small, tier_index=tier_index,
-            ssm_state=(), conv_state=(),
+            ssm_state=ssm, conv_state=conv,
             t=jnp.zeros((B,), jnp.int32),
             active=jnp.zeros((B,), bool))
         return ContinuousState(
@@ -293,8 +407,37 @@ class ContinuousEngine:
         return self.admit_many([(prompt, max_new)])[0]
 
     def admit_many(self, reqs: Sequence[Tuple[np.ndarray, int]]) -> List[int]:
-        """Admit up to `n_free` requests with ONE prefill dispatch and ONE
-        fused admit executable (MaxText `prefill_insert_batch` style).
+        """Admit up to `n_free` requests, length-sorted into prompt buckets.
+
+        With `length_sorted` (default) the burst is partitioned by padded
+        prompt-length bucket (`group_by_bucket`) and each bucket runs one
+        batched prefill + one fused admit at ITS OWN length — a bimodal
+        burst stops padding every short prompt to the longest arrival, at
+        the cost of one extra dispatch per extra bucket present (both sides
+        of that trade are counted: `prefill_pad_tokens`,
+        `admit_dispatches`).  With it off, the whole burst pads to the
+        longest prompt in one dispatch (the PR-2 baseline).  Returns the
+        slot per request, in submission order.
+        """
+        assert reqs, "admit_many needs at least one request"
+        assert len(reqs) <= len(self._free), \
+            "not enough free slots — check n_free before admit_many"
+        if self.ccfg.length_sorted and len(reqs) > 1:
+            groups = group_by_bucket([len(p) for p, _ in reqs],
+                                     self.ccfg.prompt_bucket)
+        else:
+            groups = [(0, list(range(len(reqs))))]
+        slots: List[Optional[int]] = [None] * len(reqs)
+        for _, idxs in groups:
+            for i, slot in zip(idxs, self._admit_group([reqs[i]
+                                                        for i in idxs])):
+                slots[i] = slot
+        return slots
+
+    def _admit_group(self,
+                     reqs: Sequence[Tuple[np.ndarray, int]]) -> List[int]:
+        """One admission bucket: ONE prefill dispatch and ONE fused admit
+        executable (MaxText `prefill_insert_batch` style).
 
         Prompts are bucketed together (`pad_prompts`), the admit batch is
         padded to a power of two (pad rows replicate request 0 and are
@@ -302,9 +445,6 @@ class ContinuousEngine:
         (batch, prompt) buckets serves any arrival burst.  Returns the slot
         per request, in order.
         """
-        assert reqs, "admit_many needs at least one request"
-        assert len(reqs) <= len(self._free), \
-            "not enough free slots — check n_free before admit_many"
         prompts = [np.asarray(p, np.int32) for p, _ in reqs]
         max_news = [min(mn, self.ccfg.max_new_cap) for _, mn in reqs]
         n = len(reqs)
@@ -318,6 +458,8 @@ class ContinuousEngine:
                                              valid)
         self._ensure_plan(pre)
         self.admit_dispatches += 1
+        self.prefill_pad_tokens += NB * P
+        self.prompt_tokens += sum(len(p) for p in prompts)
 
         self._host_key, sub = jax.random.split(self._host_key)
         slots = [self._free.pop(0) for _ in range(n)]

@@ -138,6 +138,7 @@ def serve_step(
     t = state.t
     if isinstance(state.active, tuple):
         inc = 1
+        act = None
     else:
         # Retired rows freeze: their position stops advancing, and their
         # effective position becomes -1 — the empty-slot sentinel — so the
@@ -145,6 +146,16 @@ def serve_step(
         # cleared row stays logically empty until a new request is inserted.
         inc = state.active.astype(state.t.dtype)
         t = jnp.where(state.active, t, -1)
+        act = state.active
+
+    # Recurrent rows freeze the same way: a retired row's SSD/conv state has
+    # no empty-slot sentinel to hide behind, so the carry itself must stop
+    # integrating — a cleared slot stays exactly zero until re-admission.
+    def _freeze(new, old):
+        if act is None:
+            return new
+        mask = act.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(mask, new, old)
 
     if cfg.is_ssm_only:
         def body(carry, inp):
@@ -153,7 +164,7 @@ def serve_step(
             h = apply_norm(bp["norm"], x, cfg)
             out, (st2, cv2) = ssm_lib.ssm_decode_step(
                 ssm_lib.SsmParams(**bp["ssm"]), h, cfg, st, cv)
-            return x + out, (st2, cv2)
+            return x + out, (_freeze(st2, st), _freeze(cv2, cv))
 
         x, (sts, cvs) = jax.lax.scan(
             body, x, (params["layers"], state.ssm_state, state.conv_state))
@@ -176,7 +187,7 @@ def serve_step(
                 h = apply_norm(bp["norm"], c, cfg)
                 out, (st2, cv2) = ssm_lib.ssm_decode_step(
                     ssm_lib.SsmParams(**bp["ssm"]), h, cfg, st, cv)
-                return c + out, (st2, cv2)
+                return c + out, (_freeze(st2, st), _freeze(cv2, cv))
 
             x, (st2, cv2) = jax.lax.scan(inner, x, (bps, st_sb, cv_sb))
             x, big, small = _attn_decode_block(

@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.allocation import BudgetPlan, allocate, uniform_plan
+from repro.core.allocation import (BudgetPlan, allocate, recurrent_tier,
+                                   total_state_bytes, uniform_plan)
 from repro.core.cache import SlotCache, compact, pad_cache
 from repro.core.policies import PolicyConfig
 from repro.models.config import ModelConfig
@@ -73,6 +74,7 @@ class GenerationResult:
     decode_seconds: float
     allocate_seconds: float
     cache_slots: int                   # total physical KV slots across layers
+    state_bytes: int = 0               # KV arenas + fixed recurrent tier
 
     @property
     def tokens_per_second(self) -> float:
@@ -151,6 +153,14 @@ class Engine:
     # ----------------------------------------------------------- allocation
     def plan_budgets(self, cos_sims: np.ndarray, prompt_len: int,
                      max_new: int) -> BudgetPlan:
+        """Algorithm-1 budget plan over the *attention* layers only.
+
+        Recurrent (SSM) layers are a fixed-cost tier — their state is O(1)
+        in sequence length, so there is nothing to squeeze or boost — and
+        are excluded from the split entirely: a hybrid model divides
+        ``n_attn * b_init`` across its attention invocations, an ssm-only
+        model degenerates to a placeholder uniform plan
+        (`core.allocation.recurrent_tier` carries the fixed cost)."""
         n_attn = n_attn_layers(self.cfg)
         b_init = self.ecfg.b_init(prompt_len, max_new)
         if self.cfg.is_ssm_only or n_attn == 0:
@@ -264,6 +274,10 @@ class Engine:
 
         slots = 0 if self.cfg.is_ssm_only else \
             plan.n_big * plan.b_big + plan.n_small * plan.b_small
+        state_bytes = total_state_bytes(
+            plan if self.cfg.has_attention else None,
+            recurrent_tier(self.cfg), B, self.cfg.n_kv_heads, self.cfg.hd,
+            jnp.dtype(self.cfg.dtype).itemsize)
         toks = np.concatenate([np.asarray(b) for b in blocks], axis=0).T
         if eos >= 0:   # mask everything after the first EOS per row
             hit = np.cumsum(toks == eos, axis=1) > 0
@@ -274,4 +288,5 @@ class Engine:
             tokens=toks,
             plan=plan, cos_sims=cos,
             prefill_seconds=t1 - t0, decode_seconds=t3 - t2,
-            allocate_seconds=t2 - t1, cache_slots=slots)
+            allocate_seconds=t2 - t1, cache_slots=slots,
+            state_bytes=state_bytes)

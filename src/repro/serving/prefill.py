@@ -44,6 +44,23 @@ def pad_prompts(prompts: Sequence[np.ndarray], bucket: int,
     return toks, valid
 
 
+def group_by_bucket(lengths: Sequence[int], bucket: int):
+    """Length-sorted admission grouping (DESIGN.md §5).
+
+    Partitions request indices by their *bucketed* prompt length (next
+    multiple of `bucket`) and returns the groups shortest-bucket-first:
+    ``[(padded_len, [indices...]), ...]``.  Each group prefills at its own
+    bucket instead of the burst-wide pad-to-longest, so a bimodal burst of
+    mostly-short prompts stops paying the longest prompt's padded FLOPs —
+    the win `benchmarks/serving_bench.py` measures as `prefill_pad_tokens`.
+    """
+    buckets = {}
+    for i, n in enumerate(lengths):
+        p = ((max(int(n), 1) + bucket - 1) // bucket) * bucket
+        buckets.setdefault(p, []).append(i)
+    return sorted(buckets.items())
+
+
 def pad_prompt(prompt: np.ndarray, bucket: int,
                max_len: Optional[int] = None):
     """Single-request `pad_prompts`."""

@@ -9,11 +9,14 @@ engine core (DESIGN.md §5):
     and wholly synchronous, but every wave member pays ``max(max_new)``
     decode steps and pad rows burn compute — the paper's Table 3 batching
     model.
-  * `ContinuousScheduler` — interleaves per-request prefill+admission with
-    batched decode blocks over the persistent budget-tier arenas of
+  * `ContinuousScheduler` — interleaves batched, length-sorted admission
+    with fused decode blocks over the persistent arenas of
     `ContinuousEngine` (continuous.py).  Finished rows retire on-device and
     their slots recycle immediately, so heterogeneous ``max_new`` traffic
-    no longer quantizes to the slowest wave member.
+    no longer quantizes to the slowest wave member.  Family-agnostic: SSM
+    and hybrid configs carry per-row recurrent-state arenas through the
+    same admit → decode → retire path (`ContinuousScheduler.capability`
+    reports what the config maps onto).
 """
 from __future__ import annotations
 
@@ -129,6 +132,11 @@ class ContinuousScheduler(_RequestQueue):
         self._slot_req: Dict[int, Request] = {}
 
     @property
+    def capability(self):
+        """Config-driven report: budget-tiered vs fixed-cost layers."""
+        return self.core.cap
+
+    @property
     def row_steps(self) -> int:
         return self.core.row_steps
 
@@ -152,8 +160,9 @@ class ContinuousScheduler(_RequestQueue):
         """One scheduler iteration: admit → decode block → harvest."""
         done = self._harvest()
         while self.queue and self.core.has_free:
-            # batched admission: every queued arrival that fits a free row
-            # shares ONE bucketed prefill and ONE fused admit executable
+            # batched, length-sorted admission: every queued arrival that
+            # fits a free row is taken at once; the engine partitions the
+            # burst by prompt bucket, one prefill + fused admit per bucket
             take = min(len(self.queue), self.core.n_free)
             reqs, self.queue = self.queue[:take], self.queue[take:]
             slots = self.core.admit_many(

@@ -1,8 +1,12 @@
 """Roofline/HLO analysis: loop-aware FLOPs, collective parsing, term math."""
+
+import pytest
+
+pytestmark = pytest.mark.fast
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.analysis.hlo import collective_bytes
 from repro.analysis.hlo_flops import analyze

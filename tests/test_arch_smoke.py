@@ -5,10 +5,14 @@ reduced config, run one forward and one train step on CPU, assert output
 shapes and the absence of NaNs.  Decode-capable archs also run one
 serve_step against a compacted cache.
 """
+
+import pytest
+
+pytestmark = pytest.mark.system
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import ALL_ARCHS, get_reduced
 from repro.core import PolicyConfig

@@ -1,0 +1,148 @@
+"""Config-driven capability reporting + recurrent-arena / grouping units.
+
+Fast-lane complement of tests/test_continuous_ssm.py: everything here is
+pure config math or tiny jnp ops — no model params, no prefill compiles.
+"""
+import dataclasses
+import re
+
+import pytest
+
+pytestmark = pytest.mark.fast
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALL_ARCHS, get_reduced
+from repro.core.allocation import recurrent_tier, total_state_bytes, uniform_plan
+from repro.core.cache import (clear_state_row, insert_state_row,
+                              insert_state_rows)
+from repro.serving import ContinuousEngine, continuous_capability
+from repro.serving.prefill import group_by_bucket
+
+
+# ------------------------------------------------------------- capability
+def test_capability_report_covers_every_config_family():
+    seen = set()
+    for arch in ALL_ARCHS:
+        cfg = get_reduced(arch)
+        cap = continuous_capability(cfg)
+        seen.add(cap.family)
+        assert cap.family == cfg.arch_type
+        assert cap.ok, (arch, cap.reason)
+        assert cap.reason == ""
+        assert cap.budgeted == cfg.has_attention
+        if cfg.is_ssm_only or cfg.is_hybrid:
+            assert cap.n_recurrent_layers == cfg.n_layers
+            assert not cap.recurrent.is_empty
+            assert cap.recurrent.bytes_per_row() > 0
+        else:
+            assert cap.n_recurrent_layers == 0
+            assert cap.recurrent.is_empty
+        assert cap.describe().startswith(cfg.arch_type)
+    assert seen == {"dense", "moe", "vlm", "audio", "ssm", "hybrid"}
+
+
+def test_embeds_only_config_raises_precise_error():
+    """A config whose requests must arrive as precomputed frontend
+    embeddings cannot be admitted from token prompts — the refusal names
+    the config and the alternative."""
+    cfg = dataclasses.replace(get_reduced("qwen2-vl-7b"), frontend_tokens=16)
+    cap = continuous_capability(cfg)
+    assert not cap.ok
+    assert "16" in cap.reason and "Engine.generate" in cap.reason
+    assert "NOT admissible" in cap.describe()
+    with pytest.raises(ValueError, match=re.escape(cap.reason[:40])):
+        ContinuousEngine(None, cfg, None, seed=0)
+
+
+def test_hybrid_layer_count_must_divide_attn_period():
+    """An indivisible hybrid layer count would silently drop layers in the
+    stack AND mis-size the recurrent arenas — validate() rejects it, and
+    the continuous engine validates before building anything."""
+    cfg = dataclasses.replace(get_reduced("zamba2-2.7b"), n_layers=5)
+    with pytest.raises(AssertionError):
+        cfg.validate()
+    with pytest.raises(AssertionError):
+        ContinuousEngine(None, cfg, None, seed=0)
+
+
+def test_recurrent_tier_fixed_cost_math():
+    cfg = get_reduced("zamba2-2.7b")
+    rt = recurrent_tier(cfg)
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    C = cfg.d_inner + 2 * cfg.ssm_state
+    assert rt.state_elems == H * P * N
+    assert rt.conv_elems == (cfg.ssm_conv_width - 1) * C
+    per_row = cfg.n_layers * (rt.state_elems * 4 + rt.conv_elems * 2)
+    assert rt.bytes_per_row() == per_row
+    # total = budgeted KV + batch * fixed tier; with no plan only the tier
+    assert total_state_bytes(None, rt, 3, cfg.n_kv_heads, cfg.hd) \
+        == 3 * per_row
+    plan = uniform_plan(2, 8)
+    kv = 2 * (2 * 8) * 3 * cfg.n_kv_heads * cfg.hd * 2
+    assert total_state_bytes(plan, rt, 3, cfg.n_kv_heads, cfg.hd) \
+        == kv + 3 * per_row
+
+
+# --------------------------------------------------- length-bucket grouping
+def test_group_by_bucket_partitions_shortest_first():
+    groups = group_by_bucket([5, 40, 7, 33, 8, 64], bucket=8)
+    assert groups == [(8, [0, 2, 4]), (40, [1, 3]), (64, [5])]
+    # every index appears exactly once
+    idxs = sorted(i for _, g in groups for i in g)
+    assert idxs == list(range(6))
+    # zero-length prompts still land in the first bucket, never bucket 0
+    assert group_by_bucket([0], 8) == [(8, [0])]
+
+
+def test_group_by_bucket_single_bucket_is_one_group():
+    assert group_by_bucket([3, 8, 1, 6], 8) == [(8, [0, 1, 2, 3])]
+
+
+# ------------------------------------------------- recurrent-state arenas
+def test_insert_state_rows_scatter_and_drop_sentinel():
+    """Counterpart of the KV `insert_rows` invariants for plain state
+    arrays: traced row-index vectors reuse one executable; the sentinel
+    index B is dropped, never clamped onto row B-1."""
+    B = 4
+    arena = jnp.zeros((2, B, 3, 5), jnp.float32)
+    rows_state = jnp.stack([jnp.full((2, 3, 5), 1.0),
+                            jnp.full((2, 3, 5), 2.0)], axis=1)
+    ins = jax.jit(insert_state_rows)
+    out = ins(arena, rows_state, jnp.asarray([3, 1], jnp.int32))
+    assert (np.asarray(out[:, 3]) == 1.0).all()
+    assert (np.asarray(out[:, 1]) == 2.0).all()
+    assert (np.asarray(out[:, 0]) == 0.0).all()
+    assert (np.asarray(out[:, 2]) == 0.0).all()
+    out = ins(arena, rows_state, jnp.asarray([0, 2], jnp.int32))
+    assert ins._cache_size() == 1                          # no retrace
+    out = ins(arena, rows_state, jnp.asarray([1, B], jnp.int32))
+    assert (np.asarray(out[:, 1]) == 1.0).all()
+    assert (np.asarray(out[:, B - 1]) == 0.0).all()        # dropped
+
+
+def test_insert_state_row_traced_index_single_request():
+    """Single-request counterpart: one executable serves every slot."""
+    arena = jnp.zeros((2, 4, 3, 5), jnp.float32)
+    row_state = jnp.full((2, 1, 3, 5), 7.0)
+    ins = jax.jit(insert_state_row)
+    out = ins(arena, row_state, 2)
+    assert (np.asarray(out[:, 2]) == 7.0).all()
+    assert (np.asarray(out[:, [0, 1, 3]]) == 0.0).all()
+    out = ins(arena, row_state, 0)
+    assert ins._cache_size() == 1                          # no retrace
+    # dtype cast on insert mirrors the KV insert_row discipline
+    out = insert_state_row(arena, row_state.astype(jnp.bfloat16), 1)
+    assert out.dtype == arena.dtype
+
+
+def test_clear_state_row_zeroes_one_row():
+    arena = jnp.ones((3, 4, 2, 6), jnp.float32)
+    clr = jax.jit(clear_state_row)
+    out = clr(arena, 2)
+    assert (np.asarray(out[:, 2]) == 0.0).all()
+    assert (np.asarray(out[:, [0, 1, 3]]) == 1.0).all()
+    out = clr(arena, 0)
+    assert clr._cache_size() == 1                          # traced row index

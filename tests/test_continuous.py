@@ -7,6 +7,10 @@ model change.  (Identity requires request-independent budgets: `budget_abs`
 here; with `budget_frac` solo budgets scale with each prompt while the
 continuous plan is fixed, so outputs legitimately differ.)
 """
+import pytest
+
+pytestmark = pytest.mark.system
+
 import numpy as np
 
 import jax

@@ -11,8 +11,12 @@ Three layers of pinning (ISSUE 2 satellite):
     persistent-arena path (the kernel sits inside `_attend_tier` under
     `lax.cond` + `lax.scan` + the fused decode block).
 """
-import numpy as np
+
 import pytest
+
+pytestmark = pytest.mark.kernels
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp

@@ -6,6 +6,10 @@ emission buffers is a DISPATCH change, not a model change.  Greedy (and
 stochastic — the per-step key-split sequence is preserved) outputs must be
 token-identical to dispatching one step at a time.
 """
+import pytest
+
+pytestmark = pytest.mark.system
+
 import numpy as np
 
 import jax

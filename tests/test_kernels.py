@@ -4,10 +4,14 @@ All kernels run in interpret mode (CPU container; TPU is the lowering
 target).  Tolerances: fp32 ~1e-5, bf16 ~5e-2 (inputs are bf16-rounded but
 accumulation is fp32 in both kernel and oracle).
 """
+
+import pytest
+
+pytestmark = pytest.mark.kernels
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.kernels.flash_decode.ops import flash_decode
 from repro.kernels.flash_decode.ref import decode_attention_ref

@@ -1,6 +1,10 @@
 """Unit + property tests for KMeans layer clustering and Algorithm-1 budgets."""
-import numpy as np
+
 import pytest
+
+pytestmark = pytest.mark.fast
+
+import numpy as np
 
 from _hypothesis_compat import given, settings, st
 

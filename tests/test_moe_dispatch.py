@@ -1,10 +1,14 @@
 """MoE dispatch: scatter-free path == einsum reference; drops; grads."""
+
+import pytest
+
+pytestmark = pytest.mark.fast
+
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from _hypothesis_compat import given, settings, st
 

@@ -1,4 +1,8 @@
 """Observation study: token x layer cosine matrix (paper Fig 2 / A.3)."""
+import pytest
+
+pytestmark = pytest.mark.fast
+
 import dataclasses
 
 import jax

@@ -1,8 +1,12 @@
 """Eviction-policy semantics over slot arenas (the paper's C_seq compressors)."""
+
+import pytest
+
+pytestmark = pytest.mark.fast
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from _hypothesis_compat import given, settings, st
 

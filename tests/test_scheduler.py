@@ -1,4 +1,8 @@
 """Wave scheduler + EOS handling over the SqueezeAttention engine."""
+import pytest
+
+pytestmark = pytest.mark.system
+
 import numpy as np
 
 import jax

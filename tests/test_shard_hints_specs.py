@@ -1,4 +1,8 @@
 """Sharding hints + launch specs behave sanely without a mesh (CPU paths)."""
+import pytest
+
+pytestmark = pytest.mark.fast
+
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -7,12 +7,16 @@ invisible when nothing is evicted.  Then: sliding-window eviction at budget
 == model window must equal full cache (the window mask already hides what
 the policy evicts).
 """
+
+import pytest
+
+pytestmark = pytest.mark.system
+
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import PolicyConfig
 from repro.models import ModelConfig, forward, init_params

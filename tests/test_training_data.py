@@ -1,10 +1,14 @@
 """Training substrate: optimizer, schedules, data determinism, checkpointing."""
+
+import pytest
+
+pytestmark = pytest.mark.system
+
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from _hypothesis_compat import given, settings, st
 
