@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Docs lane (scripts/ci.sh --docs): keep the documentation honest.
+
+Two checks, both cheap enough to run on every push:
+
+  1. **Internal links resolve** — every relative markdown link in the
+     checked docs must point at a file (or file#anchor whose heading
+     exists) inside the repo.  External http(s) links are not fetched.
+  2. **The API snippet runs** — every ```python block in docs/API.md is
+     executed (in order, one shared namespace) under JAX_PLATFORMS=cpu,
+     so the documented quickstart can never rot silently.
+
+    PYTHONPATH=src python scripts/check_docs.py [--no-snippets]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ["README.md", "DESIGN.md", "docs/API.md", "ROADMAP.md"]
+SNIPPET_DOC = "docs/API.md"
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#+\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def _anchor(heading: str) -> str:
+    """GitHub-style heading -> anchor slug."""
+    h = heading.strip().lower()
+    h = re.sub(r"[^\w\s-]", "", h)
+    return re.sub(r"\s+", "-", h)
+
+
+def check_links() -> list[str]:
+    errors = []
+    for doc in DOCS:
+        path = os.path.join(ROOT, doc)
+        if not os.path.exists(path):
+            errors.append(f"{doc}: file missing")
+            continue
+        text = open(path).read()
+        base = os.path.dirname(path)
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            ref, _, frag = target.partition("#")
+            dest = os.path.normpath(os.path.join(base, ref)) if ref else path
+            if not os.path.exists(dest):
+                errors.append(f"{doc}: broken link -> {target}")
+                continue
+            if frag and dest.endswith(".md"):
+                anchors = {_anchor(h) for h in
+                           HEADING_RE.findall(open(dest).read())}
+                if frag not in anchors:
+                    errors.append(f"{doc}: broken anchor -> {target}")
+    return errors
+
+
+def run_snippets() -> list[str]:
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    path = os.path.join(ROOT, SNIPPET_DOC)
+    blocks = FENCE_RE.findall(open(path).read())
+    if not blocks:
+        return [f"{SNIPPET_DOC}: no ```python blocks found"]
+    ns: dict = {}
+    for i, code in enumerate(blocks):
+        try:
+            exec(compile(code, f"{SNIPPET_DOC}[snippet {i}]", "exec"), ns)
+        except Exception as e:  # noqa: BLE001 — report, don't crash the lane
+            return [f"{SNIPPET_DOC} snippet {i} failed: {type(e).__name__}: {e}"]
+    print(f"docs: {len(blocks)} snippet(s) from {SNIPPET_DOC} ran OK")
+    return []
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-snippets", action="store_true",
+                    help="link check only (no JAX import)")
+    args = ap.parse_args()
+    errors = check_links()
+    print(f"docs: checked links in {', '.join(DOCS)}")
+    if not args.no_snippets and not errors:
+        errors += run_snippets()
+    for e in errors:
+        print(f"docs ERROR: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,6 +3,7 @@
 #
 #     scripts/ci.sh --fast                 # unit lane: pytest -m fast, <2 min
 #     scripts/ci.sh --full                 # system + kernel lane + smoke gate
+#     scripts/ci.sh --docs                 # docs lane: link check + API snippet
 #     scripts/ci.sh                        # everything (tier-1 verify exact)
 #     scripts/ci.sh --with-benchmarks      # ... plus the quick benchmark suite
 #
@@ -30,6 +31,12 @@ case "$lane" in
         echo "== fast lane: unit tests (-m fast) =="
         run_pytest -m fast
         echo "CI OK (fast lane)"
+        exit 0
+        ;;
+    --docs)
+        echo "== docs lane: internal links + docs/API.md snippet =="
+        PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_docs.py
+        echo "CI OK (docs lane)"
         exit 0
         ;;
     --full)

@@ -172,6 +172,31 @@ def clear_state_row(arena: jnp.ndarray, row) -> jnp.ndarray:
         arena, jnp.zeros(shape, arena.dtype), row, axis=1)
 
 
+def gather_row_segments(arr: jnp.ndarray, rows, starts, size: int,
+                        fill) -> jnp.ndarray:
+    """Strided-slice gather from a packed-prefill layout (DESIGN.md §5).
+
+    ``arr`` is [L, R, P, ...] stacked per packed row; request ``i`` owns the
+    span ``arr[:, rows[i], starts[i] : starts[i]+size]``.  Returns the
+    request-shaped [L, n, size, ...] stack the existing
+    `Engine.build_state` → `insert_rows` admission path consumes.
+
+    ``rows``/``starts`` are traced int32 vectors — one compiled gather per
+    (R, P, n, size) serves every packing outcome.  The P axis is pre-padded
+    with ``fill`` so a segment near the row's end slices into inert filler
+    (pos fill = -1 reads as EMPTY slots) instead of `dynamic_slice` clamping
+    back into a neighbour's tokens.
+    """
+    pad = [(0, 0), (0, 0), (0, size)] + [(0, 0)] * (arr.ndim - 3)
+    ap = jnp.pad(arr, pad, constant_values=fill)
+    sel = ap[:, rows]                                # [L, n, P+size, ...]
+
+    def slice_one(a, s):                             # a: [L, P+size, ...]
+        return jax.lax.dynamic_slice_in_dim(a, s, size, axis=1)
+
+    return jax.vmap(slice_one, in_axes=(1, 0), out_axes=1)(sel, starts)
+
+
 def write_token(
     pol: PolicyConfig,
     layer_cache: SlotCache,    # UNstacked: k/v [B, S, Hkv, hd], pos/score [B, S]

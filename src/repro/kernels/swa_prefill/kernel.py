@@ -28,7 +28,7 @@ NEG_INF = -1e30
 
 def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                 bq: int, bk: int, nk: int, window: int, scale: float,
-                softcap: float):
+                softcap: float, segq_ref=None, segk_ref=None):
     ki = pl.program_id(3)
     qi = pl.program_id(2)
 
@@ -43,6 +43,11 @@ def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     # block is live iff some (qpos >= kpos) and some (kpos > qpos - window)
     live = (k_start <= q_start + bq - 1) & \
         (k_start + bk - 1 > q_start - window)
+    if segq_ref is not None:
+        # packed prefill: whole block skips when the q rows' segment range
+        # cannot intersect the k rows' (ids are non-decreasing along S)
+        live &= (segk_ref[0, 0] <= segq_ref[0, bq - 1]) & \
+            (segk_ref[0, bk - 1] >= segq_ref[0, 0])
 
     @pl.when(live)
     def _compute():
@@ -56,6 +61,9 @@ def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         mask = (kpos <= qpos) & (kpos > qpos - window)
+        if segq_ref is not None:
+            # block-diagonal extension: tokens attend within their segment
+            mask &= segq_ref[0, :][:, None] == segk_ref[0, :][None, :]
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
@@ -76,28 +84,46 @@ def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 def swa_prefill(q, k, v, *, window: int, bq: int = 128, bk: int = 128,
-                softcap: float | None = None, interpret: bool = True):
+                softcap: float | None = None, interpret: bool = True,
+                segments=None):
     """q [B,Hq,S,hd], k/v [B,Hkv,S,hd] -> out [B,Hq,S,hd] (q dtype).
 
     `window` is static (per-layer attention geometry).  S must be a
-    multiple of the block sizes (ops.py pads).
+    multiple of the block sizes (ops.py pads).  ``segments`` [B,S] int32
+    (non-decreasing per row) makes the mask block-diagonal for packed
+    prefill; blocks whose q/k segment ranges cannot intersect skip the MXU
+    work entirely, so a pack of R short requests costs O(R * len²) instead
+    of O((R * len)²).
     """
     B, Hq, S, hd = q.shape
     Hkv = k.shape[1]
     G = Hq // Hkv
     assert S % bq == 0 and S % bk == 0
     nq, nk = S // bq, S // bk
-    kern = functools.partial(
-        _swa_kernel, bq=bq, bk=bk, nk=nk, window=int(window),
-        scale=1.0 / math.sqrt(hd), softcap=float(softcap or 0.0))
+    base = dict(bq=bq, bk=bk, nk=nk, window=int(window),
+                scale=1.0 / math.sqrt(hd), softcap=float(softcap or 0.0))
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+    ]
+    args = (q, k, v)
+    if segments is None:
+        kern = functools.partial(_swa_kernel, **base)
+    else:
+        def kern(q_ref, k_ref, v_ref, segq_ref, segk_ref, o_ref,
+                 m_scr, l_scr, acc_scr):
+            _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                        segq_ref=segq_ref, segk_ref=segk_ref, **base)
+        in_specs += [
+            pl.BlockSpec((1, bq), lambda b, h, i, j: (b, i)),
+            pl.BlockSpec((1, bk), lambda b, h, i, j: (b, j)),
+        ]
+        args = (q, k, v, segments.astype(jnp.int32), segments.astype(jnp.int32))
     return pl.pallas_call(
         kern,
         grid=(B, Hq, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hq, S, hd), q.dtype),
         scratch_shapes=[
@@ -106,4 +132,4 @@ def swa_prefill(q, k, v, *, window: int, bq: int = 128, bk: int = 128,
             pltpu.VMEM((bq, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*args)

@@ -7,9 +7,11 @@ from repro.kernels.swa_prefill import kernel as K
 
 
 def swa_attention(q, k, v, *, window: int, bq: int = 128, bk: int = 128,
-                  softcap=None, interpret: bool = True):
+                  softcap=None, interpret: bool = True, segments=None):
     """q [B,Hq,S,hd], k/v [B,Hkv,S,hd] -> [B,Hq,S,hd].  Pads S as needed;
-    padded queries attend only to themselves... and are sliced away."""
+    padded queries attend only to themselves... and are sliced away.
+    ``segments`` [B,S] adds packed-prefill block-diagonal masking (padding
+    extends the last segment, then is sliced away)."""
     B, Hq, S, hd = q.shape
     blk = max(bq, bk)
     if S < blk:                      # tiny sequences: shrink blocks
@@ -19,6 +21,9 @@ def swa_attention(q, k, v, *, window: int, bq: int = 128, bk: int = 128,
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if segments is not None:
+            segments = jnp.pad(segments, ((0, 0), (0, pad)), mode="edge")
     out = K.swa_prefill(q, k, v, window=window, bq=bq, bk=bk,
-                        softcap=softcap, interpret=interpret)
+                        softcap=softcap, interpret=interpret,
+                        segments=segments)
     return out[:, :, :S]

@@ -4,9 +4,11 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def swa_attention_ref(q, k, v, window: int, softcap: float | None = None):
+def swa_attention_ref(q, k, v, window: int, softcap: float | None = None,
+                      segments=None):
     """q [B,Hq,S,hd], k/v [B,Hkv,S,hd]; canonical positions 0..S-1.
-    Returns out [B,Hq,S,hd] f32."""
+    Returns out [B,Hq,S,hd] f32.  ``segments`` [B,S] restricts attention
+    to same-segment tokens (packed-prefill block-diagonal mask)."""
     B, Hq, S, hd = q.shape
     Hkv = k.shape[1]
     G = Hq // Hkv
@@ -19,6 +21,9 @@ def swa_attention_ref(q, k, v, window: int, softcap: float | None = None):
     qi = jnp.arange(S)[:, None]
     ki = jnp.arange(S)[None, :]
     mask = (ki <= qi) & (ki > qi - window)
+    if segments is not None:
+        mask = mask[None] & (segments[:, :, None] == segments[:, None, :])
+        mask = mask[:, None]                               # [B,1,S,S]
     s = jnp.where(mask, s, -1e30)
     p = jnp.exp(s - s.max(-1, keepdims=True))
     p = jnp.where(mask, p, 0.0)

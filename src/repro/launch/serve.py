@@ -51,11 +51,16 @@ def _run_oneshot(params, cfg, ecfg, args):
 def _run_continuous(params, cfg, ecfg, args):
     """Heterogeneous-length traffic through the persistent-arena core."""
     bucket = max(4, args.prompt_len // 2)   # two buckets: length-sorted path
+    if args.packed_prefill and (cfg.is_ssm_only or cfg.is_hybrid):
+        # packed recurrent segments must align with the SSD chunk grid
+        # (ContinuousEngine enforces it); round the bucket up to a multiple
+        bucket = -(-bucket // cfg.ssm_chunk) * cfg.ssm_chunk
     ccfg = ContinuousConfig(
         max_concurrency=args.max_concurrency, prompt_bucket=bucket,
         max_prompt_len=args.prompt_len, max_new_cap=args.max_new,
         sync_every=args.sync_every,
-        length_sorted=not args.no_length_sort)
+        length_sorted=not args.no_length_sort,
+        packed_prefill=args.packed_prefill)
     sched = ContinuousScheduler(params, cfg, ecfg, ccfg, seed=args.seed)
     print(f"capability: {sched.capability.describe()}")
     rng = np.random.default_rng(args.seed)
@@ -89,12 +94,14 @@ def _run_continuous(params, cfg, ecfg, args):
           f"across {args.max_concurrency} rows")
     print(f"{args.batch} requests, {n_tok} tokens in {wall*1e3:.1f}ms "
           f"({n_tok/max(wall, 1e-9):.1f} tok/s incl. compile)")
+    layout = ("packed" if ccfg.packed_prefill
+              else "sorted" if ccfg.length_sorted else "padded")
     print(f"host dispatches: {core.decode_dispatches} fused decode blocks "
           f"for {core.decode_steps} steps (sync_every={args.sync_every}), "
           f"{core.admit_dispatches} admissions for {core.admitted} requests; "
           f"prefill pad tokens {core.prefill_pad_tokens} for "
           f"{core.prompt_tokens} prompt tokens"
-          f" (length_sorted={ccfg.length_sorted})")
+          f" (admission={layout})")
 
 
 def main():
@@ -115,6 +122,10 @@ def main():
     ap.add_argument("--no-length-sort", action="store_true",
                     help="disable length-sorted admission (pad every "
                          "burst to its longest prompt)")
+    ap.add_argument("--packed-prefill", action="store_true",
+                    help="packed admission: concatenate a burst's prompts "
+                         "into few rows under a block-diagonal mask and "
+                         "prefill them in one dispatch")
     ap.add_argument("--flash-decode", action="store_true",
                     help="route decode attention through the Pallas "
                          "flash-decode kernel (interpret mode off-TPU)")

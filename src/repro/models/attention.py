@@ -96,12 +96,20 @@ def full_attention(
     window: jnp.ndarray | int = GLOBAL_WINDOW,  # scalar, data not shape
     valid: Optional[jnp.ndarray] = None,        # [B, S] bool (padding mask)
     return_colsums: bool = False,   # H2O: per-key total attention mass
+    segments: Optional[jnp.ndarray] = None,     # [B, S] int32 packed seg ids
 ):
     """Causal (+sliding window) attention.
 
     Returns (out [B,S,d], k, v, colsums [B,Hkv,S] | None).
     Long sequences take a blockwise online-softmax (flash) path so peak
     activation memory is O(S * block) instead of O(S^2).
+
+    ``segments`` turns the causal mask block-diagonal for packed prefill
+    (DESIGN.md §5): a token attends only within its own segment id, so
+    several requests concatenated into one row (positions reset per
+    segment) never see each other.  H2O column sums from queries with no
+    visible key (the tail padding of a packed row) are dropped rather than
+    softmax-uniform garbage.
     """
     B, S, _ = x.shape
     q, k, v = _project_qkv(p, x, positions, cfg)
@@ -111,38 +119,46 @@ def full_attention(
 
     if S > FLASH_THRESHOLD and S % FLASH_BLOCK == 0:
         out, colsums = _flash_attention(qf, k, v, pos1, cfg, window, valid,
-                                        return_colsums)
+                                        return_colsums, segments=segments)
     else:
         out, colsums = _naive_attention(qf, k, v, pos1, cfg, window, valid,
-                                        return_colsums)
+                                        return_colsums, segments)
     out = out.reshape(B, S, cfg.q_dim).astype(x.dtype)
     return out @ p.wo, k, v, colsums
 
 
-def _mask(pos_q, pos_k, window, valid_k):
+def _mask(pos_q, pos_k, window, valid_k, seg_q=None, seg_k=None):
     """pos_q [B,Sq], pos_k [B,Sk] -> bool [B,1,Sq,1,Sk]."""
     qp = pos_q[:, None, :, None, None]
     kp = pos_k[:, None, None, None, :]
     m = (kp <= qp) & (kp > qp - window)
     if valid_k is not None:
         m &= valid_k[:, None, None, None, :]
+    if seg_q is not None:
+        m &= seg_q[:, None, :, None, None] == seg_k[:, None, None, None, :]
     return m
 
 
-def _naive_attention(qf, k, v, pos1, cfg, window, valid, return_colsums):
+def _naive_attention(qf, k, v, pos1, cfg, window, valid, return_colsums,
+                     segments=None):
     scores = jnp.einsum("bsngd,btnd->bnsgt", qf, k.astype(jnp.float32))
     scores = scores * (1.0 / math.sqrt(cfg.hd))
     scores = _softcap(scores, cfg.attn_softcap)
-    mask = _mask(pos1, pos1, window, valid)   # [B,1,Sq,1,Sk] broadcasts
-    scores = jnp.where(mask, scores, -1e30)
+    mask = _mask(pos1, pos1, window, valid, segments, segments)
+    scores = jnp.where(mask, scores, -1e30)   # [B,1,Sq,1,Sk] broadcasts
     probs = jax.nn.softmax(scores, axis=-1)
-    colsums = probs.sum(axis=(2, 3)) if return_colsums else None  # [B,n,Sk]
+    colsums = None
+    if return_colsums:
+        # all-masked queries (packed tail padding) softmax to uniform junk;
+        # zeroing through the mask keeps every real contribution bit-exact
+        # (exp(-1e30 - m) underflows to 0.0) and drops only the junk rows
+        colsums = jnp.where(mask, probs, 0.0).sum(axis=(2, 3))   # [B,n,Sk]
     out = jnp.einsum("bnsgt,btnd->bsngd", probs, v.astype(jnp.float32))
     return out, colsums
 
 
 def _flash_attention(qf, k, v, pos1, cfg, window, valid, return_colsums,
-                     block: int = FLASH_BLOCK):
+                     segments=None, block: int = FLASH_BLOCK):
     """Online-softmax over key blocks (lax.scan).  Peak extra memory is
     O(B * heads * S * block) fp32 — the pure-JAX analogue of the Pallas
     swa_prefill kernel (kernels/swa_prefill.py is the TPU version)."""
@@ -154,17 +170,22 @@ def _flash_attention(qf, k, v, pos1, cfg, window, valid, return_colsums,
     pb = pos1.reshape(B, nb, block).transpose(1, 0, 2)
     valb = (valid.reshape(B, nb, block).transpose(1, 0, 2)
             if valid is not None else jnp.ones((nb, B, block), bool))
+    # the segment-id block stream exists only for packed prefill — the
+    # common (unpacked) path carries no dead scan input
+    segb = (segments.reshape(B, nb, block).transpose(1, 0, 2),) \
+        if segments is not None else ()
 
-    def scores_fn(k_blk, p_blk, v_blk_valid):
+    def scores_fn(k_blk, p_blk, v_blk_valid, rest):
         s = jnp.einsum("bsngd,btnd->bnsgt", qf, k_blk) * scale
         s = _softcap(s, cfg.attn_softcap)
-        m = _mask(pos1, p_blk, window, v_blk_valid)
-        return jnp.where(m, s, -1e30)
+        m = _mask(pos1, p_blk, window, v_blk_valid,
+                  segments, rest[0] if rest else None)
+        return jnp.where(m, s, -1e30), m
 
     def step(carry, blk):
         m, l, acc = carry
-        k_blk, v_blk, p_blk, val_blk = blk
-        s = scores_fn(k_blk, p_blk, val_blk)                  # [B,n,S,G,block]
+        k_blk, v_blk, p_blk, val_blk, *rest = blk
+        s, _ = scores_fn(k_blk, p_blk, val_blk, rest)          # [B,n,S,G,block]
         m_new = jnp.maximum(m, s.max(-1))
         corr = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
@@ -175,7 +196,8 @@ def _flash_attention(qf, k, v, pos1, cfg, window, valid, return_colsums,
     m0 = jnp.full((B, n, S, G), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((B, n, S, G), jnp.float32)
     a0 = jnp.zeros((B, n, S, G, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb, valb))
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kb, vb, pb, valb) + segb)
     lsafe = jnp.where(l > 0, l, 1.0)
     out = (acc / lsafe[..., None]).transpose(0, 2, 1, 3, 4)   # [B,S,n,G,hd]
 
@@ -184,12 +206,14 @@ def _flash_attention(qf, k, v, pos1, cfg, window, valid, return_colsums,
         inv = (1.0 / lsafe)[..., None]                         # [B,n,S,G,1]
 
         def col_step(_, blk):
-            k_blk, p_blk, val_blk = blk
-            s = scores_fn(k_blk, p_blk, val_blk)
-            p = jnp.exp(s - m[..., None]) * inv
+            k_blk, p_blk, val_blk, *rest = blk
+            s, msk = scores_fn(k_blk, p_blk, val_blk, rest)
+            # mask-weighted like the naive branch: all-masked queries (m =
+            # -1e30 -> exp(0) = 1 junk) contribute nothing
+            p = jnp.where(msk, jnp.exp(s - m[..., None]) * inv, 0.0)
             return None, p.sum(axis=(2, 3))                    # [B,n,block]
 
-        _, cols = jax.lax.scan(col_step, None, (kb, pb, valb))
+        _, cols = jax.lax.scan(col_step, None, (kb, pb, valb) + segb)
         colsums = cols.transpose(1, 2, 0, 3).reshape(B, n, S)
     return out, colsums
 

@@ -78,25 +78,63 @@ def _split_proj(p: SsmParams, x, cfg):
     return z, xbc, dt
 
 
-def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
-    """Depthwise causal conv, width W.  xbc: [B,S,C]; conv_state: [B,W-1,C]."""
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None, segments=None):
+    """Depthwise causal conv, width W.  xbc: [B,S,C]; conv_state: [B,W-1,C].
+
+    With ``segments`` (packed prefill, [B,S] int32) a tap only contributes
+    when its source token shares the output token's segment id, so the
+    receptive field never crosses a request boundary — each segment sees
+    the same zero left-padding a fresh sequence would.
+    """
     W = conv_w.shape[0]
+    S = xbc.shape[1]
     if conv_state is None:
         pad = jnp.zeros(xbc.shape[:1] + (W - 1,) + xbc.shape[2:], xbc.dtype)
     else:
         pad = conv_state.astype(xbc.dtype)
     xp = jnp.concatenate([pad, xbc], axis=1)                 # [B, S+W-1, C]
-    out = sum(xp[:, i:i + xbc.shape[1], :] * conv_w[i] for i in range(W))
+    if segments is None:
+        out = sum(xp[:, i:i + S, :] * conv_w[i] for i in range(W))
+    else:
+        segp = jnp.concatenate(
+            [jnp.full(segments.shape[:1] + (W - 1,), -1, segments.dtype),
+             segments], axis=1)                              # [B, S+W-1]
+        out = sum(
+            jnp.where((segp[:, i:i + S] == segments)[..., None],
+                      xp[:, i:i + S, :], 0) * conv_w[i]
+            for i in range(W))
     out = jax.nn.silu(out + conv_b)
     new_state = xp[:, -(W - 1):, :]
     return out, new_state
 
 
-def ssd_chunked(xh, bh, ch, dt, a_log, d_skip, chunk: int, initial_state=None):
+def ssd_chunked(xh, bh, ch, dt, a_log, d_skip, chunk: int, initial_state=None,
+                segments=None, take_pos=None, take_aligned: bool = False):
     """Chunked SSD scan.
 
     xh: [B,S,H,P], bh/ch: [B,S,N], dt: [B,S,H] (post-softplus, fp32),
     a_log: [H].  Returns y [B,S,H,P] and final state [B,H,P,N].
+
+    Packed prefill (DESIGN.md §5) adds two optionals:
+
+    * ``segments`` [B,S] int32, non-decreasing per row — the recurrence
+      resets at every segment boundary.  Resets are implemented by
+      *masking* (intra-chunk decay, chunk-summary tails, the inter-chunk
+      recurrence and the entering-state readout each drop cross-segment
+      terms) rather than by injecting -inf log-decays, which would wreck
+      the cumsum's precision for every later segment.  When segment starts
+      are chunk-aligned the per-segment arithmetic is bit-identical to
+      running each segment alone.
+    * ``take_pos`` [B,K] int32 (-1 = unused slot) — also return the state
+      *after* each listed position: [B,K,H,P,N].  This is how packed
+      admission reads one recurrent state per packed request out of a
+      single scan.  Return becomes ``(y, final, states_at)``.
+      ``take_aligned`` (static) promises every real position sits at a
+      chunk boundary (``pos % chunk == chunk-1``): the states are then a
+      cheap gather of the scan's own post-chunk values — bit-identical to
+      a solo run — and the generic per-position reconstruction is skipped
+      entirely.  Packed admission always qualifies (slot boundaries are
+      chunk-aligned by construction).
     """
     B, S, H, P = xh.shape
     N = bh.shape[-1]
@@ -114,6 +152,8 @@ def ssd_chunked(xh, bh, ch, dt, a_log, d_skip, chunk: int, initial_state=None):
         bf = jnp.pad(bf, ((0, 0), (0, pad), (0, 0)))
         cf = jnp.pad(cf, ((0, 0), (0, pad), (0, 0)))
         dta = jnp.pad(dta, ((0, 0), (0, pad), (0, 0)))
+        if segments is not None:   # edge-pad: padding extends the last segment
+            segments = jnp.pad(segments, ((0, 0), (0, pad)), mode="edge")
         S = S + pad
     nc = S // L
 
@@ -122,22 +162,38 @@ def ssd_chunked(xh, bh, ch, dt, a_log, d_skip, chunk: int, initial_state=None):
     cc = cf.reshape(B, nc, L, N)
     ac = dta.reshape(B, nc, L, H)
     cum = jnp.cumsum(ac, axis=2)                                   # [B,nc,L,H]
+    sc = segments.reshape(B, nc, L) if segments is not None else None
 
     # ---- intra-chunk (quadratic within the chunk) ----------------------------
-    # decay[t,s] = exp(cum[t] - cum[s]) for s <= t
+    # decay[t,s] = exp(cum[t] - cum[s]) for s <= t (and seg[t] == seg[s])
     rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # [B,nc,L,L,H]
-    causal = jnp.tril(jnp.ones((L, L), bool))
-    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    causal = jnp.tril(jnp.ones((L, L), bool))[None, None]
+    if sc is not None:
+        causal = causal & (sc[:, :, :, None] == sc[:, :, None, :])
+    decay = jnp.where(causal[..., None], jnp.exp(rel), 0.0)
     scores = jnp.einsum("bqln,bqmn->bqlm", cc, bc)                 # [B,nc,L,L]
     y_intra = jnp.einsum("bqlm,bqlmh,bqmhp->bqlhp", scores, decay, xc)
 
     # ---- chunk summary states -------------------------------------------------
-    # state_q = sum_s exp(cum[last] - cum[s]) * b[s] (x) xdt[s]
+    # state_q = sum_s exp(cum[last] - cum[s]) * b[s] (x) xdt[s], over tokens
+    # in the chunk's LAST segment only (earlier segments died at their reset)
     tail = jnp.exp(cum[:, :, -1:, :] - cum)                        # [B,nc,L,H]
+    if sc is not None:
+        tail = tail * (sc == sc[:, :, -1:])[..., None]
     chunk_state = jnp.einsum("bqln,bqlh,bqlhp->bqhpn", bc, tail, xc)
 
     # ---- inter-chunk recurrence ------------------------------------------------
     chunk_decay = jnp.exp(cum[:, :, -1, :])                        # [B,nc,H]
+    if sc is not None:
+        # the state entering chunk q belongs to chunk q-1's last segment;
+        # it survives to chunk q's exit iff no reset happened in q (segment
+        # ids are non-decreasing, so equality of the two chunk-final ids
+        # means exactly that)
+        seg_last = sc[:, :, -1]                                    # [B,nc]
+        seg_prev_last = jnp.concatenate(
+            [jnp.full((B, 1), -1, seg_last.dtype), seg_last[:, :-1]], axis=1)
+        chunk_decay = chunk_decay * (
+            seg_last == seg_prev_last)[..., None].astype(jnp.float32)
     if initial_state is None:
         initial_state = jnp.zeros((B, H, P, N), jnp.float32)
 
@@ -154,25 +210,127 @@ def ssd_chunked(xh, bh, ch, dt, a_log, d_skip, chunk: int, initial_state=None):
     )
     entering = entering.transpose(1, 0, 2, 3, 4)                    # [B,nc,H,P,N]
 
-    y_inter = jnp.einsum("bqln,bqlh,bqhpn->bqlhp", cc, jnp.exp(cum), entering)
+    inter_w = jnp.exp(cum)                                          # [B,nc,L,H]
+    if sc is not None:
+        # the entering state is visible to a token only before the chunk's
+        # first reset, i.e. while the token still belongs to the segment
+        # the state came from
+        inter_w = inter_w * (sc == seg_prev_last[:, :, None])[..., None]
+    y_inter = jnp.einsum("bqln,bqlh,bqhpn->bqlhp", cc, inter_w, entering)
     y = (y_intra + y_inter).reshape(B, S, H, P)[:, :S_orig]
     y = y + xh.astype(jnp.float32) * d_skip[None, None, :, None]
-    return y, final
+    if take_pos is None:
+        return y, final
+    # chunk-aligned take positions read the scan's own post-chunk state —
+    # bit-identical to a solo run of the segment (the generic formula
+    # re-associates the last chunk's sum, which is only ~ulp-equal);
+    # packed admission aligns slots to the chunk grid exactly for this
+    after = jnp.concatenate([entering[:, 1:], final[:, None]], axis=1)
+    tp = jnp.maximum(take_pos, 0)
+    live = (take_pos >= 0)[..., None, None, None]
+    snap_aligned = after[jnp.arange(B)[:, None], tp // L]          # [B,K,...]
+    if take_aligned:
+        return y, final, jnp.where(live, snap_aligned, 0.0)
+    states_at = _ssd_states_at(cum, bc, xc, entering, sc,
+                               None if sc is None else seg_prev_last,
+                               take_pos, L)
+    aligned = (take_pos >= 0) & (tp % L == L - 1)
+    states_at = jnp.where(aligned[..., None, None, None],
+                          jnp.where(live, snap_aligned, 0.0),
+                          states_at)
+    return y, final, states_at
 
 
-def ssm_forward(p: SsmParams, x, cfg, state=None, conv_state=None):
-    """Full-sequence Mamba2 mixer.  x: [B,S,d] -> (y, (ssm_state, conv_state))."""
+def _ssd_states_at(cum, bc, xc, entering, sc, seg_prev_last, take_pos, L):
+    """Recurrent state *after* arbitrary positions, from chunked pieces.
+
+    state(e) = entering(chunk of e) · exp(cum[e]) + Σ_{m ≤ e, same chunk}
+    exp(cum[e] − cum[m]) b_m ⊗ xdt_m — the same decomposition the chunk
+    summary uses, evaluated at position e instead of the chunk tail.  With
+    `sc` the sums drop cross-segment terms, so state(e) is exactly the
+    state of e's own segment.  take_pos [B,K] (-1 → zeros) → [B,K,H,P,N].
+    """
+    def one(cum_b, bc_b, xc_b, ent_b, sc_b, spl_b, e):
+        live = e >= 0
+        e = jnp.maximum(e, 0)
+        q, l = e // L, e % L
+        idx = lambda a: jax.lax.dynamic_index_in_dim(a, q, 0, keepdims=False)
+        cum_q, bc_q, xc_q, ent_q = idx(cum_b), idx(bc_b), idx(xc_b), idx(ent_b)
+        cl = jax.lax.dynamic_index_in_dim(cum_q, l, 0, keepdims=False)  # [H]
+        m = jnp.arange(L) <= l
+        keep_ent = jnp.float32(1.0)
+        if sc_b is not None:
+            sc_q = idx(sc_b)
+            sl = jax.lax.dynamic_index_in_dim(sc_q, l, 0, keepdims=False)
+            m = m & (sc_q == sl)
+            keep_ent = (sl == idx(spl_b)).astype(jnp.float32)
+        w = jnp.exp(cl[None, :] - cum_q) * m[:, None]                # [L,H]
+        intra = jnp.einsum("ln,lh,lhp->hpn", bc_q, w, xc_q)
+        st = ent_q * (keep_ent * jnp.exp(cl))[:, None, None] + intra
+        return jnp.where(live, st, 0.0)
+
+    over_k = jax.vmap(one, in_axes=(None, None, None, None, None, None, 0))
+    over_b = jax.vmap(over_k, in_axes=(0, 0, 0, 0,
+                                       None if sc is None else 0,
+                                       None if sc is None else 0, 0))
+    return over_b(cum, bc, xc, entering, sc, seg_prev_last, take_pos)
+
+
+def ssm_forward(p: SsmParams, x, cfg, state=None, conv_state=None,
+                segments=None, state_take=None,
+                state_take_aligned: bool = False):
+    """Full-sequence Mamba2 mixer.  x: [B,S,d] -> (y, (ssm_state, conv_state)).
+
+    Packed prefill: ``segments`` [B,S] resets the recurrence (and the causal
+    conv's receptive field) at request boundaries; ``state_take`` [B,K]
+    switches the returned carry from the row-final state to per-position
+    snapshots — ``(ssm [B,K,H,P,N], conv [B,K,W-1,C])``, the state each
+    packed request would have ended with on its own.
+    """
     B, S, _ = x.shape
     di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
-    z, xbc, dt = _split_proj(p, x, cfg)
-    xbc, new_conv = _causal_conv(xbc, p.conv_w, p.conv_b, conv_state)
+    z, xbc_in, dt = _split_proj(p, x, cfg)
+    xbc, new_conv = _causal_conv(xbc_in, p.conv_w, p.conv_b, conv_state,
+                                 segments)
     xs = xbc[..., :di].reshape(B, S, H, P)
     bh = xbc[..., di:di + N]
     ch = xbc[..., di + N:]
     dt = jax.nn.softplus(dt + p.dt_bias)
-    y, final = ssd_chunked(xs, bh, ch, dt, p.a_log, p.d_skip, cfg.ssm_chunk, state)
+    if state_take is None:
+        y, final = ssd_chunked(xs, bh, ch, dt, p.a_log, p.d_skip,
+                               cfg.ssm_chunk, state, segments=segments)
+        carry = (final, new_conv)
+    else:
+        y, _, snaps = ssd_chunked(xs, bh, ch, dt, p.a_log, p.d_skip,
+                                  cfg.ssm_chunk, state, segments=segments,
+                                  take_pos=state_take,
+                                  take_aligned=state_take_aligned)
+        # conv state = the PRE-conv projection stream, not the conv output
+        carry = (snaps, _conv_states_at(xbc_in, segments, state_take,
+                                        p.conv_w.shape[0]))
     y = (y.reshape(B, S, di) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    return y @ p.w_out, (final, new_conv)
+    return y @ p.w_out, carry
+
+
+def _conv_states_at(xbc, segments, take_pos, W):
+    """Conv tail snapshots: the last W-1 *same-segment* inputs ending at each
+    take position (zeros where the segment is shorter), i.e. exactly the
+    ``conv_state`` a solo run of that segment would have left behind.
+    xbc [B,S,C], take_pos [B,K] -> [B,K,W-1,C]."""
+    B, S, C = xbc.shape
+    e = jnp.maximum(take_pos, 0)                                 # [B,K]
+    idx = e[:, :, None] - (W - 2) + jnp.arange(W - 1)[None, None]  # [B,K,W-1]
+    ok = (idx >= 0) & (take_pos[:, :, None] >= 0)
+    if segments is not None:
+        seg_e = jnp.take_along_axis(segments, e, axis=1)         # [B,K]
+        seg_i = jnp.take_along_axis(
+            segments[:, None, :].repeat(e.shape[1], 1),
+            jnp.clip(idx, 0, S - 1), axis=2)                     # [B,K,W-1]
+        ok = ok & (seg_i == seg_e[:, :, None])
+    gath = jnp.take_along_axis(
+        xbc[:, None].repeat(e.shape[1], 1),                      # [B,K,S,C]
+        jnp.clip(idx, 0, S - 1)[..., None], axis=2)              # [B,K,W-1,C]
+    return jnp.where(ok[..., None], gath, 0)
 
 
 def ssm_decode_step(p: SsmParams, x, cfg, state, conv_state):

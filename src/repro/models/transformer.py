@@ -153,26 +153,39 @@ def forward(
     valid: Optional[jnp.ndarray] = None,       # [B, S] bool
     collect_kv: bool = False,                  # prefill: return full KV + H2O scores
     remat: bool = False,                       # checkpoint each scan BODY
+    segments: Optional[jnp.ndarray] = None,    # [B, S] int32 packed segment ids
+    state_take: Optional[jnp.ndarray] = None,  # [B, K] recurrent-state snapshots
+    state_take_aligned: bool = False,          # static: takes sit on chunk ends
 ) -> ForwardOut:
     """remat=True reruns each layer's interior in the backward pass so the
     layer scan saves only its carry — without it, XLA's while-loop autodiff
     stashes every per-layer intermediate (e.g. [L, E, C, f] MoE hiddens),
-    which dominated the training-step memory roofline (§Perf A2)."""
+    which dominated the training-step memory roofline (§Perf A2).
+
+    Packed prefill (DESIGN.md §5): ``segments`` makes every attention mask
+    block-diagonal and resets the SSM recurrence at segment boundaries, so
+    one row can carry several concatenated requests (positions reset per
+    segment).  ``state_take`` [B,K] makes recurrent layers return state
+    snapshots after those positions ([L, B, K, ...]) instead of row-final
+    states — one per packed segment."""
     x = _embed(params, cfg, tokens, embeds)
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
 
     if cfg.is_ssm_only:
-        x, cos, ssm_state = _ssm_stack(params, cfg, x, valid, remat)
+        x, cos, ssm_state = _ssm_stack(params, cfg, x, valid, remat,
+                                       segments, state_take,
+                                       state_take_aligned)
         kv = scores = None
         aux = jnp.zeros((), jnp.float32)
     elif cfg.is_hybrid:
         x, cos, kv, scores, ssm_state, aux = _hybrid_stack(
-            params, cfg, x, positions, valid, collect_kv, remat)
+            params, cfg, x, positions, valid, collect_kv, remat,
+            segments, state_take, state_take_aligned)
     else:
         x, cos, kv, scores, aux = _dense_stack(
-            params, cfg, x, positions, valid, collect_kv, remat)
+            params, cfg, x, positions, valid, collect_kv, remat, segments)
         ssm_state = None
 
     x = apply_norm(params["final_norm"], x, cfg)
@@ -186,13 +199,15 @@ def forward(
     return ForwardOut(logits, cos, kv, scores, ssm_state, aux)
 
 
-def _attn_block(bp, cfg, x, positions, valid, window, collect_kv):
+def _attn_block(bp, cfg, x, positions, valid, window, collect_kv,
+                segments=None):
     """norm -> attention -> residual. Returns (x, cos, k, v, colsum)."""
     pre = x
     h = apply_norm(bp["attn_norm"], x, cfg)
     ap = attn_lib.AttnParams(**bp["attn"])
     out, k, v, colsum = attn_lib.full_attention(
-        ap, h, positions, cfg, window, valid, return_colsums=collect_kv)
+        ap, h, positions, cfg, window, valid, return_colsums=collect_kv,
+        segments=segments)
     if cfg.use_post_norms:
         out = apply_norm(bp["post_attn_norm"], out, cfg)
     x = x + out
@@ -219,7 +234,8 @@ def _remat(body, remat):
                           policy=jax.checkpoint_policies.nothing_saveable)
 
 
-def _dense_stack(params, cfg, x, positions, valid, collect_kv, remat=False):
+def _dense_stack(params, cfg, x, positions, valid, collect_kv, remat=False,
+                 segments=None):
     windows = layer_windows(cfg)
 
     def body(carry, inp):
@@ -231,7 +247,7 @@ def _dense_stack(params, cfg, x, positions, valid, collect_kv, remat=False):
         x = hint(carry, {0: "batch", 2: "model"} if remat else {0: "batch"})
         bp, window = inp
         x, cos, k, v, colsum = _attn_block(bp, cfg, x, positions, valid, window,
-                                           collect_kv)
+                                           collect_kv, segments)
         x, aux = _ffn_block(bp, cfg, x, valid)
         outs = (cos, aux)
         if collect_kv:
@@ -247,13 +263,16 @@ def _dense_stack(params, cfg, x, positions, valid, collect_kv, remat=False):
     return x, cos, kv, scores, aux.sum()
 
 
-def _ssm_stack(params, cfg, x, valid, remat=False):
+def _ssm_stack(params, cfg, x, valid, remat=False, segments=None,
+               state_take=None, state_take_aligned=False):
     def body(carry, bp):
         x = hint(carry, {0: "batch", 2: "model"} if remat else {0: "batch"})
         pre = x
         h = apply_norm(bp["norm"], x, cfg)
         out, (state, conv) = ssm_lib.ssm_forward(
-            ssm_lib.SsmParams(**bp["ssm"]), h, cfg)
+            ssm_lib.SsmParams(**bp["ssm"]), h, cfg,
+            segments=segments, state_take=state_take,
+            state_take_aligned=state_take_aligned)
         x = x + out
         cos = _cos_sim(pre, x, valid)
         return x, (cos, state, conv)
@@ -263,7 +282,8 @@ def _ssm_stack(params, cfg, x, valid, remat=False):
     return x, cos, (states, convs)
 
 
-def _hybrid_stack(params, cfg, x, positions, valid, collect_kv, remat=False):
+def _hybrid_stack(params, cfg, x, positions, valid, collect_kv, remat=False,
+                  segments=None, state_take=None, state_take_aligned=False):
     """Zamba2-style: scan over super-blocks of `attn_period` mamba blocks +
     one shared-weight attention/mlp block (its KV cache IS per-invocation)."""
     sp = params["shared_attn"]
@@ -274,12 +294,15 @@ def _hybrid_stack(params, cfg, x, positions, valid, collect_kv, remat=False):
         def inner(c, bp):
             h = apply_norm(bp["norm"], c, cfg)
             out, (state, conv) = ssm_lib.ssm_forward(
-                ssm_lib.SsmParams(**bp["ssm"]), h, cfg)
+                ssm_lib.SsmParams(**bp["ssm"]), h, cfg,
+                segments=segments, state_take=state_take,
+                state_take_aligned=state_take_aligned)
             return c + out, (state, conv)
 
         x, (states, convs) = jax.lax.scan(inner, x, bps)
         x, cos, k, v, colsum = _attn_block(sp, cfg, x, positions, valid,
-                                           GLOBAL_WINDOW, collect_kv)
+                                           GLOBAL_WINDOW, collect_kv,
+                                           segments)
         h2 = apply_norm(sp["mlp_norm"], x, cfg)
         x = x + mlp_lib.apply_mlp(mlp_lib.MlpParams(**sp["mlp"]), h2, cfg)
         outs = (cos, states, convs)

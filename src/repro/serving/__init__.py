@@ -3,7 +3,9 @@ from repro.serving.continuous import (Capability, Completed, ContinuousConfig,
                                       continuous_capability)
 from repro.serving.decode import DecodeState, make_tier_indices, serve_step
 from repro.serving.engine import Engine, EngineConfig, GenerationResult
-from repro.serving.prefill import PrefillOut, pad_prompt, pad_prompts, prefill
+from repro.serving.prefill import (PackedPrefillOut, PackPlan, PrefillOut,
+                                   packed_prefill, pad_prompt, pad_prompts,
+                                   plan_pack, prefill)
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.scheduler import (ContinuousScheduler, Request,
                                      SchedulerConfig, WaveScheduler)
@@ -12,6 +14,7 @@ __all__ = [
     "DecodeState", "make_tier_indices", "serve_step",
     "Engine", "EngineConfig", "GenerationResult",
     "PrefillOut", "prefill", "pad_prompt", "pad_prompts",
+    "PackPlan", "PackedPrefillOut", "packed_prefill", "plan_pack",
     "SamplerConfig", "sample",
     "Capability", "continuous_capability",
     "Completed", "ContinuousConfig", "ContinuousEngine", "ContinuousState",

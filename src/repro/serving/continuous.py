@@ -37,10 +37,15 @@ zamba2 configs run the identical admission → fused decode → retirement →
 recycling path as dense models; the Algorithm-1 budget split applies to the
 attention layers only.
 
-Admission is **length-sorted**: a burst's prompts are partitioned by their
-padded length bucket and each bucket prefills separately, so a bimodal
-burst stops padding every short prompt to the longest arrival
-(`prefill_pad_tokens` counts what is actually dispatched).
+Admission has three layouts (DESIGN.md §5): **pad-to-longest** (the
+baseline), **length-sorted** (bursts partitioned by padded length bucket,
+each bucket prefilled at its own length), and **packed** — the burst's
+prompts concatenated into few `pack_len` rows under a block-diagonal mask
+(positions reset per segment, recurrent scans reset at segment boundaries)
+and prefilled in ONE dispatch, with a fused unpack+admit gathering each
+request's KV slice / recurrent snapshot into its row.  All three are
+token-identical per request; `prefill_pad_tokens` counts what is actually
+dispatched.
 
 Retired rows still occupy SIMD lanes until recycled (dense batched compute
 cannot drop a row), but they stop extending their caches and — the actual
@@ -59,27 +64,54 @@ import numpy as np
 from repro.core.allocation import (BudgetPlan, RecurrentTier, recurrent_tier,
                                    total_state_bytes)
 from repro.core.cache import (clear_row, clear_state_row, empty_cache,
-                              insert_rows, insert_state_rows)
+                              gather_row_segments, insert_rows,
+                              insert_state_rows)
 from repro.models.ssm import empty_decode_state
 from repro.models.transformer import n_attn_layers
 from repro.serving.decode import (DecodeState, make_tier_indices,
                                   sampled_step)
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.prefill import group_by_bucket, pad_prompts
+from repro.serving.prefill import (PrefillOut, group_by_bucket, pad_prompts,
+                                   plan_pack)
 from repro.serving.sampler import sample
 
 
 @dataclasses.dataclass(frozen=True)
 class ContinuousConfig:
-    max_concurrency: int = 8      # persistent batch rows (compiled once)
-    prompt_bucket: int = 32       # admission prefill shape quantization
-    max_prompt_len: int = 128     # admission cap (sizes full-cache arenas)
-    max_new_cap: int = 64         # per-request max_new clamp (ditto)
-    sync_every: int = 4           # decode steps fused into one block
-    # length-sorted admission: partition a burst by padded prompt bucket and
-    # prefill each bucket separately instead of padding the whole burst to
-    # its longest arrival.  Off = the pad-to-longest baseline (benchmarked).
+    """Static knobs of the persistent-arena engine (all sizes fix compiled
+    shapes — changing any of them means new executables, never a retrace of
+    an existing one).  See `docs/API.md` for the full field reference."""
+    #: persistent decode rows; the decode block is compiled once for this
+    #: batch and every request lives in one row from admission to retirement
+    max_concurrency: int = 8
+    #: admission prefill shape quantization: prompts right-pad to multiples
+    #: of this, so repeated traffic hits memoized prefill executables
+    prompt_bucket: int = 32
+    #: admission cap; together with `max_new_cap` it sizes the full-cache
+    #: arenas, so over-long prompts are rejected at submit time
+    max_prompt_len: int = 128
+    #: per-request clamp on requested max_new (arena sizing, like above)
+    max_new_cap: int = 64
+    #: decode steps fused into one dispatched block (emission-buffer depth)
+    sync_every: int = 4
+    #: length-sorted admission: partition a burst by padded prompt bucket and
+    #: prefill each bucket separately instead of padding the whole burst to
+    #: its longest arrival.  Off = the pad-to-longest baseline (benchmarked).
     length_sorted: bool = True
+    #: packed admission: concatenate a burst's prompts into few rows under a
+    #: block-diagonal mask and prefill them in ONE dispatch (DESIGN.md §5);
+    #: supersedes `length_sorted` when on.  Token-identical to the bucketed
+    #: path; recurrent families additionally require
+    #: `prompt_bucket % cfg.ssm_chunk == 0` (checked at construction).
+    packed_prefill: bool = False
+    #: packed row capacity in tokens; 0 = auto (twice the bucketed
+    #: `max_prompt_len`, so one long prompt never forces a row of its own
+    #: shape and short bursts still fill a single row)
+    pack_len: int = 0
+
+    def resolved_pack_len(self) -> int:
+        b = self.prompt_bucket
+        return self.pack_len or 2 * (-(-self.max_prompt_len // b) * b)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,6 +204,16 @@ class ContinuousEngine:
         self.cap = continuous_capability(cfg)
         if not self.cap.ok:
             raise ValueError(self.cap.reason)
+        if ccfg.packed_prefill and self.cap.n_recurrent_layers > 0 \
+                and ccfg.prompt_bucket % cfg.ssm_chunk != 0:
+            # packed segments start at prompt_bucket multiples; aligning
+            # them to the SSD chunk grid is what makes a packed segment's
+            # recurrent state BIT-identical to its solo prefill
+            raise ValueError(
+                f"packed prefill with recurrent layers requires "
+                f"prompt_bucket ({ccfg.prompt_bucket}) to be a multiple of "
+                f"ssm_chunk ({cfg.ssm_chunk}) so segment boundaries align "
+                f"with the SSD chunk grid")
         self.engine = Engine(params, cfg, ecfg)   # shared prefill/compaction
         self.params = params
         self.cfg = cfg
@@ -216,6 +258,7 @@ class ContinuousEngine:
         self._block_fns = {}     # n_steps -> compiled fused decode block
         self._clear_fn = None
         self._admit_fns = {}     # (admit batch NB, prompt bucket P) -> admit
+        self._padmit_fns = {}    # (R, pack_len, K, NR, Pout) -> unpack+admit
 
     # ------------------------------------------------------------ properties
     @property
@@ -309,41 +352,94 @@ class ContinuousEngine:
         admission — it dominated the serving trace before this was fused.)"""
         key = (NB, P)
         if key not in self._admit_fns:
-            eng, plan, sc = self.engine, self.plan, self.ecfg.sampler
-            eos = self.ecfg.eos_token
-            has_attn, has_rec = self._has_attn, self._has_rec
-
             def admit_fn(state: ContinuousState, rows, pre, rem0, akey):
-                rs = eng.build_state(pre, plan, NB)   # [L, NB, S, ...] rows
-                token0 = sample(pre.last_logits, akey, sc)       # [NB]
-                act0 = rem0 > 0
-                if eos >= 0:
-                    act0 = act0 & (token0 != eos)
-                dec = state.dec
-                upd = {
-                    "t": dec.t.at[rows].set(rs.t.astype(dec.t.dtype),
-                                            mode="drop"),
-                    "active": dec.active.at[rows].set(act0, mode="drop"),
-                }
-                if has_attn:
-                    upd["big"] = insert_rows(dec.big, rs.big, rows)
-                    upd["small"] = insert_rows(dec.small, rs.small, rows)
-                if has_rec:   # fixed-cost tier: whole-row state scatter
-                    upd["ssm_state"] = insert_state_rows(
-                        dec.ssm_state, rs.ssm_state, rows)
-                    upd["conv_state"] = insert_state_rows(
-                        dec.conv_state, rs.conv_state, rows)
-                dec = dec._replace(**upd)
-                return token0, ContinuousState(
-                    dec,
-                    state.token.at[rows].set(
-                        token0.astype(state.token.dtype), mode="drop"),
-                    state.remaining.at[rows].set(rem0, mode="drop"),
-                    state.key, state.emit_tok, state.emit_act)
+                return self._admit_apply(state, rows, pre, rem0, akey, NB)
 
             donate0 = {} if not self._donate else {"donate_argnums": (0,)}
             self._admit_fns[key] = jax.jit(admit_fn, **donate0)
         return self._admit_fns[key]
+
+    def _admit_apply(self, state: ContinuousState, rows, pre: PrefillOut,
+                     rem0, akey, NB: int):
+        """Traced tail shared by the bucketed AND packed admit executables:
+        Algorithm-1 compaction of a request-shaped `PrefillOut` into
+        row-shaped tier arenas (`Engine.build_state`), first-token sampling,
+        and the drop-sentinel `insert_rows` scatter into the persistent
+        state."""
+        eng, plan, sc = self.engine, self.plan, self.ecfg.sampler
+        eos = self.ecfg.eos_token
+        rs = eng.build_state(pre, plan, NB)       # [L, NB, S, ...] rows
+        token0 = sample(pre.last_logits, akey, sc)           # [NB]
+        act0 = rem0 > 0
+        if eos >= 0:
+            act0 = act0 & (token0 != eos)
+        dec = state.dec
+        upd = {
+            "t": dec.t.at[rows].set(rs.t.astype(dec.t.dtype), mode="drop"),
+            "active": dec.active.at[rows].set(act0, mode="drop"),
+        }
+        if self._has_attn:
+            upd["big"] = insert_rows(dec.big, rs.big, rows)
+            upd["small"] = insert_rows(dec.small, rs.small, rows)
+        if self._has_rec:    # fixed-cost tier: whole-row state scatter
+            upd["ssm_state"] = insert_state_rows(
+                dec.ssm_state, rs.ssm_state, rows)
+            upd["conv_state"] = insert_state_rows(
+                dec.conv_state, rs.conv_state, rows)
+        dec = dec._replace(**upd)
+        return token0, ContinuousState(
+            dec,
+            state.token.at[rows].set(
+                token0.astype(state.token.dtype), mode="drop"),
+            state.remaining.at[rows].set(rem0, mode="drop"),
+            state.key, state.emit_tok, state.emit_act)
+
+    def _padmit_jit(self, R: int, Ppack: int, K: int, NR: int, Pout: int):
+        """Compiled unpack+admit for one packed-layout shape: gathers each
+        request's strided slice out of the packed prefill (KV via
+        `gather_row_segments`, logits / recurrent snapshots via their
+        per-segment take positions), normalizes the H2O column sums by the
+        request's own length, and hands the resulting request-shaped
+        `PrefillOut` to the SAME `_admit_apply` tail the bucketed path
+        compiles.  Row/start/segment indices are traced, so one executable
+        per (rows, pack_len, segs, admit batch, slice len) serves every
+        packing outcome."""
+        key = (R, Ppack, K, NR, Pout)
+        if key not in self._padmit_fns:
+            has_attn, has_rec = self._has_attn, self._has_rec
+
+            def padmit(state: ContinuousState, rows, ppre, row_idx, start,
+                       seg_of, t_req, slot_len, rem0, akey):
+                last = ppre.seg_logits[row_idx, seg_of]          # [NR, V]
+                cos = ppre.cos_sims[:, row_idx]
+                k = v = cpos = scores = None
+                if has_attn:
+                    k = gather_row_segments(ppre.k, row_idx, start, Pout, 0)
+                    v = gather_row_segments(ppre.v, row_idx, start, Pout, 0)
+                    cpos = gather_row_segments(ppre.cache_pos, row_idx,
+                                               start, Pout, -1)
+                    raw = gather_row_segments(ppre.colsums, row_idx, start,
+                                              Pout, 0.0)
+                    # a request's slice may extend past its own slot into a
+                    # neighbouring segment (Pout is the burst-wide max):
+                    # those slots must read EMPTY, exactly like the bucketed
+                    # path's right padding
+                    own = jnp.arange(Pout)[None, :] < slot_len[:, None]
+                    cpos = jnp.where(own[None], cpos, -1)
+                    scores = jnp.where(
+                        own[None], raw, 0.0) / jnp.clip(
+                            t_req.astype(jnp.float32)[None, :, None], 1.0)
+                ssm = None
+                if has_rec:      # snapshots: one state per packed segment
+                    st, cv = ppre.ssm_state
+                    ssm = (st[:, row_idx, seg_of], cv[:, row_idx, seg_of])
+                pre = PrefillOut(last, cos, k, v, cpos, scores, ssm,
+                                 t_req.astype(jnp.int32))
+                return self._admit_apply(state, rows, pre, rem0, akey, NR)
+
+            donate0 = {} if not self._donate else {"donate_argnums": (0,)}
+            self._padmit_fns[key] = jax.jit(padmit, **donate0)
+        return self._padmit_fns[key]
 
     # ------------------------------------------------------------- state init
     def _init_state(self) -> ContinuousState:
@@ -407,21 +503,47 @@ class ContinuousEngine:
         return self.admit_many([(prompt, max_new)])[0]
 
     def admit_many(self, reqs: Sequence[Tuple[np.ndarray, int]]) -> List[int]:
-        """Admit up to `n_free` requests, length-sorted into prompt buckets.
+        """Admit up to `n_free` queued requests in one batched admission.
 
-        With `length_sorted` (default) the burst is partitioned by padded
-        prompt-length bucket (`group_by_bucket`) and each bucket runs one
-        batched prefill + one fused admit at ITS OWN length — a bimodal
-        burst stops padding every short prompt to the longest arrival, at
-        the cost of one extra dispatch per extra bucket present (both sides
-        of that trade are counted: `prefill_pad_tokens`,
-        `admit_dispatches`).  With it off, the whole burst pads to the
-        longest prompt in one dispatch (the PR-2 baseline).  Returns the
-        slot per request, in submission order.
+        `reqs` is ``[(prompt int32 [len], max_new), ...]``; the return is
+        the persistent row each request landed in, in submission order.
+        Callers must check `n_free` first (asserted).  Three admission
+        layouts, chosen by `ContinuousConfig`:
+
+        * **packed** (`packed_prefill=True`) — the burst's prompts are
+          concatenated into few `pack_len`-token rows under a
+          block-diagonal attention mask (positions reset per segment,
+          recurrent scans reset at segment boundaries) and prefilled in
+          ONE dispatch; a second fused executable unpacks each request's
+          KV slice / recurrent snapshot and scatters it into its row.
+          Intra-bucket padding disappears (`prefill_pad_tokens` counts
+          rows x pack length actually dispatched).
+        * **length-sorted** (default) — the burst is partitioned by padded
+          prompt-length bucket (`group_by_bucket`) and each bucket runs
+          one batched prefill + one fused admit at ITS OWN length, at the
+          cost of one extra dispatch per extra bucket present (both sides
+          of the trade are counted: `prefill_pad_tokens`,
+          `admit_dispatches`).
+        * **pad-to-longest** (`length_sorted=False`) — the whole burst
+          pads to the longest prompt in one dispatch (the PR-2 baseline).
+
+        Token-identity scope (greedy sampling, pinned by
+        `tests/test_packed_prefill.py`): the bucketed layouts match each
+        other and solo `Engine.generate` on the bucket-PADDED prompt for
+        every policy.  Packed matches them exactly for position-based
+        policies (sliding_window, streaming_llm) and for recurrent
+        families (which pack the same bucket-padded slots).  Under
+        score-based policies (h2o, sink_h2o) a packed attention-only
+        request instead matches solo generate on the UNPADDED prompt: the
+        bucketed layouts' pad *queries* inject artifact H2O mass into
+        real keys' column sums, which raw-length packing (correctly)
+        never produces.
         """
         assert reqs, "admit_many needs at least one request"
         assert len(reqs) <= len(self._free), \
             "not enough free slots — check n_free before admit_many"
+        if self.ccfg.packed_prefill:
+            return self._admit_packed(reqs)
         if self.ccfg.length_sorted and len(reqs) > 1:
             groups = group_by_bucket([len(p) for p, _ in reqs],
                                      self.ccfg.prompt_bucket)
@@ -469,7 +591,63 @@ class ContinuousEngine:
                           np.int32)
         token0, self.state = self._admit_jit(NB, P)(
             self.state, rows, pre, rem0, sub)
-        tok0 = np.asarray(token0)
+        self._register_admitted(slots, np.asarray(token0), max_news, rem0)
+        return slots
+
+    def _admit_packed(self,
+                      reqs: Sequence[Tuple[np.ndarray, int]]) -> List[int]:
+        """Packed admission: ONE packed prefill dispatch for the whole burst
+        plus ONE fused unpack+admit executable (DESIGN.md §5).
+
+        The host plans the packing (`prefill.plan_pack`): prompts become
+        segments of few `pack_len`-capacity rows, longest-first onto the
+        lightest row.  Recurrent families pack bucket-quantized slots —
+        the exact padded shape the bucketed path prefills — so segment
+        boundaries stay aligned to the SSD chunk grid and every admitted
+        state is bit-identical to its bucketed/solo counterpart;
+        attention-only families pack raw prompt lengths (no intra-bucket
+        pad tokens at all).  Returns the slot per request, in order.
+        """
+        prompts = [np.asarray(p, np.int32) for p, _ in reqs]
+        max_news = [min(mn, self.ccfg.max_new_cap) for _, mn in reqs]
+        n = len(reqs)
+        bucket = self.ccfg.prompt_bucket
+        quantum = bucket if self._has_rec else 1
+        plan = plan_pack(prompts, bucket, self.ccfg.resolved_pack_len(),
+                         quantum=quantum, max_len=self.ccfg.max_prompt_len)
+        ppre = self.engine.packed_prefill_jit(
+            plan.n_rows, plan.pack_len, plan.max_segments)(
+                self.params, plan.tokens, plan.positions, plan.valid,
+                plan.segments, plan.take_last, plan.take_state)
+        self._ensure_plan(ppre)
+        self.admit_dispatches += 1
+        self.prefill_pad_tokens += plan.packed_tokens
+        self.prompt_tokens += int(plan.lengths.sum())
+
+        self._host_key, sub = jax.random.split(self._host_key)
+        slots = [self._free.pop(0) for _ in range(n)]
+        B = self.ccfg.max_concurrency
+        NR = _pow2(n)
+        rows = np.asarray(slots + [B] * (NR - n), np.int32)   # B = drop
+        rem0 = np.asarray([mn - 1 for mn in max_news] + [0] * (NR - n),
+                          np.int32)
+        # pad requests replicate request 0's coordinates; their scatter rows
+        # carry the drop sentinel, so the duplicate gather never lands
+        def pad(a):
+            return np.concatenate([a, np.repeat(a[:1], NR - n, 0)])
+        Pout = -(-int(plan.slot_len.max()) // bucket) * bucket
+        token0, self.state = self._padmit_jit(
+            plan.n_rows, plan.pack_len, plan.max_segments, NR, Pout)(
+                self.state, rows, ppre, pad(plan.row), pad(plan.start),
+                pad(plan.seg), pad(plan.lengths), pad(plan.slot_len),
+                rem0, sub)
+        self._register_admitted(slots, np.asarray(token0), max_news, rem0)
+        return slots
+
+    def _register_admitted(self, slots: List[int], tok0: np.ndarray,
+                           max_news: Sequence[int], rem0: np.ndarray):
+        """Host bookkeeping after an admit executable: open emission
+        buffers, mark rows occupied, retire instant-EOS / max_new==1 rows."""
         eos = self.ecfg.eos_token
         for i, slot in enumerate(slots):
             t0 = int(tok0[i])
@@ -481,7 +659,6 @@ class ContinuousEngine:
             self.tokens_emitted += 1
             if not (rem0[i] > 0 and not (eos >= 0 and t0 == eos)):
                 self._retire(slot)
-        return slots
 
     # ------------------------------------------------------------ decode loop
     def decode_block(self) -> int:

@@ -39,20 +39,28 @@ from repro.models.config import ModelConfig
 from repro.models.transformer import n_attn_layers
 from repro.serving.decode import (DecodeState, make_tier_indices,
                                   sampled_step, serve_step)
-from repro.serving.prefill import prefill
+from repro.serving.prefill import packed_prefill, prefill
 from repro.serving.sampler import SamplerConfig, sample
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    mode: str = "squeeze"              # full | uniform | squeeze
+    """Budget-policy knobs shared by the one-shot `Engine` and the
+    continuous engine (field reference in `docs/API.md`)."""
+    #: "full" (no eviction) | "uniform" (same budget per layer) |
+    #: "squeeze" (the paper: Algorithm-1 layer-wise reallocation)
+    mode: str = "squeeze"
+    #: sequence-wise eviction policy (sliding_window / streaming_llm /
+    #: h2o / sink_h2o — `repro.core.policies.POLICIES`)
     policy: PolicyConfig = PolicyConfig()
     budget_frac: float = 0.4           # b_init as a fraction of prompt length
     budget_abs: int = 0                # or absolute tokens (overrides frac if >0)
     p: float = 0.35                    # Algorithm-1 squeeze factor
     bucket: int = 16                   # budget quantization (static shapes)
     min_budget: int = 16               # floor per layer (keep sinks + recents)
+    #: default decode length for `Engine.generate`
     max_new_tokens: int = 64
+    #: temperature 0 = greedy; one engine-level PRNG stream otherwise
     sampler: SamplerConfig = SamplerConfig()
     eos_token: int = -1                # >=0: stop rows at EOS (masked to eos)
     eos_check_every: int = 8           # fused decode-block length / early exit
@@ -103,6 +111,18 @@ class Engine:
             self._prefill_cache[key] = jax.jit(
                 lambda p, tok, emb, pos, val: prefill(
                     p, self.cfg, tokens=tok, embeds=emb, positions=pos, valid=val))
+        return self._prefill_cache[key]
+
+    def packed_prefill_jit(self, rows: int, pack_len: int, max_segs: int):
+        """The memoized PACKED prefill executable for one (rows, pack_len,
+        segments-per-row) shape: one dispatch prefills a whole admission
+        burst of concatenated prompts under the block-diagonal mask
+        (`serving/prefill.py:packed_prefill`, DESIGN.md §5)."""
+        key = ("packed", rows, pack_len, max_segs)
+        if key not in self._prefill_cache:
+            self._prefill_cache[key] = jax.jit(
+                lambda p, tok, pos, val, seg, tl, ts: packed_prefill(
+                    p, self.cfg, tok, pos, val, seg, tl, ts))
         return self._prefill_cache[key]
 
     def _step_fn(self, key):

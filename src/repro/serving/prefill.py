@@ -68,6 +68,117 @@ def pad_prompt(prompt: np.ndarray, bucket: int,
                        max_len=max_len)
 
 
+class PackPlan(NamedTuple):
+    """Host-side layout of one packed admission burst (DESIGN.md §5).
+
+    ``n`` requests become segments of ``n_rows`` packed rows of length
+    ``pack_len`` each (one prefill dispatch).  Per-token arrays describe the
+    packed layout; per-request arrays say where each request landed.
+    """
+    tokens: np.ndarray       # [R, P] int32 packed prompt tokens
+    valid: np.ndarray        # [R, P] bool: real prompt tokens
+    positions: np.ndarray    # [R, P] int32, reset to 0 at every segment start
+    segments: np.ndarray     # [R, P] int32, non-decreasing per row; tail pad
+                             #          gets its own id so it matches nothing
+    take_last: np.ndarray    # [R, K] int32 last VALID token per segment (-1 pad)
+    take_state: np.ndarray   # [R, K] int32 last SLOT token per segment (-1 pad)
+    row: np.ndarray          # [n] packed row of request i
+    start: np.ndarray        # [n] segment start offset of request i
+    seg: np.ndarray          # [n] segment index (into the K axis) of request i
+    lengths: np.ndarray      # [n] true prompt lengths
+    slot_len: np.ndarray     # [n] occupied slot lengths (quantum-padded)
+
+    @property
+    def n_rows(self) -> int:
+        return self.tokens.shape[0]
+
+    @property
+    def pack_len(self) -> int:
+        return self.tokens.shape[1]
+
+    @property
+    def max_segments(self) -> int:
+        return self.take_last.shape[1]
+
+    @property
+    def packed_tokens(self) -> int:
+        """Tokens the packed prefill actually processes (rows x pack_len)."""
+        return self.tokens.size
+
+
+def plan_pack(prompts: Sequence[np.ndarray], bucket: int, pack_len: int,
+              quantum: int = 1, max_len: Optional[int] = None) -> PackPlan:
+    """Greedy packing of an admission burst into few equal-length rows.
+
+    Each prompt occupies a *slot* of ``ceil(len/quantum) * quantum`` tokens
+    (``quantum=1``: the raw prompt; ``quantum=bucket``: the same padded
+    shape the bucketed path prefills, which keeps recurrent-state
+    integration bit-identical — pad tokens update the SSD state in both).
+    Slots are placed longest-first onto the currently lightest row (LPT),
+    opening rows beyond the ``ceil(total/pack_len)`` target only when a
+    slot genuinely does not fit, and the realized row length is re-quantized
+    to a ``bucket`` multiple so executables keyed on (rows, pack_len) stay
+    few.  Within a row every segment restarts positions at 0 and carries a
+    distinct, monotone segment id — the block-diagonal mask's key.
+    """
+    n = len(prompts)
+    assert n >= 1
+    lengths = np.asarray([len(p) for p in prompts], np.int64)
+    if max_len is not None and (lengths > max_len).any():
+        bad = int(lengths.max())
+        raise ValueError(f"prompt length {bad} exceeds max_prompt_len "
+                         f"{max_len}")
+    slot = ((np.maximum(lengths, 1) + quantum - 1) // quantum) * quantum
+    cap = max(pack_len, int(slot.max()))
+    target_rows = max(1, int(-(-slot.sum() // cap)))
+
+    order = np.argsort(-slot, kind="stable")
+    loads = [0] * target_rows
+    rows_of = np.zeros(n, np.int64)
+    starts = np.zeros(n, np.int64)
+    for i in order:
+        fits = [r for r in range(len(loads)) if loads[r] + slot[i] <= cap]
+        r = min(fits, key=lambda r: loads[r]) if fits else len(loads)
+        if not fits:
+            loads.append(0)
+        rows_of[i], starts[i] = r, loads[r]
+        loads[r] += int(slot[i])
+
+    R = len(loads)
+    P = int(-(-max(loads) // bucket)) * bucket
+    seg_of = np.zeros(n, np.int64)
+    counts = np.zeros(R, np.int64)
+    tokens = np.zeros((R, P), np.int32)
+    valid = np.zeros((R, P), bool)
+    positions = np.zeros((R, P), np.int32)
+    segments = np.zeros((R, P), np.int32)
+    # order segments within a row by start offset so ids are non-decreasing
+    for i in sorted(range(n), key=lambda i: (rows_of[i], starts[i])):
+        r, s, L, Ls = rows_of[i], starts[i], int(lengths[i]), int(slot[i])
+        seg_of[i] = counts[r]
+        counts[r] += 1
+        tokens[r, s:s + L] = np.asarray(prompts[i], np.int32)
+        valid[r, s:s + L] = True
+        positions[r, s:s + Ls] = np.arange(Ls)
+        segments[r, s:s + Ls] = seg_of[i]
+    for r in range(R):      # tail padding: its own id, positions reset
+        t0 = int(loads[r])
+        segments[r, t0:] = counts[r]
+        positions[r, t0:] = np.arange(P - t0)
+
+    K = int(counts.max())
+    take_last = np.full((R, K), -1, np.int32)
+    take_state = np.full((R, K), -1, np.int32)
+    for i in range(n):
+        r, j = rows_of[i], seg_of[i]
+        take_last[r, j] = starts[i] + lengths[i] - 1
+        take_state[r, j] = starts[i] + slot[i] - 1
+    return PackPlan(tokens, valid, positions, segments, take_last, take_state,
+                    rows_of.astype(np.int32), starts.astype(np.int32),
+                    seg_of.astype(np.int32), lengths.astype(np.int32),
+                    slot.astype(np.int32))
+
+
 class PrefillOut(NamedTuple):
     last_logits: jnp.ndarray          # [B, V] logits at each row's last valid token
     cos_sims: jnp.ndarray             # [n_attn_layers, B]
@@ -110,3 +221,63 @@ def prefill(
         k = v = cache_pos = scores = None
     return PrefillOut(last, out.cos_sims, k, v, cache_pos, scores,
                       out.ssm_state, t)
+
+
+class PackedPrefillOut(NamedTuple):
+    """Per-PACKED-ROW prefill outputs; request-shaped views are gathered by
+    the fused unpack+admit executable (`ContinuousEngine._padmit_jit`)."""
+    seg_logits: jnp.ndarray           # [R, K, V] logits at each segment's
+                                      #           last valid token
+    cos_sims: jnp.ndarray             # [n_layers, R] (token-avg over the ROW)
+    k: Optional[jnp.ndarray]          # [n_attn, R, P, Hkv, hd]
+    v: Optional[jnp.ndarray]
+    cache_pos: Optional[jnp.ndarray]  # [n_attn, R, P] segment-reset positions
+                                      #              (-1 on padding)
+    colsums: Optional[jnp.ndarray]    # [n_attn, R, P] RAW H2O column sums
+                                      #   (kv-head mean; per-request /t
+                                      #    normalization happens at unpack)
+    ssm_state: Optional[tuple]        # (ssm [n_ssm,R,K,H,P,N],
+                                      #  conv [n_ssm,R,K,W-1,C]) snapshots
+
+
+def packed_prefill(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,        # [R, P] packed rows (PackPlan.tokens)
+    positions: jnp.ndarray,     # [R, P] segment-reset positions
+    valid: jnp.ndarray,         # [R, P]
+    segments: jnp.ndarray,      # [R, P] segment ids
+    take_last: jnp.ndarray,     # [R, K] last valid token per segment
+    take_state: jnp.ndarray,    # [R, K] last slot token per segment
+) -> PackedPrefillOut:
+    """Prefill a whole admission burst as ONE packed dispatch.
+
+    The block-diagonal mask (`segments` through `forward`) keeps every
+    request's attention, recurrence and logits exactly what a solo prefill
+    would compute; this function additionally snapshots, per segment, the
+    last-valid-token logits and (for recurrent layers) the end-of-slot
+    SSD/conv states, so the admit executable only gathers — it never
+    recomputes.
+    """
+    R, P = tokens.shape
+    need_state = cfg.is_ssm_only or cfg.is_hybrid
+    # slot boundaries are chunk-aligned by construction (the continuous
+    # engine enforces prompt_bucket % ssm_chunk == 0 for recurrent packs),
+    # so the snapshots are the cheap bit-exact post-chunk gathers
+    out = forward(params, cfg, tokens=tokens, positions=positions,
+                  valid=valid, collect_kv=cfg.has_attention,
+                  segments=segments,
+                  state_take=take_state if need_state else None,
+                  state_take_aligned=True)
+    seg_logits = jnp.take_along_axis(
+        out.logits, jnp.maximum(take_last, 0)[..., None], axis=1)  # [R,K,V]
+    if out.kv is not None:
+        k, v = out.kv
+        n_attn = k.shape[0]
+        pos_row = jnp.where(valid, positions, -1)
+        cache_pos = jnp.broadcast_to(pos_row[None], (n_attn, R, P))
+        colsums = out.attn_scores.mean(axis=2)        # kv-head mean, raw
+    else:
+        k = v = cache_pos = colsums = None
+    return PackedPrefillOut(seg_logits, out.cos_sims, k, v, cache_pos,
+                            colsums, out.ssm_state)

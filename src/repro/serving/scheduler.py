@@ -9,8 +9,9 @@ engine core (DESIGN.md §5):
     and wholly synchronous, but every wave member pays ``max(max_new)``
     decode steps and pad rows burn compute — the paper's Table 3 batching
     model.
-  * `ContinuousScheduler` — interleaves batched, length-sorted admission
-    with fused decode blocks over the persistent arenas of
+  * `ContinuousScheduler` — interleaves batched admission (packed /
+    length-sorted / pad-to-longest, per `ContinuousConfig`) with fused
+    decode blocks over the persistent arenas of
     `ContinuousEngine` (continuous.py).  Finished rows retire on-device and
     their slots recycle immediately, so heterogeneous ``max_new`` traffic
     no longer quantizes to the slowest wave member.  Family-agnostic: SSM
@@ -157,12 +158,13 @@ class ContinuousScheduler(_RequestQueue):
         return done
 
     def poll(self) -> List[Request]:
-        """One scheduler iteration: admit → decode block → harvest."""
+        """One scheduler iteration, fixed contract (docs/API.md): harvest
+        finished rows → admit every queued arrival that fits a free row
+        (ONE `admit_many` per burst; the engine picks the packed /
+        length-sorted / padded layout) → one fused decode block → harvest
+        and return completions."""
         done = self._harvest()
         while self.queue and self.core.has_free:
-            # batched, length-sorted admission: every queued arrival that
-            # fits a free row is taken at once; the engine partitions the
-            # burst by prompt bucket, one prefill + fused admit per bucket
             take = min(len(self.queue), self.core.n_free)
             reqs, self.queue = self.queue[:take], self.queue[take:]
             slots = self.core.admit_many(

@@ -126,6 +126,29 @@ def test_swa_prefill_matches_ref(B, Hq, Hkv, S, hd, window, dtype, softcap):
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=tol)
 
 
+@pytest.mark.parametrize("window", [GLOBAL, 16])
+def test_swa_prefill_segment_mask_matches_ref(window):
+    """Packed-prefill block-diagonal masking: ragged segment boundaries
+    (not block-aligned), plus the S-padding path."""
+    B, Hq, Hkv, S, hd = 2, 4, 2, 200, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    seg = jnp.asarray(np.concatenate(
+        [np.zeros(37), np.ones(90), np.full(73, 2)])[None].repeat(
+            B, 0).astype(np.int32))
+    o1 = swa_attention(q, k, v, window=window, bq=64, bk=64, segments=seg)
+    o2 = swa_attention_ref(q, k, v, window, segments=seg)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+    # a segment's output is independent of the other segments' content
+    k2 = k.at[:, :, 37:].set(jax.random.normal(ks[1], (B, Hkv, 163, hd)) * 3)
+    v2 = v.at[:, :, 37:].set(0.5)
+    o3 = swa_attention(q, k2, v2, window=window, bq=64, bk=64, segments=seg)
+    np.testing.assert_allclose(np.asarray(o3[:, :, :37]),
+                               np.asarray(o1[:, :, :37]), atol=2e-5)
+
+
 def test_swa_matches_model_flash_path():
     """Kernel == the pure-jnp flash used by the model stack (same geometry)."""
     import repro.models.attention as A

@@ -1,0 +1,295 @@
+"""Packed prefill: block-diagonal masking + packed admission (DESIGN.md §5).
+
+The load-bearing property: admitting a burst through ONE packed prefill
+(prompts concatenated into few rows, positions reset per segment, attention
+masked block-diagonal, recurrent scans reset at segment boundaries) is
+token-identical to BOTH the PR-3 bucketed admission path and solo
+`Engine.generate` runs, across dense / ssm / hybrid families — packing is a
+layout change, not a model change.  Fast-lane units pin the pieces: the
+packing planner, the segment-masked attention, and the SSD segment
+resets/state snapshots.
+"""
+import pytest
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PolicyConfig
+from repro.models import ModelConfig, init_params
+from repro.serving import (ContinuousConfig, ContinuousEngine,
+                           ContinuousScheduler, Engine, EngineConfig,
+                           pad_prompt, plan_pack)
+
+DENSE = ModelConfig(name="s", arch_type="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                    dtype="float32", param_dtype="float32")
+HYBRID = ModelConfig(name="h", arch_type="hybrid", n_layers=4, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                     ssm_state=8, ssm_expand=2, ssm_head_dim=32, ssm_chunk=8,
+                     attn_period=2, dtype="float32", param_dtype="float32")
+SSM = ModelConfig(name="m", arch_type="ssm", n_layers=2, d_model=64,
+                  n_heads=1, n_kv_heads=1, head_dim=32, d_ff=0, vocab_size=97,
+                  ssm_state=8, ssm_expand=2, ssm_head_dim=32, ssm_chunk=8,
+                  dtype="float32", param_dtype="float32")
+
+ECFG = EngineConfig(mode="uniform", policy=PolicyConfig("sliding_window"),
+                    budget_abs=12, bucket=4, min_budget=4)
+
+
+def _ccfg(**kw):
+    base = dict(max_concurrency=3, prompt_bucket=8, max_prompt_len=24,
+                max_new_cap=8, sync_every=2, packed_prefill=True)
+    base.update(kw)
+    return ContinuousConfig(**base)
+
+
+# ------------------------------------------------------------ planner units
+@pytest.mark.fast
+def test_plan_pack_respects_capacity_and_quantum():
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 97, (n,)).astype(np.int32)
+               for n in (5, 11, 16, 3, 9, 20)]
+    plan = plan_pack(prompts, bucket=8, pack_len=32, quantum=8)
+    assert plan.pack_len <= 32 and plan.pack_len % 8 == 0
+    # slots are quantum-padded and never straddle rows
+    for i, p in enumerate(prompts):
+        slot = -(-max(len(p), 1) // 8) * 8
+        assert plan.slot_len[i] == slot
+        assert plan.start[i] + slot <= plan.pack_len
+        assert plan.start[i] % 8 == 0          # chunk-aligned segment starts
+    # per-row loads within capacity, segments monotone, tail pad distinct
+    for r in range(plan.n_rows):
+        segs = plan.segments[r]
+        assert (np.diff(segs) >= 0).all()
+    # every token of a prompt landed where the plan says, positions reset
+    for i, p in enumerate(prompts):
+        r, s = plan.row[i], plan.start[i]
+        assert (plan.tokens[r, s:s + len(p)] == p).all()
+        assert (plan.valid[r, s:s + len(p)]).all()
+        assert (plan.positions[r, s:s + plan.slot_len[i]]
+                == np.arange(plan.slot_len[i])).all()
+        assert plan.take_last[r, plan.seg[i]] == s + len(p) - 1
+        assert plan.take_state[r, plan.seg[i]] == s + plan.slot_len[i] - 1
+
+
+@pytest.mark.fast
+def test_plan_pack_overflow_opens_rows_and_degenerate_single():
+    rng = np.random.default_rng(1)
+    # total content 3 * 16 = 48 > pack_len 32: must overflow into 2+ rows
+    prompts = [rng.integers(0, 97, (16,)).astype(np.int32) for _ in range(3)]
+    plan = plan_pack(prompts, bucket=8, pack_len=32, quantum=8)
+    assert plan.n_rows == 2
+    loads = np.zeros(plan.n_rows, int)
+    for i in range(3):
+        loads[plan.row[i]] += plan.slot_len[i]
+    assert (loads <= 32).all()
+    # degenerate pack: one prompt, one row, one segment
+    single = plan_pack(prompts[:1], bucket=8, pack_len=32, quantum=8)
+    assert single.n_rows == 1 and single.max_segments == 1
+    assert single.start[0] == 0 and single.row[0] == 0
+    # a prompt longer than pack_len still packs (capacity grows to fit)
+    big = plan_pack([rng.integers(0, 97, (40,)).astype(np.int32)],
+                    bucket=8, pack_len=32, quantum=1)
+    assert big.pack_len >= 40
+
+
+@pytest.mark.fast
+def test_plan_pack_raw_quantum_has_no_intra_bucket_padding():
+    prompts = [np.arange(n, dtype=np.int32) for n in (5, 11, 16)]
+    plan = plan_pack(prompts, bucket=8, pack_len=64, quantum=1)
+    assert (plan.slot_len == np.asarray([5, 11, 16])).all()
+    assert plan.n_rows == 1
+    # valid mask covers exactly the prompt content
+    assert plan.valid.sum() == 32
+
+
+# ----------------------------------------------- segment-masked model units
+@pytest.mark.fast
+def test_full_attention_block_diagonal_matches_separate_rows():
+    """One packed row of two segments == two separate rows, bit-exact
+    (same positions, same per-token values; the mask only adds exact
+    zeros to softmax sums)."""
+    from repro.models import attention as attn_lib
+    cfg = DENSE
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    bp = jax.tree.map(lambda a: a[0], params["layers"])
+    ap = attn_lib.AttnParams(**bp["attn"])
+    rng = np.random.default_rng(2)
+    x1 = jnp.asarray(rng.standard_normal((1, 8, cfg.d_model)), jnp.float32)
+    x2 = jnp.asarray(rng.standard_normal((1, 8, cfg.d_model)), jnp.float32)
+    pos = jnp.arange(8, dtype=jnp.int32)[None]
+    o1, k1, _, c1 = attn_lib.full_attention(ap, x1, pos, cfg,
+                                            return_colsums=True)
+    o2, k2, _, c2 = attn_lib.full_attention(ap, x2, pos, cfg,
+                                            return_colsums=True)
+    xp = jnp.concatenate([x1, x2], axis=1)
+    posp = jnp.concatenate([pos, pos], axis=1)
+    seg = jnp.concatenate([jnp.zeros((1, 8), jnp.int32),
+                           jnp.ones((1, 8), jnp.int32)], axis=1)
+    op, kp, _, cp = attn_lib.full_attention(ap, xp, posp, cfg, segments=seg,
+                                            return_colsums=True)
+    np.testing.assert_array_equal(np.asarray(op[:, :8]), np.asarray(o1))
+    np.testing.assert_array_equal(np.asarray(op[:, 8:]), np.asarray(o2))
+    np.testing.assert_array_equal(np.asarray(cp[..., :8]), np.asarray(c1))
+    np.testing.assert_array_equal(np.asarray(cp[..., 8:]), np.asarray(c2))
+
+
+@pytest.mark.fast
+def test_ssd_segment_reset_and_snapshots_match_solo():
+    """Chunk-aligned packed segments: y is exact per token and the
+    snapshot at each segment's end equals the solo run's final state
+    bit-for-bit (the aligned readout reuses the scan's own chunk states)."""
+    from repro.models import ssm as ssm_lib
+    cfg = SSM
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    L = cfg.ssm_chunk
+    rng = np.random.default_rng(3)
+    lens = (8, 16, 8)          # chunk-aligned slots
+    xs, bs, cs, ds = [], [], [], []
+    for n in lens:
+        xs.append(rng.standard_normal((1, n, H, P)).astype(np.float32))
+        bs.append(rng.standard_normal((1, n, N)).astype(np.float32))
+        cs.append(rng.standard_normal((1, n, N)).astype(np.float32))
+        ds.append(rng.uniform(0.01, 0.1, (1, n, H)).astype(np.float32))
+    a_log = jnp.zeros((H,))
+    d_skip = jnp.ones((H,))
+    finals = [ssm_lib.ssd_chunked(*map(jnp.asarray, (x, b, c, d)),
+                                  a_log, d_skip, L)[1]
+              for x, b, c, d in zip(xs, bs, cs, ds)]
+    cat = lambda arrs: jnp.asarray(np.concatenate(arrs, axis=1))
+    seg = jnp.asarray(np.concatenate(
+        [np.full((1, n), i) for i, n in enumerate(lens)], axis=1), jnp.int32)
+    ends = np.cumsum(lens) - 1
+    take = jnp.asarray(ends[None], jnp.int32)
+    yp, _, snaps = ssm_lib.ssd_chunked(
+        cat(xs), cat(bs), cat(cs), cat(ds), a_log, d_skip, L,
+        segments=seg, take_pos=take)
+    for i, f in enumerate(finals):
+        np.testing.assert_array_equal(np.asarray(snaps[:, i]),
+                                      np.asarray(f))
+    # y: per-token equality vs solo runs (same chunk grid per segment)
+    off = 0
+    for i, n in enumerate(lens):
+        y_solo = ssm_lib.ssd_chunked(*map(jnp.asarray,
+                                          (xs[i], bs[i], cs[i], ds[i])),
+                                     a_log, d_skip, L)[0]
+        np.testing.assert_allclose(np.asarray(yp[:, off:off + n]),
+                                   np.asarray(y_solo), atol=1e-6)
+        off += n
+    # unused take slots read as zeros
+    take2 = jnp.asarray([[int(ends[0]), -1, -1]], jnp.int32)
+    _, _, s2 = ssm_lib.ssd_chunked(cat(xs), cat(bs), cat(cs), cat(ds),
+                                   a_log, d_skip, L, segments=seg,
+                                   take_pos=take2)
+    assert (np.asarray(s2[:, 1:]) == 0).all()
+
+
+@pytest.mark.fast
+def test_packed_recurrent_requires_chunk_aligned_bucket():
+    """The ctor refuses packed admission whose segment grid cannot align
+    with the SSD chunk grid — the config that would silently break
+    bit-identity."""
+    with pytest.raises(ValueError, match="multiple of ssm_chunk"):
+        ContinuousEngine(None, SSM, ECFG, _ccfg(prompt_bucket=12))
+
+
+# ----------------------------------------------------- system: admission
+@pytest.mark.system
+@pytest.mark.parametrize("cfg", [DENSE, SSM, HYBRID],
+                         ids=["dense", "ssm", "hybrid"])
+def test_packed_admission_token_identity(cfg):
+    """Packed admission == bucketed admission == solo generate, per
+    request, under greedy sampling.  The burst (6 requests, 3 slots)
+    overflows one pack row AND forces slot recycling; the final single
+    submission exercises the degenerate one-segment pack."""
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    specs = [(5, 4), (11, 7), (16, 8), (3, 1), (9, 6), (20, 5)]
+    prompts = [rng.integers(0, 97, (n,)).astype(np.int32) for n, _ in specs]
+
+    outs = {}
+    for name, ccfg in (("packed", _ccfg(pack_len=24)),
+                       ("bucketed", _ccfg(packed_prefill=False))):
+        sched = ContinuousScheduler(params, cfg, ECFG, ccfg)
+        rids = [sched.submit(p, max_new=mn)
+                for p, (_, mn) in zip(prompts, specs)]
+        done = {r.rid: r for r in sched.run_until_empty()}
+        # degenerate pack: one request admitted alone
+        solo_rid = sched.submit(prompts[0], max_new=4)
+        done.update({r.rid: r for r in sched.run_until_empty()})
+        outs[name] = [done[rid].tokens.tolist()
+                      for rid in rids + [solo_rid]]
+    assert outs["packed"] == outs["bucketed"]
+
+    solo = Engine(params, cfg, ECFG)
+    for i, (p, (_, mn)) in enumerate(zip(prompts, specs)):
+        toks, valid = pad_prompt(p, 8)
+        ref = solo.generate(tokens=toks, valid=valid,
+                            max_new_tokens=mn).tokens[0]
+        assert outs["packed"][i] == ref.tolist(), i
+
+
+@pytest.mark.system
+def test_packed_h2o_matches_solo_on_unpadded_prompt():
+    """Score-based policies: a packed attention-only request's H2O
+    statistics have no pad-query artifact, so it matches solo generate on
+    the UNPADDED prompt (the documented identity scope — the bucketed
+    layouts instead match the bucket-PADDED solo run)."""
+    ecfg = EngineConfig(mode="uniform", policy=PolicyConfig("h2o"),
+                        budget_abs=12, bucket=4, min_budget=4)
+    params = init_params(jax.random.PRNGKey(0), DENSE)
+    sched = ContinuousScheduler(params, DENSE, ecfg, _ccfg())
+    rng = np.random.default_rng(0)
+    specs = [(5, 4), (11, 7), (16, 8), (9, 6), (20, 5)]
+    prompts = [rng.integers(0, 97, (n,)).astype(np.int32) for n, _ in specs]
+    rids = [sched.submit(p, max_new=mn)
+            for p, (_, mn) in zip(prompts, specs)]
+    done = {r.rid: r for r in sched.run_until_empty()}
+    solo = Engine(params, DENSE, ecfg)
+    for rid, p, (_, mn) in zip(rids, prompts, specs):
+        ref = solo.generate(tokens=p[None], max_new_tokens=mn).tokens[0]
+        assert done[rid].tokens.tolist() == ref.tolist(), rid
+
+
+@pytest.mark.system
+def test_packed_admission_never_retraces():
+    """Packed admission obeys the traced-index discipline: one compiled
+    packed prefill + one compiled unpack-admit per layout shape, reused
+    across bursts that land in different slots."""
+    params = init_params(jax.random.PRNGKey(0), SSM)
+    sched = ContinuousScheduler(params, SSM, ECFG, _ccfg())
+    rng = np.random.default_rng(1)
+    for wave in range(3):                      # same lengths, rotating slots
+        for n in (5, 11, 16):
+            sched.submit(rng.integers(0, 97, (n,)), max_new=4)
+        done = sched.run_until_empty()
+        assert len(done) == 3
+    core = sched.core
+    assert all(fn._cache_size() == 1 for fn in core._padmit_fns.values())
+    assert len(core._padmit_fns) == 1          # one layout shape -> one fn
+    assert core.admit_dispatches == 3
+
+
+@pytest.mark.system
+def test_packed_prefill_counts_fewer_tokens_than_bucketed():
+    """The point of the layout: a bimodal burst prefills fewer tokens
+    packed than length-sorted, and the packed surplus over the prompt
+    content stays below one pack row."""
+    params = init_params(jax.random.PRNGKey(0), DENSE)
+    rng = np.random.default_rng(2)
+    burst = [(rng.integers(0, 97, (n,)).astype(np.int32), 2)
+             for n in (5, 7, 6, 23)]
+    pads = {}
+    for name, ccfg in (("packed", _ccfg(max_concurrency=4)),
+                       ("sorted", _ccfg(max_concurrency=4,
+                                        packed_prefill=False))):
+        eng = ContinuousEngine(params, DENSE, ECFG, ccfg)
+        eng.admit_many(burst)
+        pads[name] = (eng.prefill_pad_tokens, eng.prompt_tokens)
+    assert pads["packed"][1] == pads["sorted"][1]
+    assert pads["packed"][0] < pads["sorted"][0], pads
+    assert pads["packed"][0] - pads["packed"][1] < \
+        ContinuousConfig(prompt_bucket=8,
+                         max_prompt_len=24).resolved_pack_len()
