@@ -39,7 +39,8 @@ from benchmarks.common import row
 from repro.core import PolicyConfig
 from repro.models import ModelConfig, init_params
 from repro.serving import (ContinuousConfig, ContinuousScheduler,
-                           EngineConfig, SchedulerConfig, WaveScheduler)
+                           EngineConfig, ImageSegment, MultimodalRequest,
+                           SchedulerConfig, TextSegment, WaveScheduler)
 
 TRACE_CFG = ModelConfig(
     name="trace-4l", arch_type="dense", n_layers=4, d_model=128,
@@ -419,6 +420,156 @@ def admission_trace(quick=False, n_req=24, write_json=True):
 
 
 # --------------------------------------------------------------------------- #
+# multimodal admission: mixed text/vlm bursts through the embeds intake
+# --------------------------------------------------------------------------- #
+
+VLM_TRACE_CFG = ModelConfig(
+    name="trace-vlm-4l", arch_type="vlm", n_layers=4, d_model=128,
+    n_heads=8, n_kv_heads=4, d_ff=256, vocab_size=256,
+    mrope_sections=(4, 2, 2), frontend="vision_stub", frontend_tokens=16,
+    dtype="float32", param_dtype="float32")
+
+MM_TEXT_LENS = (8, 16, 24)          # bucket-friendly text runs
+MM_SHORT_PATCH, MM_LONG_PATCH = 8, 48
+P_IMAGE, P_LONG_IMAGE = 0.5, 0.25
+MM_BUCKET, MM_MAX_PROMPT = 16, 96
+
+
+def _mm_trace(n_req: int, seed: int = 13):
+    """Mixed text/vlm burst list: half the requests carry an image patch
+    grid (bimodal size — occasional large images) ahead of their text, the
+    rest are pure text.  The heterogeneous [frontend | text] lengths are
+    exactly the traffic where padded admission pays the large image's
+    prefill FLOPs for every short neighbour."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_req):
+        nt = int(rng.choice(MM_TEXT_LENS))
+        text = TextSegment(rng.integers(
+            0, VLM_TRACE_CFG.vocab_size, (nt,)).astype(np.int32))
+        max_new = int(rng.integers(3, 7))
+        if rng.random() < P_IMAGE:
+            n_p = MM_LONG_PATCH if rng.random() < P_LONG_IMAGE \
+                else MM_SHORT_PATCH
+            segs = (ImageSegment(n_p), text)
+        else:
+            segs = (text,)
+        out.append(MultimodalRequest(segs, max_new=max_new, seed=1000 + i))
+    return out
+
+
+def _mm_sched(params, ecfg, layout):
+    return ContinuousScheduler(params, VLM_TRACE_CFG, ecfg, ContinuousConfig(
+        max_concurrency=8, prompt_bucket=MM_BUCKET,
+        max_prompt_len=MM_MAX_PROMPT, max_new_cap=8, sync_every=SYNC_EVERY,
+        **ADMISSION_LAYOUTS[layout]))
+
+
+def multimodal_trace(quick=False, n_req=24, write_json=True):
+    """Mixed text/vlm bursts through the three admission layouts — the
+    embeds-native intake end to end (DESIGN.md §5).
+
+    Deterministic (counter-based): every request decodes the same tokens
+    under every layout, so the asserted quantities are pure layout
+    accounting:
+      * sorted prefills strictly fewer padded tokens than padded, packed
+        strictly fewer than sorted (the mixed burst is partitioned by
+        modality, so packed pays at most one pack-row surplus per
+        modality per poll);
+      * packed's PURE padding surplus is <= 25% of the naive baseline's
+        (same bound the token-only admission trace gates);
+      * the packed unpack stays COPY-FREE: `admit_kv_copy_elems == 0`
+        proves the direct packed->arena scatter never staged a
+        request-shaped KV intermediate;
+      * frontend encoding amortizes: fewer intake dispatches than encoded
+        segments (bucketed batch encoding).
+    """
+    del quick     # one deterministic pass; nothing timing-sensitive here
+    params = init_params(jax.random.PRNGKey(0), VLM_TRACE_CFG)
+    ecfg = EngineConfig(mode="uniform",
+                        policy=PolicyConfig("sliding_window"),
+                        budget_abs=MM_BUCKET, bucket=4, min_budget=4)
+    trace = _mm_trace(n_req)
+
+    ms, outs = {}, {}
+    for name in ADMISSION_LAYOUTS:
+        sched = _mm_sched(params, ecfg, name)
+        t0 = time.perf_counter()
+        rids = [sched.submit_multimodal(r) for r in trace]
+        done = {r.rid: r for r in sched.run_until_empty()}
+        wall = time.perf_counter() - t0
+        assert len(done) == n_req
+        outs[name] = [done[rid].tokens.tolist() for rid in rids]
+        core, enc = sched.core, sched.intake
+        ms[name] = {
+            "wall_s": round(wall, 4),
+            "prefill_pad_tokens": core.prefill_pad_tokens,
+            "prompt_tokens": core.prompt_tokens,
+            "admit_dispatches": core.admit_dispatches,
+            "admitted": core.admitted,
+            "admit_kv_copy_elems": core.admit_kv_copy_elems,
+            "encode_dispatches": enc.encode_dispatches,
+            "encoded_segments": enc.encoded_segments,
+            "frontend_tokens_encoded": enc.frontend_tokens_encoded,
+        }
+    # identical tokens under every layout: the intake's keyed encoding and
+    # the layouts' identity scope make admission a pure scheduling choice
+    assert outs["padded"] == outs["sorted"] == outs["packed"]
+    pm, sm, km = ms["padded"], ms["sorted"], ms["packed"]
+    assert sm["prefill_pad_tokens"] < pm["prefill_pad_tokens"], (sm, pm)
+    assert km["prefill_pad_tokens"] < sm["prefill_pad_tokens"], (km, sm)
+    assert sm["prompt_tokens"] == pm["prompt_tokens"] == km["prompt_tokens"]
+    surplus = {n: m["prefill_pad_tokens"] - m["prompt_tokens"]
+               for n, m in ms.items()}
+    assert surplus["packed"] <= PACKED_SURPLUS_MAX * surplus["padded"], \
+        surplus
+    assert km["admit_kv_copy_elems"] == 0, km     # direct scatter, no copy
+    for m in ms.values():                         # bucketed encoding pays off
+        # strict amortization needs enough traffic for buckets to repeat;
+        # the tiny smoke trace only proves dispatches never exceed segments
+        if n_req >= 12:
+            assert m["encode_dispatches"] < m["encoded_segments"], m
+        assert m["encode_dispatches"] <= m["encoded_segments"], m
+
+    record = {
+        "bench": "admission_multimodal",
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "n_req": n_req,
+        "text_lens": list(MM_TEXT_LENS),
+        "patches": {"short": MM_SHORT_PATCH, "long": MM_LONG_PATCH,
+                    "p_image": P_IMAGE, "p_long": P_LONG_IMAGE},
+        "padded": pm, "sorted": sm, "packed": km,
+        "packed_token_ratio": round(
+            km["prefill_pad_tokens"] / max(pm["prefill_pad_tokens"], 1), 3),
+        "packed_pad_surplus_ratio": round(
+            surplus["packed"] / max(surplus["padded"], 1), 3),
+    }
+    if write_json:
+        _append_json(record)
+
+    return [
+        row(f"admission_mm_{n}", ms[n]["wall_s"] * 1e6,
+            f"prefill_pad_tokens={ms[n]['prefill_pad_tokens']};"
+            f"prompt_tokens={ms[n]['prompt_tokens']};"
+            f"encode_dispatches={ms[n]['encode_dispatches']}/"
+            f"{ms[n]['encoded_segments']}seg;"
+            f"kv_copy_elems={ms[n]['admit_kv_copy_elems']}")
+        for n in ADMISSION_LAYOUTS
+    ] + [
+        row("admission_mm_savings", 0.0,
+            f"pad_tokens={pm['prefill_pad_tokens']}->"
+            f"{sm['prefill_pad_tokens']}(sorted)->"
+            f"{km['prefill_pad_tokens']}(packed,"
+            f"{record['packed_token_ratio']:.2f}x);"
+            f"surplus={surplus['padded']}->{surplus['sorted']}->"
+            f"{surplus['packed']}"
+            f"({record['packed_pad_surplus_ratio']:.2f}x);"
+            f"n_req={n_req};p_image={P_IMAGE}"),
+    ]
+
+
+# --------------------------------------------------------------------------- #
 # CI smoke + bench-regression gate
 # --------------------------------------------------------------------------- #
 
@@ -508,18 +659,23 @@ def _admission_smoke():
 
 def smoke():
     """CI smoke + regression gate: prove the fused decode block, batched
-    admission and length-sorted admission compile and run, and that the
-    dispatch counters / wall-clock ratio have not regressed >20% against
-    the last `BENCH_serving.json` entry.  Tiny trace, no JSON write."""
+    admission, length-sorted admission and the multimodal intake compile
+    and run, and that the dispatch counters / wall-clock ratio have not
+    regressed >20% against the last `BENCH_serving.json` entry.  Tiny
+    trace, no JSON write."""
     rows_, record = _serving_trace(quick=True, n_req=8, write_json=False)
     for r in rows_:
         print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
     _regression_gate(record)
     _admission_smoke()
+    # tiny mixed text/vlm trace: layout ordering, packed surplus bound,
+    # copy-free direct scatter — all counter asserts, no timing
+    for r in multimodal_trace(n_req=6, write_json=False):
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
     print("serving_bench smoke OK")
 
 
-ALL = [serving_trace, admission_trace]
+ALL = [serving_trace, admission_trace, multimodal_trace]
 
 
 if __name__ == "__main__":
@@ -534,5 +690,6 @@ if __name__ == "__main__":
         smoke()
     else:
         for r in serving_trace(quick=args.quick, policy=args.policy) \
-                + admission_trace(quick=args.quick):
+                + admission_trace(quick=args.quick) \
+                + multimodal_trace(quick=args.quick):
             print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")

@@ -41,5 +41,8 @@ def reduce_for_smoke(cfg: ModelConfig, **overrides) -> ModelConfig:
     if cfg.mrope_sections is not None:
         hd = upd["head_dim"]
         upd.update(mrope_sections=(hd // 2 - 2 * (hd // 8), hd // 8, hd // 8))
+    if cfg.frontend_tokens:
+        # keep the embeds-native admission path exercised, at smoke scale
+        upd.update(frontend_tokens=min(cfg.frontend_tokens, 8))
     upd.update(name=cfg.name + "-smoke", **overrides)
     return dataclasses.replace(cfg, **upd)

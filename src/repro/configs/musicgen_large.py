@@ -18,7 +18,10 @@ def config() -> ModelConfig:
         n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
         d_ff=8192, vocab_size=2048,
         norm_type="layernorm", mlp_type="gelu",
-        frontend="audio_stub",
+        # requests arrive as precomputed codec-frame embeddings; 50 frames
+        # = one second of EnCodec conditioning at 50 Hz (admitted through
+        # the embeds-native intake, serving/intake.py)
+        frontend="audio_stub", frontend_tokens=50,
     )
 
 

@@ -17,7 +17,10 @@ def config() -> ModelConfig:
         n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
         d_ff=18_944, vocab_size=152_064,
         mrope_sections=(16, 24, 24), rope_theta=1_000_000.0,
-        frontend="vision_stub",
+        # requests arrive as precomputed patch embeddings; 64 patches is the
+        # spec's nominal per-image budget (continuous serving admits them
+        # through the embeds-native intake, serving/intake.py)
+        frontend="vision_stub", frontend_tokens=64,
     )
 
 

@@ -25,16 +25,58 @@ from repro import checkpoint as ckpt
 from repro.configs import get_config, get_reduced
 from repro.core import POLICIES, PolicyConfig
 from repro.models import init_params
-from repro.serving import (ContinuousConfig, ContinuousScheduler, Engine,
-                           EngineConfig, SamplerConfig)
+from repro.serving import (AudioSegment, ContinuousConfig,
+                           ContinuousScheduler, Engine, EngineConfig,
+                           ImageSegment, IntakeEncoder, MultimodalRequest,
+                           SamplerConfig, TextSegment)
+
+
+def _frontend_kind(cfg, args):
+    """Resolve --frontend: 'auto' follows the config, 'none' forces token
+    prompts, explicit kinds must match what the config can encode."""
+    from repro.models.frontend import STUB_FRONTENDS
+    if args.frontend == "none":
+        return None
+    auto = STUB_FRONTENDS.get(cfg.frontend)
+    if args.frontend == "auto":
+        return auto
+    if args.frontend != auto:
+        raise SystemExit(f"--frontend {args.frontend} needs a config with "
+                         f"the matching stub frontend (got "
+                         f"{cfg.frontend or 'none'})")
+    return args.frontend
+
+
+def _frontend_segment(kind, args):
+    return ImageSegment(args.n_patches) if kind == "image" \
+        else AudioSegment(args.n_frames)
 
 
 def _run_oneshot(params, cfg, ecfg, args):
     eng = Engine(params, cfg, ecfg)
     rng = np.random.default_rng(args.seed)
-    prompt = rng.integers(0, cfg.vocab_size,
-                          (args.batch, args.prompt_len)).astype(np.int32)
-    r = eng.generate(tokens=prompt, seed=args.seed)
+    kind = _frontend_kind(cfg, args)
+    if kind is not None:
+        # frontend families: the batch arrives as precomputed embeddings
+        # ([frontend | text] per request, encoded through the intake)
+        n_front = args.n_patches if kind == "image" else args.n_frames
+        n_text = max(args.prompt_len - n_front, 1)
+        intake = IntakeEncoder(params, cfg)
+        reqs = [MultimodalRequest(
+            (_frontend_segment(kind, args),
+             TextSegment(rng.integers(0, cfg.vocab_size,
+                                      (n_text,)).astype(np.int32))),
+            max_new=args.max_new, seed=args.seed + b)
+            for b in range(args.batch)]
+        embeds = np.stack(intake.encode_burst(reqs))
+        print(f"intake: {intake.encode_dispatches} encoder dispatch(es) for "
+              f"{intake.encoded_segments} segments "
+              f"({intake.frontend_tokens_encoded} frontend tokens)")
+        r = eng.generate(embeds=embeds, seed=args.seed)
+    else:
+        prompt = rng.integers(0, cfg.vocab_size,
+                              (args.batch, args.prompt_len)).astype(np.int32)
+        r = eng.generate(tokens=prompt, seed=args.seed)
     print(f"mode={args.mode} policy={args.policy}")
     if cfg.has_attention:
         print(f"plan: {r.plan.n_big}x{r.plan.b_big} + "
@@ -64,13 +106,29 @@ def _run_continuous(params, cfg, ecfg, args):
     sched = ContinuousScheduler(params, cfg, ecfg, ccfg, seed=args.seed)
     print(f"capability: {sched.capability.describe()}")
     rng = np.random.default_rng(args.seed)
+    kind = _frontend_kind(cfg, args)
+    n_front = 0 if kind is None else \
+        (args.n_patches if kind == "image" else args.n_frames)
+    if n_front >= args.prompt_len:
+        raise SystemExit(f"--n-patches/--n-frames ({n_front}) must leave "
+                         f"room for text below --prompt-len "
+                         f"({args.prompt_len})")
     t0 = time.perf_counter()
     for i in range(args.batch):
-        plen = int(rng.integers(max(4, args.prompt_len // 2),
-                                args.prompt_len + 1))
+        lo = max(4, (args.prompt_len - n_front) // 2)
+        plen = int(rng.integers(min(lo, args.prompt_len - n_front),
+                                args.prompt_len - n_front + 1))
         max_new = int(rng.integers(max(2, args.max_new // 4),
                                    args.max_new + 1))
-        sched.submit(rng.integers(0, cfg.vocab_size, (plen,)), max_new)
+        text = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
+        if kind is not None and (i % 2 == 0 or args.batch == 1):
+            # frontend traffic; odd arrivals stay token prompts so the
+            # admission polls see mixed text+multimodal bursts
+            sched.submit_multimodal(MultimodalRequest(
+                (_frontend_segment(kind, args), TextSegment(text)),
+                max_new=max_new, seed=args.seed + i))
+        else:
+            sched.submit(text, max_new)
     n_tok = 0
     while sched.queue or sched.core.n_occupied:
         for r in sched.poll():     # stream completions as they finish
@@ -102,6 +160,12 @@ def _run_continuous(params, cfg, ecfg, args):
           f"prefill pad tokens {core.prefill_pad_tokens} for "
           f"{core.prompt_tokens} prompt tokens"
           f" (admission={layout})")
+    enc = sched.intake
+    if enc.encode_dispatches:
+        print(f"intake: {enc.encode_dispatches} encoder dispatch(es) for "
+              f"{enc.encoded_segments} segments "
+              f"({enc.frontend_tokens_encoded} frontend tokens); "
+              f"kv unpack copies {core.admit_kv_copy_elems} elems")
 
 
 def main():
@@ -129,6 +193,16 @@ def main():
     ap.add_argument("--flash-decode", action="store_true",
                     help="route decode attention through the Pallas "
                          "flash-decode kernel (interpret mode off-TPU)")
+    ap.add_argument("--frontend", default="auto",
+                    choices=["auto", "none", "image", "audio"],
+                    help="multimodal intake: 'auto' follows the config's "
+                         "stub frontend (vlm -> image patches, audio -> "
+                         "codec frames), 'none' forces token prompts")
+    ap.add_argument("--n-patches", type=int, default=16,
+                    help="patch-grid size per image request "
+                         "(vision frontend)")
+    ap.add_argument("--n-frames", type=int, default=16,
+                    help="codec frames per audio request (audio frontend)")
     ap.add_argument("--budget-frac", type=float, default=0.4)
     ap.add_argument("--p", type=float, default=0.35)
     ap.add_argument("--batch", type=int, default=2)

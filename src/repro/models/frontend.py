@@ -6,21 +6,35 @@ EnCodec) are out of scope.  These helpers produce the precomputed patch/frame
 embeddings of the right shape (and, for Qwen2-VL, the 3-D M-RoPE position
 ids) that the real frontends would emit, so the decoder stack and the serving
 engine exercise the exact interfaces a full system would.
+
+Two encoder surfaces exist:
+
+  * the original batch-key helpers (`vision_stub_embeds` /
+    `audio_stub_embeds`): one PRNG key for a whole ``[B, n, d]`` batch —
+    fine for smoke tests that fabricate one batch and keep it;
+  * the *keyed* variants (`vision_stub_embeds_keyed` /
+    `audio_stub_embeds_keyed`): one key PER ROW, vmapped, so row ``i``
+    depends only on ``keys[i]``.  That batch-invariance is what lets the
+    request-intake subsystem (`serving/intake.py`) encode a whole burst
+    bucket in one dispatch while each request's embeddings stay identical
+    to a solo encode — the property the vlm/audio token-identity tests
+    pin continuous serving against.
+
+``STUB_FRONTENDS`` is the registry the capability report and the intake
+validate `ModelConfig.frontend` against.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+#: frontend name (ModelConfig.frontend) -> the segment kind it encodes
+STUB_FRONTENDS = {"vision_stub": "image", "audio_stub": "audio"}
 
-def vision_stub_embeds(key, batch: int, n_patches: int, cfg, grid_hw=None):
-    """[B, n_patches, d] patch embeddings + [B, n_patches, 3] M-RoPE ids.
 
-    Position ids follow Qwen2-VL's scheme: temporal id constant per image,
-    height/width ids laid out over the patch grid.
-    """
-    d = cfg.d_model
-    embeds = jax.random.normal(key, (batch, n_patches, d), jnp.float32) * 0.02
+def _mrope_grid(n_patches: int, grid_hw=None):
+    """Qwen2-VL M-RoPE ids over a patch grid: temporal id constant,
+    height/width ids laid out over ``grid_hw``.  Returns [n_patches, 3]."""
     if grid_hw is None:
         side = max(int(n_patches ** 0.5), 1)
         grid_hw = (side, max(n_patches // side, 1))
@@ -33,9 +47,36 @@ def vision_stub_embeds(key, batch: int, n_patches: int, cfg, grid_hw=None):
         ids_h = jnp.concatenate([ids_h, jnp.zeros((pad,), ids_h.dtype)])
         ids_w = jnp.concatenate([ids_w, jnp.zeros((pad,), ids_w.dtype)])
     t = jnp.zeros((n_patches,), jnp.int32)
-    pos3 = jnp.stack([t, ids_h.astype(jnp.int32), ids_w.astype(jnp.int32)], axis=-1)
-    pos3 = jnp.broadcast_to(pos3[None], (batch, n_patches, 3))
+    return jnp.stack([t, ids_h.astype(jnp.int32), ids_w.astype(jnp.int32)],
+                     axis=-1)
+
+
+def vision_stub_embeds(key, batch: int, n_patches: int, cfg, grid_hw=None):
+    """[B, n_patches, d] patch embeddings + [B, n_patches, 3] M-RoPE ids.
+
+    Position ids follow Qwen2-VL's scheme: temporal id constant per image,
+    height/width ids laid out over the patch grid.
+    """
+    d = cfg.d_model
+    embeds = jax.random.normal(key, (batch, n_patches, d), jnp.float32) * 0.02
+    pos3 = jnp.broadcast_to(_mrope_grid(n_patches, grid_hw)[None],
+                            (batch, n_patches, 3))
     return embeds.astype(jnp.dtype(cfg.dtype)), pos3
+
+
+def vision_stub_embeds_keyed(keys, n_patches: int, cfg, grid_hw=None):
+    """Per-row-keyed `vision_stub_embeds`: ``keys [B]`` -> [B, n_patches, d]
+    float32 embeddings (+ broadcast M-RoPE ids) where row ``i`` is a pure
+    function of ``keys[i]`` — batching never changes a request's values."""
+    d = cfg.d_model
+
+    def one(k):
+        return jax.random.normal(k, (n_patches, d), jnp.float32) * 0.02
+
+    embeds = jax.vmap(one)(keys)
+    pos3 = jnp.broadcast_to(_mrope_grid(n_patches, grid_hw)[None],
+                            (keys.shape[0], n_patches, 3))
+    return embeds, pos3
 
 
 def audio_stub_embeds(key, batch: int, n_frames: int, cfg):
@@ -45,7 +86,26 @@ def audio_stub_embeds(key, batch: int, n_frames: int, cfg):
     return e.astype(jnp.dtype(cfg.dtype))
 
 
+def audio_stub_embeds_keyed(keys, n_frames: int, cfg):
+    """Per-row-keyed `audio_stub_embeds`: row ``i`` depends only on
+    ``keys[i]`` (see `vision_stub_embeds_keyed`)."""
+    d = cfg.d_model
+
+    def one(k):
+        return jax.random.normal(k, (n_frames, d), jnp.float32) * 0.02
+
+    return jax.vmap(one)(keys)
+
+
 def mixed_positions(batch: int, n_frontend: int, n_text: int):
-    """Concatenated [frontend tokens | text tokens] 1-D positions."""
+    """Concatenated [frontend tokens | text tokens] 1-D positions.
+
+    This is the position scheme the intake's embeds-carrying requests use
+    end to end: one sequential index over the mixed sequence (M-RoPE
+    models see it as the degenerate t=h=w triple via `_project_qkv`'s
+    repeat), which is exactly what the decode step's scalar ``t`` extends
+    — so cache positions, eviction windows and RoPE agree between the
+    frontend span and the generated tail.
+    """
     pos = jnp.arange(n_frontend + n_text, dtype=jnp.int32)
     return jnp.broadcast_to(pos[None], (batch, n_frontend + n_text))

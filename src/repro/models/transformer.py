@@ -134,14 +134,23 @@ def _cos_sim(a, b, valid):
     return (cs * w).sum(-1) / jnp.clip(w.sum(-1), 1.0)
 
 
+def embed_tokens(params, cfg, tokens):
+    """Token ids -> decoder input embeddings: table lookup + gemma-style
+    sqrt(d) scaling, cast to the model dtype.  THE definition of what a
+    token prompt feeds the stack — the decode step and the multimodal
+    intake's text segments (`serving/intake.py`) call this too, so an
+    embeds-carrying text request is bit-identical to the token path.
+    (The sqrt(d) scaling keeps residual magnitudes sane for random-init
+    studies; harmless otherwise.)"""
+    x = params["embed"][tokens]
+    return (x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)).astype(
+        jnp.dtype(cfg.dtype))
+
+
 def _embed(params, cfg, tokens, embeds):
     if embeds is not None:
         return embeds.astype(jnp.dtype(cfg.dtype))
-    x = params["embed"][tokens]
-    # gemma-style sqrt(d) embedding scaling keeps residual magnitudes sane for
-    # random-init studies; harmless otherwise.
-    x = (x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)).astype(jnp.dtype(cfg.dtype))
-    return hint(x, {0: "batch"})
+    return hint(embed_tokens(params, cfg, tokens), {0: "batch"})
 
 
 def forward(

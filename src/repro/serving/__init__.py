@@ -3,9 +3,12 @@ from repro.serving.continuous import (Capability, Completed, ContinuousConfig,
                                       continuous_capability)
 from repro.serving.decode import DecodeState, make_tier_indices, serve_step
 from repro.serving.engine import Engine, EngineConfig, GenerationResult
+from repro.serving.intake import (AudioSegment, ImageSegment, IntakeEncoder,
+                                  MultimodalRequest, TextSegment)
 from repro.serving.prefill import (PackedPrefillOut, PackPlan, PrefillOut,
-                                   packed_prefill, pad_prompt, pad_prompts,
-                                   plan_pack, prefill)
+                                   pack_embeds, packed_prefill, pad_embeds,
+                                   pad_prompt, pad_prompts, plan_pack,
+                                   plan_pack_lengths, prefill)
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.scheduler import (ContinuousScheduler, Request,
                                      SchedulerConfig, WaveScheduler)
@@ -13,10 +16,13 @@ from repro.serving.scheduler import (ContinuousScheduler, Request,
 __all__ = [
     "DecodeState", "make_tier_indices", "serve_step",
     "Engine", "EngineConfig", "GenerationResult",
-    "PrefillOut", "prefill", "pad_prompt", "pad_prompts",
+    "PrefillOut", "prefill", "pad_prompt", "pad_prompts", "pad_embeds",
     "PackPlan", "PackedPrefillOut", "packed_prefill", "plan_pack",
+    "plan_pack_lengths", "pack_embeds",
     "SamplerConfig", "sample",
     "Capability", "continuous_capability",
     "Completed", "ContinuousConfig", "ContinuousEngine", "ContinuousState",
     "ContinuousScheduler", "Request", "SchedulerConfig", "WaveScheduler",
+    "IntakeEncoder", "MultimodalRequest",
+    "TextSegment", "ImageSegment", "AudioSegment",
 ]

@@ -42,10 +42,19 @@ baseline), **length-sorted** (bursts partitioned by padded length bucket,
 each bucket prefilled at its own length), and **packed** — the burst's
 prompts concatenated into few `pack_len` rows under a block-diagonal mask
 (positions reset per segment, recurrent scans reset at segment boundaries)
-and prefilled in ONE dispatch, with a fused unpack+admit gathering each
-request's KV slice / recurrent snapshot into its row.  All three are
-token-identical per request; `prefill_pad_tokens` counts what is actually
-dispatched.
+and prefilled in ONE dispatch, with a fused unpack+admit compacting each
+request's KV straight from the packed layout into its row (no
+request-shaped intermediate).  All three are token-identical per request
+given a layout-independent tier plan (see `admit_many` for the exact
+scope); `prefill_pad_tokens` counts what is actually dispatched.
+
+Admission is also **modality-agnostic**: a request is either a 1-D token
+prompt or a 2-D ``[len, d]`` embedding sequence produced by the multimodal
+intake (`serving/intake.py` — vision patch grids, audio frames, interleaved
+text).  Embeds bursts run the same three layouts through embeds-mode
+prefill executables and the very same fused admit executables, so vlm and
+audio families are first-class continuous-batching citizens
+(`continuous_capability` reports every config family admissible).
 
 Retired rows still occupy SIMD lanes until recycled (dense batched compute
 cannot drop a row), but they stop extending their caches and — the actual
@@ -63,16 +72,19 @@ import numpy as np
 
 from repro.core.allocation import (BudgetPlan, RecurrentTier, recurrent_tier,
                                    total_state_bytes)
-from repro.core.cache import (clear_row, clear_state_row, empty_cache,
-                              gather_row_segments, insert_rows,
-                              insert_state_rows)
+from repro.core.cache import (SlotCache, clear_row, clear_state_row,
+                              empty_cache, gather_row_segments, insert_rows,
+                              insert_state_rows, pad_cache)
+from repro.core.policies import keep_priority
+from repro.models.frontend import STUB_FRONTENDS
 from repro.models.ssm import empty_decode_state
 from repro.models.transformer import n_attn_layers
 from repro.serving.decode import (DecodeState, make_tier_indices,
                                   sampled_step)
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.prefill import (PrefillOut, group_by_bucket, pad_prompts,
-                                   plan_pack)
+from repro.serving.prefill import (PrefillOut, group_by_bucket, pack_embeds,
+                                   pad_embeds, pad_prompts, plan_pack,
+                                   plan_pack_lengths)
 from repro.serving.sampler import sample
 
 
@@ -119,7 +131,9 @@ class Capability:
     """Config-driven report of what the continuous engine does with a model.
 
     Every architecture family in `configs/` maps onto the persistent-arena
-    core; `ok=False` carries the one precise reason a config cannot admit
+    core — token prompts for text decoders, embeds-carrying requests
+    (`serving/intake.py`) for frontend families — and `ok=False` carries
+    the one precise reason a config cannot admit
     (`ContinuousEngine.__init__` raises it verbatim).
     """
     family: str                # dense | moe | vlm | audio | ssm | hybrid
@@ -128,11 +142,20 @@ class Capability:
     n_attn_layers: int         # layers under Algorithm-1 budget tiers
     n_recurrent_layers: int    # layers in the fixed-cost recurrent tier
     recurrent: RecurrentTier   # per-row fixed state cost of those layers
+    frontend: Optional[str] = None   # stub frontend the intake encodes with
+    frontend_tokens: int = 0         # spec patch/frame budget per request
 
     @property
     def budgeted(self) -> bool:
         """Algorithm 1 has something to reallocate (attention layers exist)."""
         return self.n_attn_layers > 0
+
+    @property
+    def embeds_native(self) -> bool:
+        """Requests arrive as precomputed frontend embeddings — admitted
+        through the intake's embeds paths (`IntakeEncoder` ->
+        `admit_many`), not refused."""
+        return self.frontend is not None
 
     def describe(self) -> str:
         if not self.ok:
@@ -144,6 +167,9 @@ class Capability:
         if self.n_recurrent_layers:
             parts.append(f"{self.n_recurrent_layers} fixed-cost recurrent "
                          f"layer(s)")
+        if self.embeds_native:
+            parts.append(f"embeds-native intake ({self.frontend}, "
+                         f"~{self.frontend_tokens} frontend tokens/request)")
         return f"{self.family}: " + " + ".join(parts)
 
 
@@ -151,19 +177,22 @@ def continuous_capability(cfg) -> Capability:
     """What the continuous engine can do with `cfg`, decided from config
     alone (no params, no tracing).  Single source of truth for the
     admission-time check — tests sweep every family in `configs/` through
-    this and assert admit-or-precise-error."""
+    this and assert admit-or-precise-error.  Frontend families (vlm/audio)
+    admit through the embeds-native intake (`serving/intake.py`); the only
+    refusal left is a frontend name no intake encoder exists for."""
     rec = cfg.n_layers if (cfg.is_ssm_only or cfg.is_hybrid) else 0
     ok, reason = True, ""
-    if cfg.frontend_tokens > 0:
+    if cfg.frontend is not None and cfg.frontend not in STUB_FRONTENDS:
         ok = False
-        reason = (f"admission prefills token prompts only, but "
-                  f"{cfg.name!r} requires {cfg.frontend_tokens} precomputed "
-                  f"{cfg.frontend or 'frontend'} embeddings per request; "
-                  f"feed embeds through the one-shot Engine.generate instead")
+        reason = (f"{cfg.name!r} declares frontend {cfg.frontend!r}, which "
+                  f"no intake encoder exists for (known: "
+                  f"{', '.join(STUB_FRONTENDS)})")
     return Capability(family=cfg.arch_type, ok=ok, reason=reason,
                       n_attn_layers=n_attn_layers(cfg),
                       n_recurrent_layers=rec,
-                      recurrent=recurrent_tier(cfg))
+                      recurrent=recurrent_tier(cfg),
+                      frontend=cfg.frontend if ok else None,
+                      frontend_tokens=cfg.frontend_tokens)
 
 
 class ContinuousState(NamedTuple):
@@ -247,6 +276,12 @@ class ContinuousEngine:
         # prompt tokens = what the requests actually contained
         self.prefill_pad_tokens = 0
         self.prompt_tokens = 0
+        # KV elements staged through a REQUEST-SHAPED intermediate during
+        # packed admission — the copy the direct packed->arena scatter
+        # skips (DESIGN.md §5).  Stays 0 unless a tier's budget exceeds
+        # the gathered slice (nothing to evict: the full slice is staged
+        # and padded); asserted by benchmarks/serving_bench.py
+        self.admit_kv_copy_elems = 0
         # distinct streams: admission first-token sampling (host side) vs
         # the decode loop's per-step sampling key carried in the state —
         # reusing one key would draw correlated samples on both sides
@@ -361,15 +396,20 @@ class ContinuousEngine:
 
     def _admit_apply(self, state: ContinuousState, rows, pre: PrefillOut,
                      rem0, akey, NB: int):
+        """Traced tail of the bucketed admit executables: Algorithm-1
+        compaction of a request-shaped `PrefillOut` into row-shaped tier
+        arenas (`Engine.build_state`), then the shared `_apply_rows`
+        sampling + scatter."""
+        rs = self.engine.build_state(pre, self.plan, NB)  # [L, NB, S, ...]
+        return self._apply_rows(state, rows, rs, pre.last_logits, rem0, akey)
+
+    def _apply_rows(self, state: ContinuousState, rows, rs: DecodeState,
+                    last_logits, rem0, akey):
         """Traced tail shared by the bucketed AND packed admit executables:
-        Algorithm-1 compaction of a request-shaped `PrefillOut` into
-        row-shaped tier arenas (`Engine.build_state`), first-token sampling,
-        and the drop-sentinel `insert_rows` scatter into the persistent
-        state."""
-        eng, plan, sc = self.engine, self.plan, self.ecfg.sampler
-        eos = self.ecfg.eos_token
-        rs = eng.build_state(pre, plan, NB)       # [L, NB, S, ...] rows
-        token0 = sample(pre.last_logits, akey, sc)           # [NB]
+        first-token sampling and the drop-sentinel `insert_rows` scatter of
+        pre-built row-shaped tier arenas into the persistent state."""
+        sc, eos = self.ecfg.sampler, self.ecfg.eos_token
+        token0 = sample(last_logits, akey, sc)               # [NB]
         act0 = rem0 > 0
         if eos >= 0:
             act0 = act0 & (token0 != eos)
@@ -394,16 +434,71 @@ class ContinuousEngine:
             state.remaining.at[rows].set(rem0, mode="drop"),
             state.key, state.emit_tok, state.emit_act)
 
+    def _packed_tiers(self, kp, vp, cpos, scores, row_idx, start, t,
+                      Pout: int, NR: int):
+        """Direct packed->tier compaction (DESIGN.md §5, the scatter that
+        skips the unpack copy).
+
+        The top-k slot selection runs on the cheap request-shaped
+        pos/score gathers ([L, NR, Pout] scalars); the heavy K/V tensors
+        are then gathered ONCE, straight from the PACKED prefill layout
+        into the budget-sized tier rows — ``arena[l, r, j] =
+        packed[layer, row_of[r], start[r] + keep_idx[j]]`` — so the
+        request-shaped ``[L, NR, Pout, Hkv, hd]`` KV intermediate the old
+        unpack staged never materializes.  The only fallback is a tier
+        whose budget exceeds the slice (nothing to evict): the full slice
+        is staged and padded with empty slots, and
+        ``admit_kv_copy_elems`` counts it.
+        """
+        cfg, pol, plan = self.cfg, self.ecfg.policy, self.plan
+        big_idx, small_idx = plan.layer_order()
+        Ppack = kp.shape[2]
+
+        def tier(idx, budget):
+            if not idx:    # empty tier: 1 dummy arena the cond never touches
+                z = jnp.zeros((1, NR, 16, cfg.n_kv_heads, cfg.hd),
+                              jnp.dtype(cfg.dtype))
+                return SlotCache(k=z, v=z,
+                                 pos=jnp.full((1, NR, 16), -1, jnp.int32),
+                                 score=jnp.zeros((1, NR, 16), jnp.float32))
+            sel = jnp.asarray(idx, jnp.int32)
+            pos_t = jnp.take(cpos, sel, axis=0)
+            sc_t = jnp.take(scores, sel, axis=0)
+            if budget <= Pout:
+                pri = keep_priority(pol, pos_t, sc_t, t, budget)
+                _, ix = jax.lax.top_k(pri, budget)      # [Lt, NR, budget]
+                ix = jnp.sort(ix, axis=-1).astype(jnp.int32)
+                # absolute packed coordinates; a keep index past the row's
+                # end is clamped — its pos is already -1 (empty), so the
+                # clamped k/v bits are masked everywhere downstream
+                absp = jnp.minimum(start[None, :, None] + ix, Ppack - 1)
+                li = sel[:, None, None]
+                ri = row_idx[None, :, None]
+                return SlotCache(
+                    k=kp[li, ri, absp], v=vp[li, ri, absp],
+                    pos=jnp.take_along_axis(pos_t, ix, axis=-1),
+                    score=jnp.take_along_axis(sc_t, ix, axis=-1))
+            # budget > slice: compaction is a no-op, so stage the full
+            # request-shaped slice (counted host-side) and grow it
+            k = gather_row_segments(jnp.take(kp, sel, axis=0), row_idx,
+                                    start, Pout, 0)
+            v = gather_row_segments(jnp.take(vp, sel, axis=0), row_idx,
+                                    start, Pout, 0)
+            return pad_cache(SlotCache(k, v, pos_t, sc_t), budget)
+
+        return tier(big_idx, plan.b_big), tier(small_idx, plan.b_small)
+
     def _padmit_jit(self, R: int, Ppack: int, K: int, NR: int, Pout: int):
-        """Compiled unpack+admit for one packed-layout shape: gathers each
-        request's strided slice out of the packed prefill (KV via
-        `gather_row_segments`, logits / recurrent snapshots via their
-        per-segment take positions), normalizes the H2O column sums by the
-        request's own length, and hands the resulting request-shaped
-        `PrefillOut` to the SAME `_admit_apply` tail the bucketed path
-        compiles.  Row/start/segment indices are traced, so one executable
-        per (rows, pack_len, segs, admit batch, slice len) serves every
-        packing outcome."""
+        """Compiled unpack+admit for one packed-layout shape, with the
+        DIRECT packed->arena scatter: logits / recurrent snapshots are
+        gathered at their per-segment take positions, the H2O column sums
+        are normalized by the request's own length, and the KV tiers are
+        compacted straight out of the packed layout (`_packed_tiers`) —
+        no request-shaped KV intermediate — before the shared
+        `_apply_rows` scatter.  Row/start/segment indices are traced, so
+        one executable per (rows, pack_len, segs, admit batch, slice len)
+        serves every packing outcome, token AND embeds bursts alike (the
+        packed prefill output has the same structure either way)."""
         key = (R, Ppack, K, NR, Pout)
         if key not in self._padmit_fns:
             has_attn, has_rec = self._has_attn, self._has_rec
@@ -411,11 +506,9 @@ class ContinuousEngine:
             def padmit(state: ContinuousState, rows, ppre, row_idx, start,
                        seg_of, t_req, slot_len, rem0, akey):
                 last = ppre.seg_logits[row_idx, seg_of]          # [NR, V]
-                cos = ppre.cos_sims[:, row_idx]
-                k = v = cpos = scores = None
+                t32 = t_req.astype(jnp.int32)
+                big = small = is_small = tier_index = ()
                 if has_attn:
-                    k = gather_row_segments(ppre.k, row_idx, start, Pout, 0)
-                    v = gather_row_segments(ppre.v, row_idx, start, Pout, 0)
                     cpos = gather_row_segments(ppre.cache_pos, row_idx,
                                                start, Pout, -1)
                     raw = gather_row_segments(ppre.colsums, row_idx, start,
@@ -429,13 +522,19 @@ class ContinuousEngine:
                     scores = jnp.where(
                         own[None], raw, 0.0) / jnp.clip(
                             t_req.astype(jnp.float32)[None, :, None], 1.0)
-                ssm = None
+                    big, small = self._packed_tiers(
+                        ppre.k, ppre.v, cpos, scores, row_idx, start, t32,
+                        Pout, NR)
+                    is_small, tier_index = make_tier_indices(
+                        self.plan.is_small)
                 if has_rec:      # snapshots: one state per packed segment
                     st, cv = ppre.ssm_state
-                    ssm = (st[:, row_idx, seg_of], cv[:, row_idx, seg_of])
-                pre = PrefillOut(last, cos, k, v, cpos, scores, ssm,
-                                 t_req.astype(jnp.int32))
-                return self._admit_apply(state, rows, pre, rem0, akey, NR)
+                    ssm, conv = st[:, row_idx, seg_of], cv[:, row_idx, seg_of]
+                else:
+                    ssm = conv = ()
+                rs = DecodeState(big, small, is_small, tier_index,
+                                 ssm, conv, t32)
+                return self._apply_rows(state, rows, rs, last, rem0, akey)
 
             donate0 = {} if not self._donate else {"donate_argnums": (0,)}
             self._padmit_fns[key] = jax.jit(padmit, **donate0)
@@ -505,10 +604,17 @@ class ContinuousEngine:
     def admit_many(self, reqs: Sequence[Tuple[np.ndarray, int]]) -> List[int]:
         """Admit up to `n_free` queued requests in one batched admission.
 
-        `reqs` is ``[(prompt int32 [len], max_new), ...]``; the return is
-        the persistent row each request landed in, in submission order.
-        Callers must check `n_free` first (asserted).  Three admission
-        layouts, chosen by `ContinuousConfig`:
+        `reqs` is ``[(prompt, max_new), ...]`` where each prompt is either
+        a 1-D int32 token array OR a 2-D float ``[len, d]`` embedding
+        sequence (an embeds-carrying vlm/audio request from the intake,
+        `serving/intake.py`); the return is the persistent row each
+        request landed in, in submission order.  A mixed burst is
+        partitioned by modality — embeddings cannot share a prefill
+        dispatch with token ids — and each partition runs the configured
+        layout below; everything after prefill (the fused admit
+        executables, the decode blocks) is modality-blind.  Callers must
+        check `n_free` first (asserted).  Three admission layouts, chosen
+        by `ContinuousConfig`:
 
         * **packed** (`packed_prefill=True`) — the burst's prompts are
           concatenated into few `pack_len`-token rows under a
@@ -538,12 +644,44 @@ class ContinuousEngine:
         bucketed layouts' pad *queries* inject artifact H2O mass into
         real keys' column sums, which raw-length packing (correctly)
         never produces.
+
+        Every identity claim additionally assumes the tier PLAN is
+        layout-independent: mode "full"/"uniform", or squeeze mode with
+        an already-calibrated plan.  In squeeze mode the FIRST admission
+        calibrates the Algorithm-1 grouping from batch-averaged cosine
+        sims, and the packed layout averages over packed ROWS (several
+        requests each) rather than per-request columns — so a
+        first-burst calibration may group layers differently across
+        layouts, after which outputs legitimately diverge.
         """
         assert reqs, "admit_many needs at least one request"
         assert len(reqs) <= len(self._free), \
             "not enough free slots — check n_free before admit_many"
+        slots: List[Optional[int]] = [None] * len(reqs)
+        tok_idx, emb_idx = [], []
+        for i, (p, _) in enumerate(reqs):
+            a = np.asarray(p)
+            if a.ndim == 2:
+                if a.shape[-1] != self.cfg.d_model:
+                    raise ValueError(
+                        f"embeds prompt has width {a.shape[-1]}, expected "
+                        f"d_model={self.cfg.d_model}")
+                emb_idx.append(i)
+            else:
+                tok_idx.append(i)
+        for idxs, embeds in ((tok_idx, False), (emb_idx, True)):
+            if not idxs:
+                continue
+            sub = [reqs[i] for i in idxs]
+            for i, slot in zip(idxs, self._admit_modality(sub, embeds)):
+                slots[i] = slot
+        return slots
+
+    def _admit_modality(self, reqs, embeds: bool) -> List[int]:
+        """One modality partition of a burst through the configured
+        admission layout."""
         if self.ccfg.packed_prefill:
-            return self._admit_packed(reqs)
+            return self._admit_packed(reqs, embeds=embeds)
         if self.ccfg.length_sorted and len(reqs) > 1:
             groups = group_by_bucket([len(p) for p, _ in reqs],
                                      self.ccfg.prompt_bucket)
@@ -551,33 +689,48 @@ class ContinuousEngine:
             groups = [(0, list(range(len(reqs))))]
         slots: List[Optional[int]] = [None] * len(reqs)
         for _, idxs in groups:
-            for i, slot in zip(idxs, self._admit_group([reqs[i]
-                                                        for i in idxs])):
+            got = self._admit_group([reqs[i] for i in idxs], embeds=embeds)
+            for i, slot in zip(idxs, got):
                 slots[i] = slot
         return slots
 
-    def _admit_group(self,
-                     reqs: Sequence[Tuple[np.ndarray, int]]) -> List[int]:
+    def _admit_group(self, reqs: Sequence[Tuple[np.ndarray, int]],
+                     embeds: bool = False) -> List[int]:
         """One admission bucket: ONE prefill dispatch and ONE fused admit
         executable (MaxText `prefill_insert_batch` style).
 
-        Prompts are bucketed together (`pad_prompts`), the admit batch is
-        padded to a power of two (pad rows replicate request 0 and are
-        dropped by the scatter's sentinel row index), so a handful of
-        (batch, prompt) buckets serves any arrival burst.  Returns the slot
-        per request, in order.
+        Prompts are bucketed together (`pad_prompts`, or `pad_embeds` for
+        an embeds-carrying vlm/audio bucket — same shapes, float payload),
+        the admit batch is padded to a power of two (pad rows replicate
+        request 0 and are dropped by the scatter's sentinel row index), so
+        a handful of (batch, prompt) buckets serves any arrival burst.
+        The embeds layout gets its own prefill executable but reuses the
+        SAME fused admit executable — `PrefillOut` is modality-blind.
+        Returns the slot per request, in order.
         """
-        prompts = [np.asarray(p, np.int32) for p, _ in reqs]
         max_news = [min(mn, self.ccfg.max_new_cap) for _, mn in reqs]
         n = len(reqs)
         NB = _pow2(n)
-        toks, valid = pad_prompts(prompts, self.ccfg.prompt_bucket,
-                                  batch=NB, max_len=self.ccfg.max_prompt_len)
-        for i in range(n, NB):        # pad rows replicate request 0
-            toks[i], valid[i] = toks[0], valid[0]
-        P = toks.shape[1]
-        pre = self.engine.prefill_jit(NB, P)(self.params, toks, None, None,
-                                             valid)
+        if embeds:
+            prompts = [np.asarray(e, np.float32) for e, _ in reqs]
+            emb, valid = pad_embeds(prompts, self.ccfg.prompt_bucket,
+                                    batch=NB,
+                                    max_len=self.ccfg.max_prompt_len)
+            for i in range(n, NB):    # pad rows replicate request 0
+                emb[i], valid[i] = emb[0], valid[0]
+            P = emb.shape[1]
+            pre = self.engine.prefill_jit(NB, P, embeds=True)(
+                self.params, None, emb, None, valid)
+        else:
+            prompts = [np.asarray(p, np.int32) for p, _ in reqs]
+            toks, valid = pad_prompts(prompts, self.ccfg.prompt_bucket,
+                                      batch=NB,
+                                      max_len=self.ccfg.max_prompt_len)
+            for i in range(n, NB):    # pad rows replicate request 0
+                toks[i], valid[i] = toks[0], valid[0]
+            P = toks.shape[1]
+            pre = self.engine.prefill_jit(NB, P)(self.params, toks, None,
+                                                 None, valid)
         self._ensure_plan(pre)
         self.admit_dispatches += 1
         self.prefill_pad_tokens += NB * P
@@ -594,31 +747,49 @@ class ContinuousEngine:
         self._register_admitted(slots, np.asarray(token0), max_news, rem0)
         return slots
 
-    def _admit_packed(self,
-                      reqs: Sequence[Tuple[np.ndarray, int]]) -> List[int]:
+    def _admit_packed(self, reqs: Sequence[Tuple[np.ndarray, int]],
+                      embeds: bool = False) -> List[int]:
         """Packed admission: ONE packed prefill dispatch for the whole burst
         plus ONE fused unpack+admit executable (DESIGN.md §5).
 
-        The host plans the packing (`prefill.plan_pack`): prompts become
-        segments of few `pack_len`-capacity rows, longest-first onto the
-        lightest row.  Recurrent families pack bucket-quantized slots —
-        the exact padded shape the bucketed path prefills — so segment
-        boundaries stay aligned to the SSD chunk grid and every admitted
-        state is bit-identical to its bucketed/solo counterpart;
+        The host plans the packing (`prefill.plan_pack_lengths`): prompts
+        become segments of few `pack_len`-capacity rows, longest-first
+        onto the lightest row.  Recurrent families pack bucket-quantized
+        slots — the exact padded shape the bucketed path prefills — so
+        segment boundaries stay aligned to the SSD chunk grid and every
+        admitted state is bit-identical to its bucketed/solo counterpart;
         attention-only families pack raw prompt lengths (no intra-bucket
-        pad tokens at all).  Returns the slot per request, in order.
+        pad tokens at all).  An embeds-carrying burst packs its
+        ``[len, d]`` sequences into the ``[R, P, d]`` twin of the token
+        rows (`prefill.pack_embeds`) — planner, masks, take-position
+        gathers and the unpack+admit executable are all layout-agnostic.
+        Returns the slot per request, in order.
         """
-        prompts = [np.asarray(p, np.int32) for p, _ in reqs]
         max_news = [min(mn, self.ccfg.max_new_cap) for _, mn in reqs]
         n = len(reqs)
         bucket = self.ccfg.prompt_bucket
         quantum = bucket if self._has_rec else 1
-        plan = plan_pack(prompts, bucket, self.ccfg.resolved_pack_len(),
-                         quantum=quantum, max_len=self.ccfg.max_prompt_len)
-        ppre = self.engine.packed_prefill_jit(
-            plan.n_rows, plan.pack_len, plan.max_segments)(
-                self.params, plan.tokens, plan.positions, plan.valid,
-                plan.segments, plan.take_last, plan.take_state)
+        if embeds:
+            prompts = [np.asarray(e, np.float32) for e, _ in reqs]
+            plan = plan_pack_lengths([len(e) for e in prompts], bucket,
+                                     self.ccfg.resolved_pack_len(),
+                                     quantum=quantum,
+                                     max_len=self.ccfg.max_prompt_len)
+            packed = pack_embeds(plan, prompts)
+            ppre = self.engine.packed_prefill_jit(
+                plan.n_rows, plan.pack_len, plan.max_segments, embeds=True)(
+                    self.params, None, packed, plan.positions, plan.valid,
+                    plan.segments, plan.take_last, plan.take_state)
+        else:
+            prompts = [np.asarray(p, np.int32) for p, _ in reqs]
+            plan = plan_pack(prompts, bucket, self.ccfg.resolved_pack_len(),
+                             quantum=quantum,
+                             max_len=self.ccfg.max_prompt_len)
+            ppre = self.engine.packed_prefill_jit(
+                plan.n_rows, plan.pack_len, plan.max_segments)(
+                    self.params, plan.tokens, None, plan.positions,
+                    plan.valid, plan.segments, plan.take_last,
+                    plan.take_state)
         self._ensure_plan(ppre)
         self.admit_dispatches += 1
         self.prefill_pad_tokens += plan.packed_tokens
@@ -636,6 +807,15 @@ class ContinuousEngine:
         def pad(a):
             return np.concatenate([a, np.repeat(a[:1], NR - n, 0)])
         Pout = -(-int(plan.slot_len.max()) // bucket) * bucket
+        if self._has_attn:
+            # request-shaped KV staging happens ONLY in the budget>slice
+            # fallback of `_packed_tiers`; mirror its shapes host-side so
+            # the bench can assert the direct scatter stayed copy-free
+            per = 2 * NR * Pout * self.cfg.n_kv_heads * self.cfg.hd
+            for n_t, b_t in ((self.plan.n_big, self.plan.b_big),
+                             (self.plan.n_small, self.plan.b_small)):
+                if n_t and b_t > Pout:
+                    self.admit_kv_copy_elems += n_t * per
         token0, self.state = self._padmit_jit(
             plan.n_rows, plan.pack_len, plan.max_segments, NR, Pout)(
                 self.state, rows, ppre, pad(plan.row), pad(plan.start),

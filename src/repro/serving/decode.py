@@ -26,7 +26,7 @@ from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
 from repro.models.config import ModelConfig
 from repro.models.norms import apply_norm
-from repro.models.transformer import layer_windows
+from repro.models.transformer import embed_tokens, layer_windows
 from repro.serving.sampler import sample
 
 
@@ -119,9 +119,7 @@ def _ffn_decode(bp, cfg, x):
 
 
 def _embed_token(params, cfg, token):
-    x = params["embed"][token[:, None]]               # [B, 1, d]
-    return (x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)).astype(
-        jnp.dtype(cfg.dtype))
+    return embed_tokens(params, cfg, token[:, None])  # [B, 1, d]
 
 
 def serve_step(

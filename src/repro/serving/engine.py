@@ -101,10 +101,14 @@ class Engine:
         self.decode_dispatches = 0    # fused-block executable launches
 
     # ------------------------------------------------------------------ jit
-    def prefill_jit(self, batch: int, prompt_len: int):
+    def prefill_jit(self, batch: int, prompt_len: int, embeds: bool = False):
         """The memoized prefill executable for one (batch, prompt) bucket.
-        Called per request by continuous-batching admission."""
-        return self._prefill_fn((batch, prompt_len))
+        Called per request by continuous-batching admission.  ``embeds``
+        selects the embeds-carrying layout (vlm/audio intake: the request
+        arrives as `[B, P, d]` precomputed embeddings instead of token
+        ids) — a distinct executable, same output structure."""
+        return self._prefill_fn((batch, prompt_len, "emb") if embeds
+                                else (batch, prompt_len))
 
     def _prefill_fn(self, key):
         if key not in self._prefill_cache:
@@ -113,16 +117,20 @@ class Engine:
                     p, self.cfg, tokens=tok, embeds=emb, positions=pos, valid=val))
         return self._prefill_cache[key]
 
-    def packed_prefill_jit(self, rows: int, pack_len: int, max_segs: int):
+    def packed_prefill_jit(self, rows: int, pack_len: int, max_segs: int,
+                           embeds: bool = False):
         """The memoized PACKED prefill executable for one (rows, pack_len,
         segments-per-row) shape: one dispatch prefills a whole admission
         burst of concatenated prompts under the block-diagonal mask
-        (`serving/prefill.py:packed_prefill`, DESIGN.md §5)."""
-        key = ("packed", rows, pack_len, max_segs)
+        (`serving/prefill.py:packed_prefill`, DESIGN.md §5).  ``embeds``
+        selects the packed-embeds layout (`pack_embeds` rows [R, P, d]
+        instead of token ids)."""
+        key = ("packed", rows, pack_len, max_segs) + (("emb",) if embeds
+                                                     else ())
         if key not in self._prefill_cache:
             self._prefill_cache[key] = jax.jit(
-                lambda p, tok, pos, val, seg, tl, ts: packed_prefill(
-                    p, self.cfg, tok, pos, val, seg, tl, ts))
+                lambda p, tok, emb, pos, val, seg, tl, ts: packed_prefill(
+                    p, self.cfg, tok, pos, val, seg, tl, ts, embeds=emb))
         return self._prefill_cache[key]
 
     def _step_fn(self, key):

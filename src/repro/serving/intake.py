@@ -1,0 +1,264 @@
+"""Multimodal request intake: typed requests -> embeds-native admission.
+
+SqueezeAttention's layer-wise budgets are modality-agnostic — Algorithm 1
+measures layer importance on the *hidden states*, not on token ids — so the
+continuous engine admits whatever the decoder stack can embed.  This module
+is the subsystem that turns a frontend-carrying request (image patch grids,
+audio frames, interleaved text) into the ``[len, d]`` embedding sequence the
+engine's embeds admission paths consume (DESIGN.md §5):
+
+  * **Typed segments** (`TextSegment` / `ImageSegment` / `AudioSegment`)
+    compose a `MultimodalRequest` in interleaving order.  Text-only
+    requests stay token prompts — the intake only materializes embeddings
+    where a frontend exists.
+  * **Batched frontend encoding** (`IntakeEncoder`): a burst's segments are
+    bucketed by (kind, length) and each bucket runs ONE encoder dispatch —
+    the stub vision/audio encoders (`models/frontend.py`, per-request
+    keys, vmapped) and the text embedding table
+    (`models/transformer.py:embed_tokens`) respectively.  Because every
+    row of a keyed stub encode depends only on its own key, bucketing is
+    *batch-invariant*: a request's embeddings are identical whether it is
+    encoded alone (`encode_request`, the solo-reference path the identity
+    tests use) or inside a burst (`encode_burst`).
+  * **Positions** are the mixed sequential scheme
+    (`models/frontend.py:mixed_positions`): one index over
+    [frontend | text], which M-RoPE models see as the degenerate t=h=w
+    triple — exactly what the decode step's scalar position extends, so
+    the 3-D patch-grid ids remain a one-shot `Engine.generate` flavor
+    while serving stays position-scheme-consistent end to end.
+
+The encoded requests flow into `ContinuousEngine.admit_many` as 2-D
+``[len, d]`` prompts (token prompts stay 1-D int arrays); the engine
+prefills them through the same bucketed / packed layouts and the SAME fused
+admit executables as token bursts — `PrefillOut` is layout- and
+modality-agnostic, so admission never forked.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.models.frontend import (STUB_FRONTENDS, audio_stub_embeds_keyed,
+                                   mixed_positions, vision_stub_embeds_keyed)
+from repro.models.transformer import embed_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class TextSegment:
+    """A run of ordinary token ids (embedded through the model's table —
+    bit-identical to submitting the same ids as a token prompt)."""
+    tokens: np.ndarray            # [n] int32
+
+    @property
+    def kind(self) -> str:
+        return "text"
+
+    def __len__(self) -> int:
+        return len(self.tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageSegment:
+    """One image as a patch grid: `n_patches` precomputed patch embeddings
+    (the vision stub per assignment; a real ViT/SigLIP+projector would
+    produce the same `[n_patches, d]` interface).  ``grid_hw`` is carried
+    for the M-RoPE one-shot flavor; the intake's serving path uses mixed
+    sequential positions (module docstring)."""
+    n_patches: int
+    grid_hw: Optional[Tuple[int, int]] = None
+
+    @property
+    def kind(self) -> str:
+        return "image"
+
+    def __len__(self) -> int:
+        return self.n_patches
+
+
+@dataclasses.dataclass(frozen=True)
+class AudioSegment:
+    """One audio clip as `n_frames` codec-frame embeddings (EnCodec-style
+    stub per assignment)."""
+    n_frames: int
+
+    @property
+    def kind(self) -> str:
+        return "audio"
+
+    def __len__(self) -> int:
+        return self.n_frames
+
+
+Segment = Union[TextSegment, ImageSegment, AudioSegment]
+
+#: segment kind -> the ModelConfig.frontend that encodes it
+_KIND_FRONTEND = {v: k for k, v in STUB_FRONTENDS.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class MultimodalRequest:
+    """An ordered tuple of typed segments + decode budget.
+
+    ``seed`` keys the stub frontend encoders (segment ``j`` uses
+    ``fold_in(PRNGKey(seed), j)``), standing in for the image/audio bytes a
+    real frontend would hash — two requests with the same seed and segments
+    encode identically, which is what lets tests replay the exact embeds
+    into solo `Engine.generate`.
+    """
+    segments: Tuple[Segment, ...]
+    max_new: int
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.segments, "a request needs at least one segment"
+        assert self.total_len >= 1
+
+    @property
+    def n_frontend(self) -> int:
+        return sum(len(s) for s in self.segments if s.kind != "text")
+
+    @property
+    def n_text(self) -> int:
+        return sum(len(s) for s in self.segments if s.kind == "text")
+
+    @property
+    def total_len(self) -> int:
+        return self.n_frontend + self.n_text
+
+    @property
+    def is_text_only(self) -> bool:
+        return self.n_frontend == 0
+
+    def text_tokens(self) -> np.ndarray:
+        """The concatenated text content (token-prompt form of a text-only
+        request)."""
+        toks = [np.asarray(s.tokens, np.int32) for s in self.segments
+                if s.kind == "text"]
+        return np.concatenate(toks) if toks else np.zeros((0,), np.int32)
+
+
+def _pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+class IntakeEncoder:
+    """Batched frontend encoding for admission bursts.
+
+    Buckets a burst's segments by ``(kind, length)`` and runs ONE memoized
+    encoder dispatch per bucket (batch padded to a power of two so burst
+    compositions reuse executables): stub vision/audio encoders for
+    frontend segments, the model's embedding table for text segments.  The
+    per-request pieces are then concatenated in segment order into the
+    ``[total_len, d]`` float32 sequence `ContinuousEngine.admit_many`
+    accepts as an embeds-carrying prompt.
+
+    Counters (`encode_dispatches`, `encoded_segments`,
+    `frontend_tokens_encoded`) mirror the engine's admission accounting so
+    the serving bench can see the frontend amortization.
+    """
+
+    def __init__(self, params, cfg):
+        if cfg.frontend is not None and cfg.frontend not in STUB_FRONTENDS:
+            raise ValueError(f"unknown frontend {cfg.frontend!r}; known: "
+                             f"{', '.join(STUB_FRONTENDS)}")
+        self.params = params
+        self.cfg = cfg
+        self._fns = {}                 # (kind, NB, n) -> jitted encoder
+        self.encode_dispatches = 0     # one per (kind, length) bucket
+        self.encoded_segments = 0
+        self.frontend_tokens_encoded = 0
+
+    # ------------------------------------------------------------- encoders
+    def _fn(self, kind: str, NB: int, n: int):
+        key = (kind, NB, n)
+        if key not in self._fns:
+            cfg = self.cfg
+            if kind == "image":
+                fn = jax.jit(lambda keys: vision_stub_embeds_keyed(
+                    keys, n, cfg)[0])
+            elif kind == "audio":
+                fn = jax.jit(lambda keys: audio_stub_embeds_keyed(
+                    keys, n, cfg))
+            else:                      # text: table lookup, float32 pieces
+                fn = jax.jit(lambda p, toks: embed_tokens(
+                    p, cfg, toks).astype(jax.numpy.float32))
+            self._fns[key] = fn
+        return self._fns[key]
+
+    def _check(self, seg: Segment):
+        if seg.kind == "text":
+            return
+        front = _KIND_FRONTEND[seg.kind]
+        if self.cfg.frontend != front:
+            raise ValueError(
+                f"{self.cfg.name!r} has frontend "
+                f"{self.cfg.frontend or 'none'!r}, which cannot encode a "
+                f"{seg.kind} segment (needs {front!r})")
+
+    def check_request(self, req: MultimodalRequest,
+                      max_len: Optional[int] = None):
+        """Submit-time validation: every segment kind must be encodable by
+        this config's frontend, and the encoded length must fit `max_len`
+        (the admission cap) — raising HERE keeps an invalid request from
+        poisoning a whole admission burst at poll time."""
+        for seg in req.segments:
+            self._check(seg)
+        if max_len is not None and req.total_len > max_len:
+            raise ValueError(f"request length {req.total_len} "
+                             f"(frontend {req.n_frontend} + text "
+                             f"{req.n_text}) exceeds max_prompt_len "
+                             f"{max_len}")
+
+    # -------------------------------------------------------------- encoding
+    def encode_burst(self, reqs: Sequence[MultimodalRequest]
+                     ) -> List[np.ndarray]:
+        """Encode a whole burst: one dispatch per (kind, length) bucket,
+        pieces reassembled per request in segment order.  Returns one
+        ``[total_len, d]`` float32 array per request, in order."""
+        buckets = {}                   # (kind, n) -> [(req i, seg j, payload)]
+        for i, req in enumerate(reqs):
+            for j, seg in enumerate(req.segments):
+                self._check(seg)
+                if seg.kind == "text":
+                    payload = np.asarray(seg.tokens, np.int32)
+                else:
+                    payload = np.asarray(jax.random.fold_in(
+                        jax.random.PRNGKey(req.seed), j))
+                buckets.setdefault((seg.kind, len(seg)), []).append(
+                    (i, j, payload))
+
+        pieces = {}                    # (req i, seg j) -> np [n, d]
+        for (kind, n), items in sorted(buckets.items()):
+            NB = _pow2(len(items))
+            pay = [p for _, _, p in items]
+            pay += [pay[0]] * (NB - len(items))   # pad rows replicate item 0
+            stacked = np.stack(pay)
+            if kind == "text":
+                out = self._fn(kind, NB, n)(self.params, stacked)
+            else:
+                out = self._fn(kind, NB, n)(stacked)
+                self.frontend_tokens_encoded += n * len(items)
+            out = np.asarray(out, np.float32)
+            for (i, j, _), row in zip(items, out):
+                pieces[(i, j)] = row
+            self.encode_dispatches += 1
+            self.encoded_segments += len(items)
+
+        return [np.concatenate([pieces[(i, j)]
+                                for j in range(len(req.segments))], axis=0)
+                for i, req in enumerate(reqs)]
+
+    def encode_request(self, req: MultimodalRequest) -> np.ndarray:
+        """Solo encode (the reference path): identical values to the same
+        request inside any `encode_burst` — keyed stub encoders make each
+        row a pure function of its own key."""
+        return self.encode_burst([req])[0]
+
+    def positions_for(self, req: MultimodalRequest) -> np.ndarray:
+        """The mixed sequential positions `[1, total_len]` of the encoded
+        sequence — what prefill derives implicitly; exposed for driving
+        the one-shot `Engine.generate` reference explicitly."""
+        return np.asarray(mixed_positions(1, req.n_frontend, req.n_text))

@@ -68,6 +68,36 @@ def pad_prompt(prompt: np.ndarray, bucket: int,
                        max_len=max_len)
 
 
+def pad_embeds(embeds: Sequence[np.ndarray], bucket: int,
+               batch: Optional[int] = None,
+               max_len: Optional[int] = None):
+    """`pad_prompts` for embeds-carrying requests (vlm/audio intake).
+
+    Each request is a precomputed ``[len, d]`` float sequence (frontend
+    patch/frame embeddings + table-embedded text, `serving/intake.py`);
+    right-pads to the bucketed length and to `batch` rows with zeros,
+    returning ``(embeds [B, P, d] float32, valid [B, P] bool)``.  Pad
+    positions are masked by `valid` exactly like pad tokens, so the same
+    memoized prefill executables serve the embeds layout.
+    """
+    B = batch if batch is not None else len(embeds)
+    assert len(embeds) <= B
+    if max_len is not None:
+        for e in embeds:
+            if len(e) > max_len:
+                raise ValueError(f"embeds length {len(e)} exceeds "
+                                 f"max_prompt_len {max_len}")
+    d = embeds[0].shape[-1]
+    plen = max(len(e) for e in embeds)
+    P = ((plen + bucket - 1) // bucket) * bucket
+    out = np.zeros((B, P, d), np.float32)
+    valid = np.zeros((B, P), bool)
+    for i, e in enumerate(embeds):
+        out[i, :len(e)] = e
+        valid[i, :len(e)] = True
+    return out, valid
+
+
 class PackPlan(NamedTuple):
     """Host-side layout of one packed admission burst (DESIGN.md §5).
 
@@ -108,22 +138,58 @@ class PackPlan(NamedTuple):
 
 def plan_pack(prompts: Sequence[np.ndarray], bucket: int, pack_len: int,
               quantum: int = 1, max_len: Optional[int] = None) -> PackPlan:
+    """Greedy packing of a TOKEN admission burst: `plan_pack_lengths` on the
+    prompt lengths, with the prompt tokens written into the packed rows."""
+    plan = plan_pack_lengths([len(p) for p in prompts], bucket, pack_len,
+                             quantum=quantum, max_len=max_len)
+    tokens = plan.tokens.copy()
+    for i, p in enumerate(prompts):
+        r, s = plan.row[i], plan.start[i]
+        tokens[r, s:s + len(p)] = np.asarray(p, np.int32)
+    return plan._replace(tokens=tokens)
+
+
+def pack_embeds(plan: PackPlan, embeds: Sequence[np.ndarray]) -> np.ndarray:
+    """Scatter embeds-carrying requests into a packed layout's rows.
+
+    ``embeds[i]`` is request ``i``'s ``[len, d]`` sequence (the lengths the
+    plan was built from); returns the packed ``[R, P, d]`` float32 array
+    the embeds variant of `packed_prefill` consumes — the layout twin of
+    `PackPlan.tokens`, with pad positions left at zero (masked by
+    ``plan.valid``).
+    """
+    d = embeds[0].shape[-1]
+    out = np.zeros((plan.n_rows, plan.pack_len, d), np.float32)
+    for i, e in enumerate(embeds):
+        r, s = plan.row[i], plan.start[i]
+        assert len(e) == plan.lengths[i], (len(e), int(plan.lengths[i]))
+        out[r, s:s + len(e)] = e
+    return out
+
+
+def plan_pack_lengths(lengths: Sequence[int], bucket: int, pack_len: int,
+                      quantum: int = 1,
+                      max_len: Optional[int] = None) -> PackPlan:
     """Greedy packing of an admission burst into few equal-length rows.
 
-    Each prompt occupies a *slot* of ``ceil(len/quantum) * quantum`` tokens
-    (``quantum=1``: the raw prompt; ``quantum=bucket``: the same padded
-    shape the bucketed path prefills, which keeps recurrent-state
-    integration bit-identical — pad tokens update the SSD state in both).
-    Slots are placed longest-first onto the currently lightest row (LPT),
-    opening rows beyond the ``ceil(total/pack_len)`` target only when a
-    slot genuinely does not fit, and the realized row length is re-quantized
-    to a ``bucket`` multiple so executables keyed on (rows, pack_len) stay
-    few.  Within a row every segment restarts positions at 0 and carries a
-    distinct, monotone segment id — the block-diagonal mask's key.
+    Planning is payload-agnostic — only the per-request LENGTHS matter —
+    so one planner serves both token prompts (`plan_pack` fills
+    ``tokens``) and embeds-carrying requests (`pack_embeds` fills the
+    ``[R, P, d]`` twin).  Each request occupies a *slot* of
+    ``ceil(len/quantum) * quantum`` tokens (``quantum=1``: the raw
+    length; ``quantum=bucket``: the same padded shape the bucketed path
+    prefills, which keeps recurrent-state integration bit-identical — pad
+    tokens update the SSD state in both).  Slots are placed longest-first
+    onto the currently lightest row (LPT), opening rows beyond the
+    ``ceil(total/pack_len)`` target only when a slot genuinely does not
+    fit, and the realized row length is re-quantized to a ``bucket``
+    multiple so executables keyed on (rows, pack_len) stay few.  Within a
+    row every segment restarts positions at 0 and carries a distinct,
+    monotone segment id — the block-diagonal mask's key.
     """
-    n = len(prompts)
+    n = len(lengths)
     assert n >= 1
-    lengths = np.asarray([len(p) for p in prompts], np.int64)
+    lengths = np.asarray(lengths, np.int64)
     if max_len is not None and (lengths > max_len).any():
         bad = int(lengths.max())
         raise ValueError(f"prompt length {bad} exceeds max_prompt_len "
@@ -157,7 +223,6 @@ def plan_pack(prompts: Sequence[np.ndarray], bucket: int, pack_len: int,
         r, s, L, Ls = rows_of[i], starts[i], int(lengths[i]), int(slot[i])
         seg_of[i] = counts[r]
         counts[r] += 1
-        tokens[r, s:s + L] = np.asarray(prompts[i], np.int32)
         valid[r, s:s + L] = True
         positions[r, s:s + Ls] = np.arange(Ls)
         segments[r, s:s + Ls] = seg_of[i]
@@ -243,12 +308,14 @@ class PackedPrefillOut(NamedTuple):
 def packed_prefill(
     params,
     cfg: ModelConfig,
-    tokens: jnp.ndarray,        # [R, P] packed rows (PackPlan.tokens)
+    tokens: Optional[jnp.ndarray],  # [R, P] packed rows (PackPlan.tokens)
     positions: jnp.ndarray,     # [R, P] segment-reset positions
     valid: jnp.ndarray,         # [R, P]
     segments: jnp.ndarray,      # [R, P] segment ids
     take_last: jnp.ndarray,     # [R, K] last valid token per segment
     take_state: jnp.ndarray,    # [R, K] last slot token per segment
+    embeds: Optional[jnp.ndarray] = None,  # [R, P, d] packed rows
+                                           # (`pack_embeds`, vlm/audio)
 ) -> PackedPrefillOut:
     """Prefill a whole admission burst as ONE packed dispatch.
 
@@ -257,14 +324,17 @@ def packed_prefill(
     would compute; this function additionally snapshots, per segment, the
     last-valid-token logits and (for recurrent layers) the end-of-slot
     SSD/conv states, so the admit executable only gathers — it never
-    recomputes.
+    recomputes.  The packed rows arrive either as token ids or as
+    precomputed embeddings (`embeds`, the intake's vlm/audio layout) —
+    everything downstream of the embedding lookup is identical.
     """
-    R, P = tokens.shape
+    R, P = (tokens.shape if tokens is not None else embeds.shape[:2])
     need_state = cfg.is_ssm_only or cfg.is_hybrid
     # slot boundaries are chunk-aligned by construction (the continuous
     # engine enforces prompt_bucket % ssm_chunk == 0 for recurrent packs),
     # so the snapshots are the cheap bit-exact post-chunk gathers
-    out = forward(params, cfg, tokens=tokens, positions=positions,
+    out = forward(params, cfg, tokens=tokens, embeds=embeds,
+                  positions=positions,
                   valid=valid, collect_kv=cfg.has_attention,
                   segments=segments,
                   state_take=take_state if need_state else None,

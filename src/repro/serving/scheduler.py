@@ -29,17 +29,25 @@ import numpy as np
 
 from repro.serving.continuous import ContinuousConfig, ContinuousEngine
 from repro.serving.engine import Engine, EngineConfig
+from repro.serving.intake import IntakeEncoder, MultimodalRequest
 from repro.serving.prefill import pad_prompts
 
 
 @dataclasses.dataclass
 class Request:
+    """One queued request.  Exactly one of `prompt` / `embeds` / `mm` is
+    the payload: token prompts carry `prompt`, pre-encoded embedding
+    sequences carry `embeds` ([len, d] float32), and typed multimodal
+    requests carry `mm` until the admission poll encodes them (batched,
+    one frontend dispatch per bucket — `IntakeEncoder`)."""
     rid: int
-    prompt: np.ndarray                  # [P] int32
+    prompt: Optional[np.ndarray]        # [P] int32 (token requests)
     max_new: int
     submitted_at: float = 0.0
     tokens: Optional[np.ndarray] = None
     latency_s: float = 0.0
+    embeds: Optional[np.ndarray] = None       # [P, d] float32
+    mm: Optional[MultimodalRequest] = None    # encoded at poll time
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,12 +138,64 @@ class ContinuousScheduler(_RequestQueue):
                  ccfg: ContinuousConfig = ContinuousConfig(), seed: int = 0):
         super().__init__()
         self.core = ContinuousEngine(params, cfg, ecfg, ccfg, seed=seed)
+        self.intake = IntakeEncoder(params, cfg)
         self._slot_req: Dict[int, Request] = {}
 
     @property
     def capability(self):
         """Config-driven report: budget-tiered vs fixed-cost layers."""
         return self.core.cap
+
+    def submit_embeds(self, embeds: np.ndarray, max_new: int = 32) -> int:
+        """Enqueue a pre-encoded embedding sequence ([len, d] float32) —
+        the raw form of an embeds-carrying request.  Shape is validated
+        HERE: a rejection at poll time would drop the whole admission
+        burst the bad request rode in on."""
+        embeds = np.asarray(embeds, np.float32)
+        if embeds.ndim != 2 or embeds.shape[-1] != self.core.cfg.d_model:
+            raise ValueError(f"embeds must be [len, d_model="
+                             f"{self.core.cfg.d_model}], got "
+                             f"{embeds.shape}")
+        if len(embeds) > self.core.ccfg.max_prompt_len:
+            raise ValueError(f"embeds length {len(embeds)} exceeds "
+                             f"max_prompt_len "
+                             f"{self.core.ccfg.max_prompt_len}")
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(Request(rid, None, max_new, time.perf_counter(),
+                                  embeds=embeds))
+        return rid
+
+    def submit_multimodal(self, request: MultimodalRequest) -> int:
+        """Enqueue a typed multimodal request (`serving/intake.py`).
+
+        Segment kinds and the admission length cap are validated at
+        SUBMIT time (`IntakeEncoder.check_request`); encoding is DEFERRED
+        to the admission poll so a burst of queued requests shares
+        bucketed frontend dispatches (`IntakeEncoder.encode_burst`);
+        text-only requests degrade to token prompts and skip the embeds
+        path entirely."""
+        self.intake.check_request(request, self.core.ccfg.max_prompt_len)
+        rid = self._next_id
+        self._next_id += 1
+        if request.is_text_only:
+            self.queue.append(Request(rid, request.text_tokens(),
+                                      request.max_new, time.perf_counter()))
+        else:
+            self.queue.append(Request(rid, None, request.max_new,
+                                      time.perf_counter(), mm=request))
+        return rid
+
+    def _admit_payloads(self, reqs: List[Request]):
+        """Resolve each burst member to its admit_many payload, encoding
+        the typed multimodal members in one batched intake pass."""
+        mm = [r for r in reqs if r.mm is not None]
+        if mm:
+            encoded = self.intake.encode_burst([r.mm for r in mm])
+            for r, e in zip(mm, encoded):
+                r.embeds = e
+        return [(r.prompt if r.prompt is not None else r.embeds, r.max_new)
+                for r in reqs]
 
     @property
     def row_steps(self) -> int:
@@ -160,15 +220,15 @@ class ContinuousScheduler(_RequestQueue):
     def poll(self) -> List[Request]:
         """One scheduler iteration, fixed contract (docs/API.md): harvest
         finished rows → admit every queued arrival that fits a free row
-        (ONE `admit_many` per burst; the engine picks the packed /
-        length-sorted / padded layout) → one fused decode block → harvest
-        and return completions."""
+        (typed multimodal members are frontend-encoded first, batched
+        across the burst, then ONE `admit_many` per burst; the engine
+        picks the packed / length-sorted / padded layout per modality) →
+        one fused decode block → harvest and return completions."""
         done = self._harvest()
         while self.queue and self.core.has_free:
             take = min(len(self.queue), self.core.n_free)
             reqs, self.queue = self.queue[:take], self.queue[take:]
-            slots = self.core.admit_many(
-                [(r.prompt, r.max_new) for r in reqs])
+            slots = self.core.admit_many(self._admit_payloads(reqs))
             for r, s in zip(reqs, slots):
                 self._slot_req[s] = r
             done.extend(self._harvest())   # instant EOS / max_new == 1

@@ -24,6 +24,8 @@ from repro.serving.prefill import group_by_bucket
 
 # ------------------------------------------------------------- capability
 def test_capability_report_covers_every_config_family():
+    """NO config family reports ok=False: frontend families (vlm/audio)
+    admit through the embeds-native intake instead of being refused."""
     seen = set()
     for arch in ALL_ARCHS:
         cfg = get_reduced(arch)
@@ -40,21 +42,33 @@ def test_capability_report_covers_every_config_family():
         else:
             assert cap.n_recurrent_layers == 0
             assert cap.recurrent.is_empty
+        if cfg.frontend is not None:
+            assert cap.embeds_native
+            assert cap.frontend == cfg.frontend
+            assert cap.frontend_tokens == cfg.frontend_tokens > 0
+            assert "intake" in cap.describe()
+        else:
+            assert not cap.embeds_native
         assert cap.describe().startswith(cfg.arch_type)
     assert seen == {"dense", "moe", "vlm", "audio", "ssm", "hybrid"}
 
 
-def test_embeds_only_config_raises_precise_error():
-    """A config whose requests must arrive as precomputed frontend
-    embeddings cannot be admitted from token prompts — the refusal names
-    the config and the alternative."""
+def test_frontend_config_admits_and_unknown_frontend_refuses_precisely():
+    """Embeds-carrying families ADMIT (the old token-prompts-only refusal
+    is gone); the one refusal left is a frontend the intake has no encoder
+    for, and the constructor raises it verbatim."""
     cfg = dataclasses.replace(get_reduced("qwen2-vl-7b"), frontend_tokens=16)
     cap = continuous_capability(cfg)
+    assert cap.ok and cap.reason == ""
+    assert "Engine.generate" not in cap.reason
+
+    bad = dataclasses.replace(cfg, frontend="retina_v9")
+    cap = continuous_capability(bad)
     assert not cap.ok
-    assert "16" in cap.reason and "Engine.generate" in cap.reason
+    assert "retina_v9" in cap.reason and "intake" in cap.reason
     assert "NOT admissible" in cap.describe()
     with pytest.raises(ValueError, match=re.escape(cap.reason[:40])):
-        ContinuousEngine(None, cfg, None, seed=0)
+        ContinuousEngine(None, bad, None, seed=0)
 
 
 def test_hybrid_layer_count_must_divide_attn_period():

@@ -1,0 +1,330 @@
+"""Multimodal intake: embeds-native admission for vlm/audio families.
+
+The load-bearing property mirrors tests/test_continuous.py: a
+frontend-carrying request (image patches / audio frames + text), encoded
+once by the intake, decodes token-identically through continuous batching —
+bucketed AND packed embeds layouts, admit → fused decode → retire →
+recycle — and through solo `Engine.generate` on the very same stub embeds.
+Fast-lane units pin the pieces: batch-invariant bucketed encoding, the
+text-segment/token-prompt equivalence, the embeds padding/packing layout
+helpers, and the direct packed→arena scatter staying copy-free.
+"""
+import pytest
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PolicyConfig
+from repro.models import ModelConfig, init_params
+from repro.models.frontend import mixed_positions
+from repro.serving import (AudioSegment, ContinuousConfig, ContinuousEngine,
+                           ContinuousScheduler, Engine, EngineConfig,
+                           ImageSegment, IntakeEncoder, MultimodalRequest,
+                           TextSegment, pack_embeds, pad_embeds, pad_prompt,
+                           plan_pack, plan_pack_lengths)
+
+VLM = ModelConfig(name="v", arch_type="vlm", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                  mrope_sections=(4, 2, 2), frontend="vision_stub",
+                  frontend_tokens=8, dtype="float32", param_dtype="float32")
+AUDIO = ModelConfig(name="a", arch_type="audio", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=97,
+                    norm_type="layernorm", mlp_type="gelu",
+                    frontend="audio_stub", frontend_tokens=8,
+                    dtype="float32", param_dtype="float32")
+
+ECFG = EngineConfig(mode="uniform", policy=PolicyConfig("sliding_window"),
+                    budget_abs=12, bucket=4, min_budget=4)
+
+
+def _ccfg(**kw):
+    base = dict(max_concurrency=3, prompt_bucket=8, max_prompt_len=40,
+                max_new_cap=8, sync_every=2)
+    base.update(kw)
+    return ContinuousConfig(**base)
+
+
+def _front(cfg, n):
+    return ImageSegment(n) if cfg.frontend == "vision_stub" \
+        else AudioSegment(n)
+
+
+def _reqs(cfg, rng, specs):
+    """specs: [(n_frontend, n_text, max_new), ...] -> typed requests."""
+    return [MultimodalRequest(
+        (_front(cfg, nf),
+         TextSegment(rng.integers(0, cfg.vocab_size, (nt,)).astype(np.int32))),
+        max_new=mn, seed=100 + i)
+        for i, (nf, nt, mn) in enumerate(specs)]
+
+
+# ------------------------------------------------------------- fast: types
+@pytest.mark.fast
+def test_request_lengths_and_text_only_degradation():
+    toks = np.arange(5, dtype=np.int32)
+    r = MultimodalRequest((ImageSegment(9), TextSegment(toks)), max_new=4)
+    assert (r.n_frontend, r.n_text, r.total_len) == (9, 5, 14)
+    assert not r.is_text_only
+    t = MultimodalRequest((TextSegment(toks), TextSegment(toks + 7)),
+                          max_new=4)
+    assert t.is_text_only and t.total_len == 10
+    assert t.text_tokens().tolist() == list(toks) + list(toks + 7)
+    with pytest.raises(AssertionError):
+        MultimodalRequest((), max_new=1)
+
+
+@pytest.mark.fast
+def test_encoder_bucketing_one_dispatch_per_kind_length():
+    """A burst's segments bucket by (kind, length): one encoder dispatch
+    per bucket, counters exact."""
+    params = init_params(jax.random.PRNGKey(0), VLM)
+    enc = IntakeEncoder(params, VLM)
+    rng = np.random.default_rng(0)
+    reqs = _reqs(VLM, rng, [(9, 5, 2), (9, 7, 2), (4, 5, 2)])
+    out = enc.encode_burst(reqs)
+    # buckets: image(9) x2, image(4) x1, text(5) x2, text(7) x1 -> 4
+    assert enc.encode_dispatches == 4
+    assert enc.encoded_segments == 6
+    assert enc.frontend_tokens_encoded == 9 * 2 + 4
+    for r, e in zip(reqs, out):
+        assert e.shape == (r.total_len, VLM.d_model)
+        assert e.dtype == np.float32
+    # repeat traffic reuses the memoized encoders (pow2-padded batches)
+    enc.encode_burst(reqs)
+    assert len(enc._fns) == 4
+
+
+@pytest.mark.fast
+def test_encoding_is_batch_invariant():
+    """Row i of a bucketed encode depends only on request i's seed — the
+    property that lets tests replay the exact embeds into solo
+    generate."""
+    params = init_params(jax.random.PRNGKey(0), VLM)
+    enc = IntakeEncoder(params, VLM)
+    rng = np.random.default_rng(1)
+    text = rng.integers(0, 97, (5,)).astype(np.int32)
+    reqs = [MultimodalRequest((ImageSegment(9), TextSegment(text)),
+                              max_new=2, seed=100 + i) for i in range(3)]
+    burst = enc.encode_burst(reqs)
+    for r, e in zip(reqs, burst):
+        np.testing.assert_array_equal(enc.encode_request(r), e)
+    # different seeds -> different frontend embeds (same text)
+    assert not np.array_equal(burst[0][:9], burst[1][:9])
+    np.testing.assert_array_equal(burst[0][9:], burst[1][9:])
+
+
+@pytest.mark.fast
+def test_text_segment_matches_token_embedding_path():
+    """An intake text segment IS the token path: table lookup + sqrt(d)
+    scaling, bit-identical to what `forward(tokens=...)` embeds."""
+    from repro.models.transformer import embed_tokens
+    params = init_params(jax.random.PRNGKey(0), VLM)
+    enc = IntakeEncoder(params, VLM)
+    toks = np.arange(6, dtype=np.int32)
+    e = enc.encode_request(MultimodalRequest((TextSegment(toks),), max_new=1))
+    ref = np.asarray(embed_tokens(params, VLM, jnp.asarray(toks)), np.float32)
+    np.testing.assert_array_equal(e, ref)
+
+
+@pytest.mark.fast
+def test_encoder_rejects_foreign_segments_and_unknown_frontend():
+    params = init_params(jax.random.PRNGKey(0), AUDIO)
+    enc = IntakeEncoder(params, AUDIO)
+    with pytest.raises(ValueError, match="image"):
+        enc.encode_burst([MultimodalRequest((ImageSegment(4),), max_new=1)])
+    import dataclasses
+    bad = dataclasses.replace(AUDIO, frontend="retina_v9")
+    with pytest.raises(ValueError, match="retina_v9"):
+        IntakeEncoder(params, bad)
+
+
+@pytest.mark.fast
+def test_submit_time_validation_protects_the_queue():
+    """Invalid multimodal/embeds submissions raise AT SUBMIT — a poll-time
+    rejection would drop the whole admission burst the bad request rode
+    in on."""
+    params = init_params(jax.random.PRNGKey(0), VLM)
+    sched = ContinuousScheduler(params, VLM, ECFG, _ccfg())
+    with pytest.raises(ValueError, match="audio"):
+        sched.submit_multimodal(MultimodalRequest((AudioSegment(4),),
+                                                  max_new=2))
+    with pytest.raises(ValueError, match="exceeds"):    # max_prompt_len=40
+        sched.submit_multimodal(MultimodalRequest((ImageSegment(64),),
+                                                  max_new=2))
+    with pytest.raises(ValueError, match="d_model"):
+        sched.submit_embeds(np.zeros((4, 3), np.float32), 2)
+    with pytest.raises(ValueError, match="exceeds"):
+        sched.submit_embeds(np.zeros((60, VLM.d_model), np.float32), 2)
+    assert not sched.queue          # nothing slipped into the queue
+
+
+@pytest.mark.fast
+def test_positions_for_is_mixed_sequential():
+    r = MultimodalRequest((ImageSegment(4),
+                           TextSegment(np.arange(3, dtype=np.int32))),
+                          max_new=1)
+    params = init_params(jax.random.PRNGKey(0), VLM)
+    enc = IntakeEncoder(params, VLM)
+    np.testing.assert_array_equal(enc.positions_for(r),
+                                  np.asarray(mixed_positions(1, 4, 3)))
+
+
+# ------------------------------------------------- fast: layout helpers
+@pytest.mark.fast
+def test_pad_embeds_mirrors_pad_prompts():
+    d = 8
+    embs = [np.full((n, d), i, np.float32) for i, n in enumerate((5, 11))]
+    out, valid = pad_embeds(embs, bucket=8, batch=4)
+    assert out.shape == (4, 16, d) and valid.shape == (4, 16)
+    assert valid.sum() == 16
+    np.testing.assert_array_equal(out[0, :5], embs[0])
+    assert (out[0, 5:] == 0).all() and (out[2:] == 0).all()
+    with pytest.raises(ValueError, match="exceeds"):
+        pad_embeds(embs, bucket=8, max_len=10)
+
+
+@pytest.mark.fast
+def test_plan_pack_lengths_matches_plan_pack_and_pack_embeds_scatters():
+    """The planner is payload-agnostic: `plan_pack` is `plan_pack_lengths`
+    + a token fill, and `pack_embeds` writes each request's rows exactly
+    where the plan says."""
+    rng = np.random.default_rng(2)
+    lens = (5, 11, 16, 3)
+    prompts = [rng.integers(0, 97, (n,)).astype(np.int32) for n in lens]
+    pt = plan_pack(prompts, bucket=8, pack_len=32, quantum=1)
+    pl = plan_pack_lengths(lens, bucket=8, pack_len=32, quantum=1)
+    for field in ("valid", "positions", "segments", "take_last",
+                  "take_state", "row", "start", "seg", "lengths",
+                  "slot_len"):
+        np.testing.assert_array_equal(getattr(pt, field), getattr(pl, field))
+    assert (pl.tokens == 0).all()
+
+    embs = [np.full((n, 4), i + 1, np.float32) for i, n in enumerate(lens)]
+    packed = pack_embeds(pl, embs)
+    assert packed.shape == (pl.n_rows, pl.pack_len, 4)
+    for i, e in enumerate(embs):
+        r, s = pl.row[i], pl.start[i]
+        np.testing.assert_array_equal(packed[r, s:s + len(e)], e)
+    # everything outside the planned slots is zero (masked by plan.valid)
+    assert packed.sum() == sum(e.sum() for e in embs)
+
+
+# --------------------------------------------------- system: token identity
+def _solo_reference(params, cfg, enc, req, bucket=8):
+    """Solo `Engine.generate` on the SAME stub embeds (bucket-padded, the
+    documented identity scope of the bucketed layouts under position-based
+    policies)."""
+    emb, valid = pad_embeds([enc.encode_request(req)], bucket)
+    solo = Engine(params, cfg, ECFG)
+    return solo.generate(embeds=emb, valid=valid,
+                         max_new_tokens=req.max_new).tokens[0]
+
+
+@pytest.mark.system
+@pytest.mark.parametrize("cfg", [VLM, AUDIO], ids=["vlm", "audio"])
+@pytest.mark.parametrize("layout", ["bucketed", "packed"])
+def test_multimodal_continuous_matches_solo_generate(cfg, layout):
+    """vlm/audio continuous serving == solo generate on the same stub
+    embeds, per request, greedy — through admit → decode → retire →
+    recycle (6 requests on 3 rows force recycling), bucketed AND packed
+    embeds layouts."""
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ccfg = _ccfg(packed_prefill=(layout == "packed"))
+    sched = ContinuousScheduler(params, cfg, ECFG, ccfg)
+    rng = np.random.default_rng(0)
+    specs = [(9, 5, 4), (4, 11, 7), (16, 8, 8), (9, 3, 1), (4, 5, 6),
+             (16, 16, 5)]
+    reqs = _reqs(cfg, rng, specs)
+    rids = [sched.submit_multimodal(r) for r in reqs]
+    done = {r.rid: r for r in sched.run_until_empty()}
+    assert len(done) == len(specs)
+
+    enc = IntakeEncoder(params, cfg)   # fresh encoder: same seeds, same embeds
+    for rid, req in zip(rids, reqs):
+        ref = _solo_reference(params, cfg, enc, req)
+        assert done[rid].tokens.tolist() == ref.tolist(), rid
+    # the packed unpack stayed copy-free (direct packed->arena scatter)
+    if layout == "packed":
+        assert sched.core.admit_kv_copy_elems == 0
+
+
+@pytest.mark.system
+def test_mixed_text_and_multimodal_burst_one_poll():
+    """A burst mixing token prompts and multimodal requests admits in ONE
+    scheduler poll (modality-partitioned inside admit_many) and every
+    member matches its solo reference."""
+    params = init_params(jax.random.PRNGKey(0), VLM)
+    sched = ContinuousScheduler(params, VLM, ECFG,
+                                _ccfg(max_concurrency=4,
+                                      packed_prefill=True))
+    rng = np.random.default_rng(3)
+    text = rng.integers(0, 97, (7,)).astype(np.int32)
+    text2 = rng.integers(0, 97, (13,)).astype(np.int32)
+    mm = _reqs(VLM, rng, [(9, 5, 4), (4, 6, 5)])
+    rid_t = sched.submit(text, max_new=4)
+    rid_m0 = sched.submit_multimodal(mm[0])
+    rid_t2 = sched.submit(text2, max_new=6)
+    rid_m1 = sched.submit_multimodal(mm[1])
+    sched.poll()
+    assert sched.core.admitted == 4          # one poll admitted the burst
+    assert not sched.queue
+    done = {r.rid: r for r in sched.run_until_empty()}
+
+    solo = Engine(params, VLM, ECFG)
+    enc = IntakeEncoder(params, VLM)
+    for rid, t, mn in ((rid_t, text, 4), (rid_t2, text2, 6)):
+        toks, valid = pad_prompt(t, 8)
+        ref = solo.generate(tokens=toks, valid=valid,
+                            max_new_tokens=mn).tokens[0]
+        assert done[rid].tokens.tolist() == ref.tolist(), rid
+    for rid, req in ((rid_m0, mm[0]), (rid_m1, mm[1])):
+        ref = _solo_reference(params, VLM, enc, req)
+        assert done[rid].tokens.tolist() == ref.tolist(), rid
+
+
+@pytest.mark.system
+def test_text_only_multimodal_request_equals_token_submission():
+    """submit_multimodal on a text-only request degrades to the token
+    path — same tokens as a plain submit of the same ids."""
+    params = init_params(jax.random.PRNGKey(0), AUDIO)
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, 97, (9,)).astype(np.int32)
+    outs = []
+    for submit in ("token", "mm"):
+        sched = ContinuousScheduler(params, AUDIO, ECFG, _ccfg())
+        if submit == "token":
+            rid = sched.submit(toks, max_new=5)
+        else:
+            rid = sched.submit_multimodal(MultimodalRequest(
+                (TextSegment(toks),), max_new=5))
+        done = {r.rid: r for r in sched.run_until_empty()}
+        outs.append(done[rid].tokens.tolist())
+        assert sched.intake.encode_dispatches == 0   # no embeds needed
+    assert outs[0] == outs[1]
+
+
+@pytest.mark.system
+def test_embeds_admission_never_retraces():
+    """Embeds bursts obey the traced-index discipline, and token + embeds
+    bursts SHARE the fused admit executables (PrefillOut and the packed
+    prefill output are modality-blind)."""
+    params = init_params(jax.random.PRNGKey(0), VLM)
+    eng = ContinuousEngine(params, VLM, ECFG, _ccfg(packed_prefill=True))
+    enc = IntakeEncoder(params, VLM)
+    rng = np.random.default_rng(5)
+    for wave in range(2):              # same lengths, rotating slots
+        reqs = _reqs(VLM, rng, [(9, 7, 2), (4, 4, 2)])
+        embs = enc.encode_burst(reqs)
+        slots = eng.admit_many([(e, r.max_new) for e, r in zip(embs, reqs)])
+        while eng.n_occupied:
+            eng.decode_block()
+        eng.pop_completed()
+        assert len(slots) == 2
+    assert all(fn._cache_size() == 1 for fn in eng._padmit_fns.values())
+    assert len(eng._padmit_fns) == 1
+    # a token burst with the same packed layout reuses the SAME executable
+    toks = [rng.integers(0, 97, (n,)).astype(np.int32) for n in (16, 8)]
+    eng.admit_many([(t, 2) for t in toks])
+    assert len(eng._padmit_fns) == 1
