@@ -570,6 +570,179 @@ def multimodal_trace(quick=False, n_req=24, write_json=True):
 
 
 # --------------------------------------------------------------------------- #
+# prefix reuse: shared system prompts through the radix tree + paged pool
+# --------------------------------------------------------------------------- #
+
+PR_PAGE = 16                  # page size; SYS_LEN must NOT need to divide it
+SYS_LEN, SYS_K = 64, 4        # shared system prompts: length, distinct count
+PR_TAIL = (4, 16)             # unique user tail per request
+PR_SHORT_NEW, PR_LONG_NEW, PR_P_LONG = 3, 8, 0.25
+PREFIX_REF_MIN = 0.70         # gated: >=70% of shared tokens by reference
+
+
+def _prefix_trace(n_req: int, n_sys: int, seed: int = 17):
+    """Requests over `n_sys` shared system prompts: each is one system
+    prompt plus a unique user tail, with bimodal decode lengths — the
+    serving regime where the prompt KV of the shared prefix should be paid
+    for once (DESIGN.md §5)."""
+    rng = np.random.default_rng(seed)
+    V = TRACE_CFG.vocab_size
+    sys_prompts = [rng.integers(0, V, (SYS_LEN,)).astype(np.int32)
+                   for _ in range(n_sys)]
+    reqs = []
+    for _ in range(n_req):
+        s = sys_prompts[int(rng.integers(n_sys))]
+        tail = rng.integers(0, V, (int(rng.integers(*PR_TAIL)),)).astype(
+            np.int32)
+        max_new = PR_LONG_NEW if rng.random() < PR_P_LONG else PR_SHORT_NEW
+        reqs.append((np.concatenate([s, tail]), max_new))
+    return sys_prompts, reqs
+
+
+def _prefix_engine(params, ecfg, prefix: bool):
+    from repro.serving import ContinuousEngine
+    return ContinuousEngine(params, TRACE_CFG, ecfg, ContinuousConfig(
+        max_concurrency=4, prompt_bucket=PROMPT_BUCKET,
+        max_prompt_len=SYS_LEN + PROMPT_BUCKET, max_new_cap=PR_LONG_NEW,
+        sync_every=SYNC_EVERY, page_size=PR_PAGE, prefix_cache=prefix))
+
+
+def _prefix_drain(core):
+    done = {}
+    while core._occupied:
+        core.decode_block()
+        for c in core.pop_completed():
+            done[c.slot] = c.tokens.tolist()
+    return done
+
+
+def _prefix_run(core, reqs, burst=4):
+    """Admit in bursts, drain each; returns (wall_s, tokens-per-request)."""
+    outs = []
+    t0 = time.perf_counter()
+    for i in range(0, len(reqs), burst):
+        slots = core.admit_many(reqs[i:i + burst])
+        done = _prefix_drain(core)
+        outs.extend(done[s] for s in slots)
+    return time.perf_counter() - t0, outs
+
+
+def prefix_reuse_trace(quick=False, n_req=32, n_sys=SYS_K, write_json=True):
+    """Shared-system-prompt trace through the paged pool, WITH and WITHOUT
+    the radix-tree prefix cache (both engines paged — the no-reuse run
+    isolates exactly the reuse win, not the paging change).
+
+    Drive: a seed burst (one request per system prompt) cold-misses and
+    populates the tree, one warm-up hit burst compiles the ctx-prefill
+    executables, then the measured trace admits entirely by prefix hit.
+
+    Asserted claims:
+      * >= PREFIX_REF_MIN of all shared-prefix prompt tokens over the whole
+        run (cold seeds included) were admitted by PAGE REFERENCE instead
+        of prefill compute — the tentpole acceptance bar;
+      * the measured phase referenced every one of its shared tokens and
+        dispatched strictly fewer prefill tokens than the no-reuse run;
+      * both engines emit token-identical streams per request (greedy) —
+        reuse is a scheduling/storage change, not a model change;
+      * page-pool accounting closes: every row page returns at retirement,
+        so end-state residency is exactly the tree's resident pages.
+    """
+    del quick                 # deterministic counters; one pass either way
+    params = init_params(jax.random.PRNGKey(0), TRACE_CFG)
+    ecfg = EngineConfig(mode="uniform",
+                        policy=PolicyConfig("sliding_window"),
+                        budget_abs=PROMPT_BUCKET // 2, bucket=4, min_budget=4)
+    sys_prompts, reqs = _prefix_trace(n_req, n_sys)
+    rng = np.random.default_rng(23)
+    V = TRACE_CFG.vocab_size
+    seeds = [(np.concatenate([s, rng.integers(0, V, (5,)).astype(np.int32)]),
+              PR_SHORT_NEW) for s in sys_prompts]
+    warm = [(np.concatenate([sys_prompts[i % n_sys],
+                             rng.integers(0, V, (9,)).astype(np.int32)]),
+             PR_SHORT_NEW) for i in range(4)]
+
+    ms, outs, occ = {}, {}, {}
+    for name, use_prefix in (("reuse", True), ("no_reuse", False)):
+        core = _prefix_engine(params, ecfg, use_prefix)
+        _prefix_run(core, seeds)      # cold: populate tree, compile miss path
+        _prefix_run(core, warm)       # compile the ctx-prefill hit path
+        occ[name + "_peak"] = core.pool_occupancy
+        c0 = (core.prompt_tokens, core.prefill_pad_tokens,
+              core.prompt_tokens_referenced, core.prefix_hits)
+        wall, toks = _prefix_run(core, reqs)
+        d_prompt, d_pad, d_ref, d_hits = (
+            b - a for a, b in zip(c0, (core.prompt_tokens,
+                                       core.prefill_pad_tokens,
+                                       core.prompt_tokens_referenced,
+                                       core.prefix_hits)))
+        outs[name] = toks
+        shared_total = (n_req + len(seeds) + len(warm)) * SYS_LEN
+        ms[name] = {
+            "wall_s": round(wall, 4),
+            "prompt_tokens": int(d_prompt),
+            "prefill_pad_tokens": int(d_pad),
+            "prompt_tokens_referenced": int(d_ref),
+            "prefix_hits": int(d_hits),
+            "referenced_frac_total": round(
+                core.prompt_tokens_referenced / shared_total, 3),
+            "pool_pages": core.pool_pages,
+            "pool_occupancy_end": round(core.pool_occupancy, 3),
+            "prefix_nodes": core._prefix.n_nodes if use_prefix else 0,
+            "prefix_evictions": core._prefix.evictions if use_prefix else 0,
+        }
+        # accounting closes: all rows retired, so residency == tree pages
+        resident = core.pool_pages_resident
+        tree = core._prefix.resident_pages if use_prefix else 0
+        assert resident == tree, (resident, tree)
+
+    rm, nm = ms["reuse"], ms["no_reuse"]
+    assert outs["reuse"] == outs["no_reuse"]       # scheduling, not model
+    assert rm["prompt_tokens_referenced"] == n_req * SYS_LEN, rm
+    assert rm["prefill_pad_tokens"] < nm["prefill_pad_tokens"], (rm, nm)
+    assert rm["referenced_frac_total"] >= PREFIX_REF_MIN, rm
+    assert nm["prompt_tokens_referenced"] == 0, nm
+
+    record = {
+        "bench": "prefix_reuse",
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "n_req": n_req,
+        "n_sys_prompts": n_sys,
+        "sys_len": SYS_LEN,
+        "page_size": PR_PAGE,
+        "max_new": {"short": PR_SHORT_NEW, "long": PR_LONG_NEW,
+                    "p_long": PR_P_LONG},
+        "reuse": rm,
+        "no_reuse": nm,
+        "prefill_token_ratio": round(
+            rm["prefill_pad_tokens"] / max(nm["prefill_pad_tokens"], 1), 3),
+        "speedup_reuse_vs_no_reuse": round(
+            nm["wall_s"] / max(rm["wall_s"], 1e-9), 3),
+    }
+    if write_json:
+        _append_json(record)
+
+    return [
+        row(f"prefix_{n}", ms[n]["wall_s"] * 1e6,
+            f"wall_ms={ms[n]['wall_s']*1e3:.1f};"
+            f"prefill_pad_tokens={ms[n]['prefill_pad_tokens']};"
+            f"referenced={ms[n]['prompt_tokens_referenced']};"
+            f"hits={ms[n]['prefix_hits']};"
+            f"pool_occ={ms[n]['pool_occupancy_end']:.2f}")
+        for n in ms
+    ] + [
+        row("prefix_reuse_savings", 0.0,
+            f"referenced_frac={rm['referenced_frac_total']:.2f}"
+            f"(gate>={PREFIX_REF_MIN});"
+            f"prefill_tokens={nm['prefill_pad_tokens']}->"
+            f"{rm['prefill_pad_tokens']}"
+            f"({record['prefill_token_ratio']:.2f}x);"
+            f"wall_ratio={record['speedup_reuse_vs_no_reuse']:.2f}x;"
+            f"n_req={n_req};K={n_sys};sys_len={SYS_LEN}"),
+    ]
+
+
+# --------------------------------------------------------------------------- #
 # CI smoke + bench-regression gate
 # --------------------------------------------------------------------------- #
 
@@ -672,10 +845,15 @@ def smoke():
     # copy-free direct scatter — all counter asserts, no timing
     for r in multimodal_trace(n_req=6, write_json=False):
         print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    # tiny shared-prefix trace: radix-tree reuse gate (>=70% of shared
+    # tokens by page reference), identity reuse==no_reuse, pool accounting
+    for r in prefix_reuse_trace(n_req=8, n_sys=2, write_json=False):
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
     print("serving_bench smoke OK")
 
 
-ALL = [serving_trace, admission_trace, multimodal_trace]
+ALL = [serving_trace, admission_trace, multimodal_trace,
+       prefix_reuse_trace]
 
 
 if __name__ == "__main__":
@@ -691,5 +869,6 @@ if __name__ == "__main__":
     else:
         for r in serving_trace(quick=args.quick, policy=args.policy) \
                 + admission_trace(quick=args.quick) \
-                + multimodal_trace(quick=args.quick):
+                + multimodal_trace(quick=args.quick) \
+                + prefix_reuse_trace(quick=args.quick):
             print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")

@@ -52,6 +52,12 @@ esac
 echo "== quickstart example =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py
 
+echo "== paged serving launcher (page tables + prefix cache) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.serve \
+    --arch mistral-7b --reduced --batching continuous --mode uniform \
+    --batch 4 --max-concurrency 2 --prompt-len 32 --max-new 8 \
+    --page-size 8 --prefix-cache
+
 echo "== serving bench smoke + regression gate =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serving_bench --smoke
 

@@ -148,6 +148,38 @@ def plan_cache_bytes(plan: BudgetPlan, batch: int, kv_heads: int, head_dim: int,
 
 
 # --------------------------------------------------------------------------- #
+# paged arenas: tier budgets as page quotas (core/paging.py)
+# --------------------------------------------------------------------------- #
+
+def page_quota(budget: int, page_size: int) -> int:
+    """Pages one (layer, row) of a `budget`-slot tier can occupy at most:
+    ceil(budget / page_size).  Under paging this IS the tier budget — the
+    arena's slot count stays `budget`, but the quota is only *reached* by
+    rows that actually fill the arena; `paging.pages_needed` gives the
+    tight per-request bound below it."""
+    assert page_size > 0
+    return -(-int(budget) // int(page_size))
+
+
+def plan_page_quota(plan: BudgetPlan, page_size: int) -> int:
+    """Worst-case pages ONE row needs across all layers of a plan — the
+    paged reading of Algorithm 1's output: squeezed (G3) layers hold
+    ``page_quota(b_small)`` pages, boosted layers ``page_quota(b_big)``."""
+    return (plan.n_small * page_quota(plan.b_small, page_size)
+            + plan.n_big * page_quota(plan.b_big, page_size))
+
+
+def plan_pool_pages(plan: BudgetPlan, batch: int, page_size: int,
+                    prefix_pages: int = 0) -> int:
+    """Global pool size for a paged engine: the reserved null page, the
+    worst-case row demand (every row at quota), and the prefix cache's
+    residency headroom.  Sized so row allocation can always succeed —
+    prefix pages are reclaimable (LRU leaf eviction) whenever rows need the
+    space back."""
+    return 1 + batch * plan_page_quota(plan, page_size) + int(prefix_pages)
+
+
+# --------------------------------------------------------------------------- #
 # recurrent layers: the fixed-cost tier
 # --------------------------------------------------------------------------- #
 

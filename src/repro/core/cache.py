@@ -54,6 +54,20 @@ def compact(
 
     This is Algorithm 1 line 12 + the first `C_seq` application: the full
     prefill KV of a layer tier is squeezed into its allocated arena.
+
+    Paged contract (core/paging.py): `top_k` returns indices in priority
+    order and the `jnp.sort` restores ORIGINAL slot order, so the valid
+    slots of a compacted row form a contiguous PREFIX of the arena whenever
+    the input's valid slots did (the plain right-padded prefill layout).
+    Decode then fills empties in index order (`write_token`: empties share
+    priority -BIG and argmin takes the first), so a row that enters with
+    `t` tokens and may write `max_new - 1` more never touches a slot past
+    ``min(budget, t + max_new - 1)`` — `paging.pages_needed` turns that into
+    a per-row page count and sequence-wise squeezing releases the tail
+    pages to the pool instead of leaving torn half-pages resident.  The
+    context-prefill layout (valid ctx | ctx padding | valid suffix | pad)
+    breaks the prefix precondition; `sort_slots` restores it after
+    compaction.
     """
     P = pos.shape[-1]
     assert budget <= P, f"budget {budget} > prefill len {P}: use pad_cache"
@@ -67,6 +81,34 @@ def compact(
         pos=jnp.take_along_axis(pos, idx_sorted, axis=-1),
         score=jnp.take_along_axis(score, idx_sorted, axis=-1),
     )
+
+
+def sort_slots(cache: SlotCache) -> SlotCache:
+    """Canonicalize slot order: ascending position, empties last.
+
+    `compact` preserves the INPUT's slot order, which for the plain prefill
+    layout already is position order with empties trailing.  The
+    context-prefill layout interleaves differently (gathered prefix pages,
+    then the ctx region's padding, then the computed suffix), so when the
+    budget exceeds the valid count, `compact`'s keep-set retains ctx-region
+    empties BETWEEN the ctx and suffix valids.  A stable sort on
+    ``pos (empties -> +inf)`` restores the exact slot order the plain path
+    produces — making paged prefix-hit admissions slot-for-slot identical
+    to cold admissions (and re-establishing the valid-prefix invariant that
+    `paging.pages_needed` relies on).  Empties are interchangeable (pos -1,
+    score 0, masked k/v), so stability only matters for determinism.
+    """
+    big = jnp.iinfo(jnp.int32).max
+    idx = jnp.argsort(jnp.where(cache.pos < 0, big, cache.pos),
+                      axis=-1, stable=True).astype(jnp.int32)
+
+    def gather(a):
+        ix = idx.reshape(idx.shape + (1,) * (a.ndim - idx.ndim))
+        return jnp.take_along_axis(a, ix, axis=2)
+
+    return SlotCache(k=gather(cache.k), v=gather(cache.v),
+                     pos=jnp.take_along_axis(cache.pos, idx, axis=-1),
+                     score=jnp.take_along_axis(cache.score, idx, axis=-1))
 
 
 def pad_cache(cache: SlotCache, slots: int) -> SlotCache:
@@ -211,12 +253,36 @@ def write_token(
     statistic the Pallas decode kernel produces for free.
     """
     k, v, pos, score = layer_cache
+    pos, score, victim = write_token_meta(pol, pos, score, t, slot_probs)
+    b_idx = jnp.arange(pos.shape[0])
+    k = k.at[b_idx, victim].set(k_new[:, 0])
+    v = v.at[b_idx, victim].set(v_new[:, 0])
+    return SlotCache(k, v, pos, score)
+
+
+def write_token_meta(
+    pol: PolicyConfig,
+    pos: jnp.ndarray,          # [B, S]
+    score: jnp.ndarray,        # [B, S]
+    t: jnp.ndarray,            # [B]
+    slot_probs: jnp.ndarray,   # [B, S+1]
+):
+    """The metadata half of `write_token`: score fold, victim selection,
+    pos/score update.  Returns ``(pos, score, victim [B])``.
+
+    Shared with the paged decode path (`serving/decode.py`), where the k/v
+    write cannot happen in place — the victim slot lives at
+    ``(tbl[victim // page_size], victim % page_size)`` of the global pool,
+    so the layer scan emits a write RECORD and the pool is updated in one
+    batched scatter afterwards (`paging.write_decode_records`).  Keeping
+    victim selection in one function is what makes paged and contiguous
+    decode bit-identical: same pos/score stream -> same victims -> same
+    arena contents, wherever the bytes live.
+    """
     score = score + slot_probs[:, :-1]
     pri = keep_priority(pol, pos, score, t, pos.shape[-1])    # [B, S]
     victim = jnp.argmin(pri, axis=-1)                         # [B]
     b_idx = jnp.arange(pos.shape[0])
-    k = k.at[b_idx, victim].set(k_new[:, 0])
-    v = v.at[b_idx, victim].set(v_new[:, 0])
     pos = pos.at[b_idx, victim].set(t.astype(jnp.int32))
     score = score.at[b_idx, victim].set(slot_probs[:, -1])
-    return SlotCache(k, v, pos, score)
+    return pos, score, victim

@@ -1,0 +1,283 @@
+"""Paged KV arenas: fixed-size pages in one global pool (DESIGN.md §3).
+
+The contiguous budget-tier arenas (`core/cache.py`) couple `max_concurrency`
+to the worst-case budget: every row owns `budget` physical slots per layer
+whether it uses them or not.  This module splits the storage dimension off:
+
+  * **the pool** (`KVPool`) — ONE device array pair ``[N_pages, page_size,
+    Hkv, hd]`` holding every KV page of every row AND the prefix cache's
+    resident pages (`serving/prefix.py`).  Page 0 is the reserved **null
+    page**: never allocated, it absorbs the unconditional eviction writes of
+    retired (frozen) rows, whose slots are masked by ``pos = -1`` and whose
+    page-table rows are zeroed at clear — stale bits land somewhere harmless
+    instead of in a page another row now owns.
+  * **the tier** (`PagedTier`) — the per-layer/per-row *metadata* of a budget
+    tier: an int32 page table ``tbl [L, B, pages_per_row]`` plus the same
+    ``pos``/``score`` slot arrays the contiguous `SlotCache` carries.  Slot
+    ``s`` of a row lives at ``(tbl[l, b, s // page_size], s % page_size)``.
+    Table entries are **data** (traced int32), so gathers/scatters compile
+    once and never retrace when rows move to different pages.
+  * **the allocator** (`PagePool`) — the host-side free list + refcounts.
+    Rows allocate privately-owned pages at admission (only as many as the
+    request can actually touch — `pages_needed`, the page-release bound
+    `compact()` documents) and free them wholesale at retirement; the prefix
+    cache owns its resident pages with the same refcounts and releases them
+    through LRU leaf eviction when the pool runs tight.
+
+Scatter convention: a page id equal to ``N_pages`` (one past the pool) is
+the **drop sentinel** — `.at[ids].set(..., mode="drop")` discards it, the
+exact trick `core.cache.insert_rows` uses for pad rows — and the id stored
+into a device page table is remapped to the null page 0.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class KVPool(NamedTuple):
+    """The global paged KV storage (device).  Shapes [N_pages, psize, Hkv, hd]."""
+    kp: jnp.ndarray
+    vp: jnp.ndarray
+
+    @property
+    def n_pages(self) -> int:
+        return self.kp.shape[0]
+
+    @property
+    def page_size(self) -> int:
+        return self.kp.shape[1]
+
+
+class PagedTier(NamedTuple):
+    """Metadata of one budget tier under paging — the `SlotCache` with its
+    k/v storage moved into the `KVPool` and replaced by a page table."""
+    tbl: jnp.ndarray     # [L, B, npp] int32 page ids (0 = null page)
+    pos: jnp.ndarray     # [L, B, S] int32 original positions, -1 = empty
+    score: jnp.ndarray   # [L, B, S] float32 accumulated H2O mass
+
+    @property
+    def n_slots(self) -> int:
+        return self.pos.shape[-1]
+
+    @property
+    def n_layers(self) -> int:
+        return self.pos.shape[0]
+
+    @property
+    def pages_per_row(self) -> int:
+        return self.tbl.shape[-1]
+
+
+def pages_for(slots: int, page_size: int) -> int:
+    """Pages a `slots`-slot arena row spans: ceil(slots / page_size)."""
+    return -(-max(int(slots), 1) // int(page_size))
+
+
+def pages_needed(t, budget: int, max_new: int, page_size: int) -> int:
+    """Tight per-(layer, row) page bound for one admitted request.
+
+    After compaction the live slots form a PREFIX of the arena row (see
+    `core.cache.compact`), and decode fills empties in index order, so a
+    request that enters with ``t`` prompt slots and may emit ``max_new``
+    tokens (``max_new - 1`` decode KV writes — the first token samples off
+    the prefill logits) can never touch a slot past
+    ``min(budget, t + max_new - 1)``.  Pages beyond that bound stay the
+    null page: sequence-wise squeezing releases them to the pool instead of
+    leaving torn half-pages resident.
+    """
+    used = min(int(budget), max(int(t), 0) + max(int(max_new), 1) - 1)
+    return pages_for(max(used, 1), page_size)
+
+
+def empty_pool(n_pages: int, page_size: int, kv_heads: int, head_dim: int,
+               dtype=jnp.bfloat16) -> KVPool:
+    shape = (n_pages, page_size, kv_heads, head_dim)
+    return KVPool(kp=jnp.zeros(shape, dtype), vp=jnp.zeros(shape, dtype))
+
+
+def empty_paged_tier(n_layers: int, batch: int, slots: int,
+                     page_size: int) -> PagedTier:
+    return PagedTier(
+        tbl=jnp.zeros((n_layers, batch, pages_for(slots, page_size)),
+                      jnp.int32),
+        pos=jnp.full((n_layers, batch, slots), -1, jnp.int32),
+        score=jnp.zeros((n_layers, batch, slots), jnp.float32),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# device gathers / scatters (all indices are traced data — zero retrace)
+# --------------------------------------------------------------------------- #
+
+def gather_layer_pages(pool: KVPool, tbl_row: jnp.ndarray, slots: int):
+    """One layer's arena view for a row set: ``tbl_row [B, npp]`` ->
+    (k, v) each [B, slots, Hkv, hd].  The last page of a row may extend past
+    `slots` (budgets need not be page multiples); the tail is sliced off."""
+    B, npp = tbl_row.shape
+    psize = pool.page_size
+
+    def g(a):
+        return a[tbl_row].reshape(B, npp * psize, *a.shape[2:])[:, :slots]
+
+    return g(pool.kp), g(pool.vp)
+
+
+def _chunked(a: jnp.ndarray, psize: int) -> jnp.ndarray:
+    """[L, B, S, ...] -> [L, B, ceil(S/psize), psize, ...] (zero-padded tail).
+
+    The pad slots mirror `gather_layer_pages`'s tail slice: they occupy the
+    last page's unused capacity and are never read back."""
+    L, B, S = a.shape[:3]
+    nch = pages_for(S, psize)
+    pad = [(0, 0), (0, 0), (0, nch * psize - S)] + [(0, 0)] * (a.ndim - 3)
+    return jnp.pad(a, pad).reshape(L, B, nch, psize, *a.shape[3:])
+
+
+def scatter_rows_to_pages(pool: KVPool, k: jnp.ndarray, v: jnp.ndarray,
+                          tbl: jnp.ndarray) -> KVPool:
+    """Write admitted rows' [L, NB, S, Hkv, hd] KV into their pages.
+
+    ``tbl [L, NB, npp]`` carries the drop sentinel (``pool.n_pages``) for
+    pad rows of a partial admit batch AND for the released tail pages of the
+    `pages_needed` bound — both vanish in the ``mode="drop"`` scatter."""
+    psize = pool.page_size
+    kc = _chunked(k, psize).astype(pool.kp.dtype)
+    vc = _chunked(v, psize).astype(pool.vp.dtype)
+    return KVPool(kp=pool.kp.at[tbl].set(kc, mode="drop"),
+                  vp=pool.vp.at[tbl].set(vc, mode="drop"))
+
+
+def insert_tier_rows(tier: PagedTier, rows_cache, rows, tbl: jnp.ndarray,
+                     sentinel: int) -> PagedTier:
+    """Paged counterpart of `core.cache.insert_rows` (metadata half).
+
+    Scatters the admitted rows' pos/score slot arrays and their page-table
+    rows at traced row indices; `sentinel` entries (pad rows / released tail
+    pages) remap to the null page 0 in the stored table — the K/V payload
+    itself goes to the pool via `scatter_rows_to_pages`, where the same
+    sentinel drops the write."""
+    return PagedTier(
+        tbl=tier.tbl.at[:, rows].set(
+            jnp.where(tbl >= sentinel, 0, tbl).astype(jnp.int32),
+            mode="drop"),
+        pos=tier.pos.at[:, rows].set(rows_cache.pos.astype(jnp.int32),
+                                     mode="drop"),
+        score=tier.score.at[:, rows].set(
+            rows_cache.score.astype(tier.score.dtype), mode="drop"),
+    )
+
+
+def clear_tier_row(tier: PagedTier, row) -> PagedTier:
+    """Paged `clear_row`: empty every slot AND point the row's page table at
+    the null page, so a frozen row's unconditional eviction writes scribble
+    into page 0 — never into pages the allocator has since handed to another
+    row or to the prefix cache."""
+    L, _, S = tier.pos.shape
+    npp = tier.tbl.shape[-1]
+    return PagedTier(
+        tbl=jax.lax.dynamic_update_slice_in_dim(
+            tier.tbl, jnp.zeros((L, 1, npp), tier.tbl.dtype), row, axis=1),
+        pos=jax.lax.dynamic_update_slice_in_dim(
+            tier.pos, jnp.full((L, 1, S), -1, tier.pos.dtype), row, axis=1),
+        score=jax.lax.dynamic_update_slice_in_dim(
+            tier.score, jnp.zeros((L, 1, S), tier.score.dtype), row, axis=1),
+    )
+
+
+def write_decode_records(pool: KVPool, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                         pages: jnp.ndarray, offs: jnp.ndarray) -> KVPool:
+    """Apply one decode step's deferred KV writes in ONE batched scatter.
+
+    The layer scan reads the pool as a closure constant and emits per-layer
+    write records ``(k_new, v_new, page, offset)`` as scan outputs instead
+    of scattering inside the `lax.cond` tier branches (which would fork the
+    pool per branch); this lands all ``[L_attn, B]`` writes afterwards.
+    Frozen rows' records target the null page 0 (their tables were zeroed at
+    clear), where colliding writes are harmless scribbles."""
+    return KVPool(
+        kp=pool.kp.at[pages, offs].set(k_new.astype(pool.kp.dtype)),
+        vp=pool.vp.at[pages, offs].set(v_new.astype(pool.vp.dtype)),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# host-side allocator
+# --------------------------------------------------------------------------- #
+
+class PagePool:
+    """Free list + refcounts over the `KVPool`'s page axis (host side).
+
+    Page 0 is reserved (the null page — permanently pinned).  `alloc`
+    returns page ids with refcount 1; `incref`/`decref` implement sharing
+    (the prefix cache pins a matched path for the duration of an admission
+    burst so LRU eviction cannot free pages a request is about to gather
+    from); a page returns to the free list when its refcount reaches 0.
+
+    ``evict_hook`` (set by `serving.prefix.PrefixCache`) is called when an
+    allocation cannot be satisfied; it should release refcount-0-pinnable
+    pages (LRU leaves) and return True while progress is possible.
+    """
+
+    def __init__(self, n_pages: int):
+        assert n_pages >= 2, "pool needs the null page plus at least one"
+        self.n_pages = int(n_pages)
+        self.refcount = np.zeros(self.n_pages, np.int32)
+        self.refcount[0] = 1                      # null page: never allocated
+        self._free: List[int] = list(range(1, self.n_pages))
+        self.evict_hook: Optional[Callable[[], bool]] = None
+
+    @property
+    def sentinel(self) -> int:
+        """The drop-sentinel page id (one past the pool)."""
+        return self.n_pages
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_resident(self) -> int:
+        """Allocated pages (excluding the null page)."""
+        return self.n_pages - 1 - len(self._free)
+
+    def alloc(self, n: int) -> np.ndarray:
+        """Allocate `n` pages (refcount 1 each), evicting through
+        ``evict_hook`` under pressure.  Raises RuntimeError when the pool is
+        genuinely exhausted — by construction the pool is sized for the
+        worst-case row demand, so this means the prefix cache's *pinned*
+        pages exceeded their headroom."""
+        while len(self._free) < n:
+            if self.evict_hook is None or not self.evict_hook():
+                raise RuntimeError(
+                    f"page pool exhausted: need {n}, free {len(self._free)} "
+                    f"of {self.n_pages} (pinned prefix pages exceed headroom)")
+        ids = np.asarray([self._free.pop(0) for _ in range(n)], np.int32)
+        self.refcount[ids] = 1
+        return ids
+
+    def try_alloc(self, n: int) -> Optional[np.ndarray]:
+        """`alloc` that returns None instead of raising (prefix-cache
+        insertion is best-effort: a full pool skips caching, never fails
+        admission)."""
+        while len(self._free) < n:
+            if self.evict_hook is None or not self.evict_hook():
+                return None
+        return self.alloc(n)
+
+    def incref(self, ids) -> None:
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        self.refcount[ids] += 1
+
+    def decref(self, ids) -> None:
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        assert (self.refcount[ids] > 0).all(), "double free"
+        self.refcount[ids] -= 1
+        for i in ids[self.refcount[ids] == 0]:
+            assert i != 0
+            self._free.append(int(i))
+
+    free = decref    # rows free privately-owned (refcount-1) pages

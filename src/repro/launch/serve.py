@@ -102,7 +102,9 @@ def _run_continuous(params, cfg, ecfg, args):
         max_prompt_len=args.prompt_len, max_new_cap=args.max_new,
         sync_every=args.sync_every,
         length_sorted=not args.no_length_sort,
-        packed_prefill=args.packed_prefill)
+        packed_prefill=args.packed_prefill,
+        page_size=args.page_size,
+        prefix_cache=args.prefix_cache)
     sched = ContinuousScheduler(params, cfg, ecfg, ccfg, seed=args.seed)
     print(f"capability: {sched.capability.describe()}")
     rng = np.random.default_rng(args.seed)
@@ -113,6 +115,11 @@ def _run_continuous(params, cfg, ecfg, args):
         raise SystemExit(f"--n-patches/--n-frames ({n_front}) must leave "
                          f"room for text below --prompt-len "
                          f"({args.prompt_len})")
+    # with the prefix cache on, traffic shares a "system prompt" so later
+    # arrivals actually hit the radix tree
+    shared = rng.integers(0, cfg.vocab_size,
+                          (max(args.page_size, args.prompt_len // 2),)
+                          ).astype(np.int32) if args.prefix_cache else None
     t0 = time.perf_counter()
     for i in range(args.batch):
         lo = max(4, (args.prompt_len - n_front) // 2)
@@ -121,6 +128,8 @@ def _run_continuous(params, cfg, ecfg, args):
         max_new = int(rng.integers(max(2, args.max_new // 4),
                                    args.max_new + 1))
         text = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
+        if shared is not None:
+            text = np.concatenate([shared, text])[:args.prompt_len]
         if kind is not None and (i % 2 == 0 or args.batch == 1):
             # frontend traffic; odd arrivals stay token prompts so the
             # admission polls see mixed text+multimodal bursts
@@ -160,6 +169,15 @@ def _run_continuous(params, cfg, ecfg, args):
           f"prefill pad tokens {core.prefill_pad_tokens} for "
           f"{core.prompt_tokens} prompt tokens"
           f" (admission={layout})")
+    if core.pool_pages:
+        print(f"page pool: {core.pool_pages} pages of {ccfg.page_size} "
+              f"tokens, occupancy {core.pool_occupancy:.2f} "
+              f"({core.pool_pages_resident} resident)")
+    if ccfg.prefix_cache and core._prefix is not None:
+        print(f"prefix cache: {core.prefix_hits} hit(s), "
+              f"{core.prompt_tokens_referenced} prompt tokens admitted by "
+              f"page reference, {core._prefix.n_nodes} resident node(s), "
+              f"{core._prefix.evictions} eviction(s)")
     enc = sched.intake
     if enc.encode_dispatches:
         print(f"intake: {enc.encode_dispatches} encoder dispatch(es) for "
@@ -190,6 +208,15 @@ def main():
                     help="packed admission: concatenate a burst's prompts "
                          "into few rows under a block-diagonal mask and "
                          "prefill them in one dispatch")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV arenas: tier slots live in fixed-size "
+                         "pages of this many tokens inside one global pool "
+                         "(0 = contiguous per-row arenas)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prefix reuse over page-aligned prompt "
+                         "chunks: shared prompts prefill once and later "
+                         "requests admit by page reference (requires "
+                         "--page-size > 0)")
     ap.add_argument("--flash-decode", action="store_true",
                     help="route decode attention through the Pallas "
                          "flash-decode kernel (interpret mode off-TPU)")

@@ -97,6 +97,7 @@ def full_attention(
     valid: Optional[jnp.ndarray] = None,        # [B, S] bool (padding mask)
     return_colsums: bool = False,   # H2O: per-key total attention mass
     segments: Optional[jnp.ndarray] = None,     # [B, S] int32 packed seg ids
+    ctx=None,                       # (k_ctx [B,C,Hkv,hd], v_ctx, pos_ctx [B,C])
 ):
     """Causal (+sliding window) attention.
 
@@ -110,6 +111,13 @@ def full_attention(
     segment) never see each other.  H2O column sums from queries with no
     visible key (the tail padding of a packed row) are dropped rather than
     softmax-uniform garbage.
+
+    ``ctx`` is the prefix-reuse hook (DESIGN.md §5): already-RoPE'd keys and
+    values of a cached prompt prefix, gathered from the page pool, attended
+    as EXTRA keys ahead of this call's own tokens (whose ``positions`` then
+    start past the prefix).  Context entries with ``pos_ctx = -1`` are
+    masked out exactly like empty cache slots.  With ``ctx`` the returned
+    colsums cover the concatenated key axis [B, Hkv, C+S].
     """
     B, S, _ = x.shape
     q, k, v = _project_qkv(p, x, positions, cfg)
@@ -117,7 +125,13 @@ def full_attention(
     qf = q.reshape(B, S, cfg.n_kv_heads, G, cfg.hd).astype(jnp.float32)
     pos1 = positions if positions.ndim == 2 else positions[..., 0]
 
-    if S > FLASH_THRESHOLD and S % FLASH_BLOCK == 0:
+    if ctx is not None:
+        # ctx prefill batches are suffix-sized (<= max_prompt_len): the
+        # quadratic naive path is the right cost model, and it concatenates
+        # the gathered prefix keys without a blockwise mask rework
+        out, colsums = _naive_attention(qf, k, v, pos1, cfg, window, valid,
+                                        return_colsums, segments, ctx=ctx)
+    elif S > FLASH_THRESHOLD and S % FLASH_BLOCK == 0:
         out, colsums = _flash_attention(qf, k, v, pos1, cfg, window, valid,
                                         return_colsums, segments=segments)
     else:
@@ -140,11 +154,21 @@ def _mask(pos_q, pos_k, window, valid_k, seg_q=None, seg_k=None):
 
 
 def _naive_attention(qf, k, v, pos1, cfg, window, valid, return_colsums,
-                     segments=None):
+                     segments=None, ctx=None):
+    pos_k, valid_k, seg_k = pos1, valid, segments
+    if ctx is not None:
+        k_ctx, v_ctx, pos_ctx = ctx
+        assert segments is None, "prefix ctx and packed prefill are exclusive"
+        k = jnp.concatenate([k_ctx.astype(k.dtype), k], axis=1)
+        v = jnp.concatenate([v_ctx.astype(v.dtype), v], axis=1)
+        pos_k = jnp.concatenate([pos_ctx, pos1], axis=1)
+        B, S = pos1.shape
+        valid_q = jnp.ones((B, S), bool) if valid is None else valid
+        valid_k = jnp.concatenate([pos_ctx >= 0, valid_q], axis=1)
     scores = jnp.einsum("bsngd,btnd->bnsgt", qf, k.astype(jnp.float32))
     scores = scores * (1.0 / math.sqrt(cfg.hd))
     scores = _softcap(scores, cfg.attn_softcap)
-    mask = _mask(pos1, pos1, window, valid, segments, segments)
+    mask = _mask(pos1, pos_k, window, valid_k, segments, seg_k)
     scores = jnp.where(mask, scores, -1e30)   # [B,1,Sq,1,Sk] broadcasts
     probs = jax.nn.softmax(scores, axis=-1)
     colsums = None
@@ -291,3 +315,36 @@ def decode_attention(
         + probs[..., S:] * v_new[:, 0, :, None, :].astype(jnp.float32)
     out = out.reshape(B, 1, cfg.q_dim).astype(x.dtype) @ p.wo
     return DecodeAttnOut(out, probs.mean(axis=2), k_new, v_new)
+
+
+def paged_decode_attention(
+    p: AttnParams,
+    x: jnp.ndarray,            # [B, 1, d]
+    t: jnp.ndarray,            # [B]
+    pool_k: jnp.ndarray,       # [N_pages, psize, Hkv, hd] global page pool
+    pool_v: jnp.ndarray,
+    page_tbl: jnp.ndarray,     # [B, npp] int32 page ids (0 = null page)
+    slot_pos: jnp.ndarray,     # [B, S_slots] original positions, -1 = empty
+    cfg,
+    window: jnp.ndarray | int = GLOBAL_WINDOW,
+    use_flash: bool = False,
+) -> DecodeAttnOut:
+    """`decode_attention` over a paged arena (core/paging.py).
+
+    One gather materializes the row set's arena view from the pool —
+    ``pool[page_tbl]`` is a traced-index gather, so page assignments are
+    data and decode never retraces when rows land on different pages — and
+    the result feeds BOTH the dense einsum and the Pallas flash-decode
+    kernel unchanged.  The last page of a row may extend past the tier's
+    slot count (budgets need not be page multiples); the tail is sliced
+    off before attention, mirroring `paging.gather_layer_pages`.
+    """
+    B, S = slot_pos.shape
+    npp = page_tbl.shape[-1]
+    psize = pool_k.shape[1]
+
+    def g(a):
+        return a[page_tbl].reshape(B, npp * psize, *a.shape[2:])[:, :S]
+
+    return decode_attention(p, x, t, g(pool_k), g(pool_v), slot_pos, cfg,
+                            window, use_flash=use_flash)

@@ -165,6 +165,7 @@ def forward(
     segments: Optional[jnp.ndarray] = None,    # [B, S] int32 packed segment ids
     state_take: Optional[jnp.ndarray] = None,  # [B, K] recurrent-state snapshots
     state_take_aligned: bool = False,          # static: takes sit on chunk ends
+    ctx=None,                                  # (k [L,B,C,Hkv,hd], v, pos [B,C])
 ) -> ForwardOut:
     """remat=True reruns each layer's interior in the backward pass so the
     layer scan saves only its carry — without it, XLA's while-loop autodiff
@@ -176,25 +177,35 @@ def forward(
     one row can carry several concatenated requests (positions reset per
     segment).  ``state_take`` [B,K] makes recurrent layers return state
     snapshots after those positions ([L, B, K, ...]) instead of row-final
-    states — one per packed segment."""
+    states — one per packed segment.
+
+    ``ctx`` is per-layer cached-prefix KV (prefix reuse, DESIGN.md §5):
+    the leading axis matches the attention-layer scan, so each layer's
+    gathered context rides the scan as an extra input.  Attention-only
+    families only — a cached prefix cannot restore a recurrent layer's
+    state, which is why the serving layer gates prefix caching to
+    attention-only models."""
     x = _embed(params, cfg, tokens, embeds)
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
 
     if cfg.is_ssm_only:
+        assert ctx is None, "prefix ctx requires attention layers"
         x, cos, ssm_state = _ssm_stack(params, cfg, x, valid, remat,
                                        segments, state_take,
                                        state_take_aligned)
         kv = scores = None
         aux = jnp.zeros((), jnp.float32)
     elif cfg.is_hybrid:
+        assert ctx is None, "prefix ctx cannot restore recurrent state"
         x, cos, kv, scores, ssm_state, aux = _hybrid_stack(
             params, cfg, x, positions, valid, collect_kv, remat,
             segments, state_take, state_take_aligned)
     else:
         x, cos, kv, scores, aux = _dense_stack(
-            params, cfg, x, positions, valid, collect_kv, remat, segments)
+            params, cfg, x, positions, valid, collect_kv, remat, segments,
+            ctx=ctx)
         ssm_state = None
 
     x = apply_norm(params["final_norm"], x, cfg)
@@ -209,14 +220,14 @@ def forward(
 
 
 def _attn_block(bp, cfg, x, positions, valid, window, collect_kv,
-                segments=None):
+                segments=None, ctx=None):
     """norm -> attention -> residual. Returns (x, cos, k, v, colsum)."""
     pre = x
     h = apply_norm(bp["attn_norm"], x, cfg)
     ap = attn_lib.AttnParams(**bp["attn"])
     out, k, v, colsum = attn_lib.full_attention(
         ap, h, positions, cfg, window, valid, return_colsums=collect_kv,
-        segments=segments)
+        segments=segments, ctx=ctx)
     if cfg.use_post_norms:
         out = apply_norm(bp["post_attn_norm"], out, cfg)
     x = x + out
@@ -244,8 +255,12 @@ def _remat(body, remat):
 
 
 def _dense_stack(params, cfg, x, positions, valid, collect_kv, remat=False,
-                 segments=None):
+                 segments=None, ctx=None):
     windows = layer_windows(cfg)
+    # cached-prefix KV rides the layer scan as extra inputs; its positions
+    # are layer-invariant (one [B, C] vector closed over)
+    ctx_xs = (ctx[0], ctx[1]) if ctx is not None else ()
+    pos_ctx = ctx[2] if ctx is not None else None
 
     def body(carry, inp):
         # re-pin the residual stream: the scan boundary loses the batch
@@ -254,16 +269,18 @@ def _dense_stack(params, cfg, x, positions, valid, collect_kv, remat=False,
         # stash fit HBM at the cost of a per-layer all-gather — only worth
         # paying when a bwd stash exists, i.e. under remat (§Perf A6/E1)
         x = hint(carry, {0: "batch", 2: "model"} if remat else {0: "batch"})
-        bp, window = inp
+        bp, window, *ctx_in = inp
+        ctx_l = (ctx_in[0], ctx_in[1], pos_ctx) if ctx_in else None
         x, cos, k, v, colsum = _attn_block(bp, cfg, x, positions, valid, window,
-                                           collect_kv, segments)
+                                           collect_kv, segments, ctx=ctx_l)
         x, aux = _ffn_block(bp, cfg, x, valid)
         outs = (cos, aux)
         if collect_kv:
             outs = outs + (k, v, colsum)
         return x, outs
 
-    x, outs = jax.lax.scan(_remat(body, remat), x, (params["layers"], windows))
+    x, outs = jax.lax.scan(_remat(body, remat), x,
+                           (params["layers"], windows) + ctx_xs)
     cos, aux = outs[0], outs[1]
     if collect_kv:
         kv, scores = (outs[2], outs[3]), outs[4]

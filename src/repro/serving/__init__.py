@@ -8,7 +8,8 @@ from repro.serving.intake import (AudioSegment, ImageSegment, IntakeEncoder,
 from repro.serving.prefill import (PackedPrefillOut, PackPlan, PrefillOut,
                                    pack_embeds, packed_prefill, pad_embeds,
                                    pad_prompt, pad_prompts, plan_pack,
-                                   plan_pack_lengths, prefill)
+                                   plan_pack_lengths, prefill, prefill_ctx)
+from repro.serving.prefix import PrefixCache, PrefixMatch
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.scheduler import (ContinuousScheduler, Request,
                                      SchedulerConfig, WaveScheduler)
@@ -18,7 +19,8 @@ __all__ = [
     "Engine", "EngineConfig", "GenerationResult",
     "PrefillOut", "prefill", "pad_prompt", "pad_prompts", "pad_embeds",
     "PackPlan", "PackedPrefillOut", "packed_prefill", "plan_pack",
-    "plan_pack_lengths", "pack_embeds",
+    "plan_pack_lengths", "pack_embeds", "prefill_ctx",
+    "PrefixCache", "PrefixMatch",
     "SamplerConfig", "sample",
     "Capability", "continuous_capability",
     "Completed", "ContinuousConfig", "ContinuousEngine", "ContinuousState",

@@ -70,12 +70,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.allocation import (BudgetPlan, RecurrentTier, recurrent_tier,
-                                   total_state_bytes)
+from repro.core.allocation import (BudgetPlan, RecurrentTier, plan_pool_pages,
+                                   recurrent_tier, total_state_bytes)
 from repro.core.cache import (SlotCache, clear_row, clear_state_row,
                               empty_cache, gather_row_segments, insert_rows,
                               insert_state_rows, pad_cache)
-from repro.core.policies import keep_priority
+from repro.core.paging import (KVPool, PagePool, clear_tier_row, empty_pool,
+                               empty_paged_tier, insert_tier_rows, pages_for,
+                               pages_needed, scatter_rows_to_pages)
+from repro.core.policies import H2O, SINK_H2O, keep_priority
 from repro.models.frontend import STUB_FRONTENDS
 from repro.models.ssm import empty_decode_state
 from repro.models.transformer import n_attn_layers
@@ -85,6 +88,7 @@ from repro.serving.engine import Engine, EngineConfig
 from repro.serving.prefill import (PrefillOut, group_by_bucket, pack_embeds,
                                    pad_embeds, pad_prompts, plan_pack,
                                    plan_pack_lengths)
+from repro.serving.prefix import PrefixCache, PrefixMatch
 from repro.serving.sampler import sample
 
 
@@ -120,6 +124,26 @@ class ContinuousConfig:
     #: `max_prompt_len`, so one long prompt never forces a row of its own
     #: shape and short bursts still fill a single row)
     pack_len: int = 0
+    #: paged KV arenas (DESIGN.md §3): 0 = contiguous per-row arenas (the
+    #: baseline), >0 = tier slots live in fixed-size pages of this many
+    #: tokens inside ONE global pool; per-row page tables are traced, so
+    #: admission / fused decode / retirement keep their zero-retrace
+    #: contract.  Any size works (no divisibility constraints); rows only
+    #: hold pages for slots they can ever fill, so short requests in big
+    #: arenas stop paying for their budget ceiling.
+    page_size: int = 0
+    #: radix-tree prefix reuse (requires `page_size`>0): admission looks
+    #: the prompt up in a host-side radix tree over page-aligned token
+    #: chunks and prefills ONLY the unmatched suffix, attending to the
+    #: cached prefix pages as read-only context.  Incompatible with
+    #: `packed_prefill`, recurrent families and score-based policies
+    #: (checked at construction).
+    prefix_cache: bool = False
+    #: page-pool headroom reserved for cached prefixes; 0 = auto (room for
+    #: ~8 full-length prompts).  Cache inserts are best-effort: under pool
+    #: pressure LRU leaves evict first, then inserts cache a shorter
+    #: prefix
+    prefix_pages: int = 0
 
     def resolved_pack_len(self) -> int:
         b = self.prompt_bucket
@@ -243,6 +267,30 @@ class ContinuousEngine:
                 f"prompt_bucket ({ccfg.prompt_bucket}) to be a multiple of "
                 f"ssm_chunk ({cfg.ssm_chunk}) so segment boundaries align "
                 f"with the SSD chunk grid")
+        if ccfg.page_size < 0:
+            raise ValueError(f"page_size must be >= 0, got {ccfg.page_size}")
+        if ccfg.prefix_cache:
+            if ccfg.page_size <= 0:
+                raise ValueError(
+                    "prefix_cache requires page_size > 0: cached prefixes "
+                    "are refcounted KV pages, there is nothing to share in "
+                    "contiguous arenas")
+            if ccfg.packed_prefill:
+                raise ValueError(
+                    "prefix_cache is incompatible with packed_prefill: a "
+                    "packed row has no per-request context region to attend "
+                    "cached pages from")
+            if self.cap.n_recurrent_layers > 0:
+                raise ValueError(
+                    "prefix_cache requires an attention-only model: cached "
+                    "KV pages cannot restore a recurrent layer's state at "
+                    "the match point")
+            if ecfg.policy.name in (H2O, SINK_H2O):
+                raise ValueError(
+                    f"prefix_cache supports position-based policies only "
+                    f"(a reused prefix is never re-prefilled, so "
+                    f"{ecfg.policy.name!r} column sums for it would be "
+                    f"partial); use sliding_window or streaming_llm")
         self.engine = Engine(params, cfg, ecfg)   # shared prefill/compaction
         self.params = params
         self.cfg = cfg
@@ -250,6 +298,9 @@ class ContinuousEngine:
         self.ccfg = ccfg
         self._has_attn = cfg.has_attention
         self._has_rec = self.cap.n_recurrent_layers > 0
+        # paged mode is an attention-tier concern; an ssm-only config with
+        # page_size set simply has no pages (the flag is a no-op)
+        self._paged = ccfg.page_size > 0 and self._has_attn
         self.plan: Optional[BudgetPlan] = None
         self.state: Optional[ContinuousState] = None
         B = ccfg.max_concurrency
@@ -294,6 +345,19 @@ class ContinuousEngine:
         self._clear_fn = None
         self._admit_fns = {}     # (admit batch NB, prompt bucket P) -> admit
         self._padmit_fns = {}    # (R, pack_len, K, NR, Pout) -> unpack+admit
+        self._insert_fns = {}    # (NB, Ptot, M) -> prefix-cache page scatter
+        # paged-arena host state (DESIGN.md §3): the page allocator and the
+        # radix tree are created with the plan (_init_state); per-slot page
+        # ids are freed back to the pool at retirement
+        self._pool: Optional[PagePool] = None
+        self._prefix: Optional[PrefixCache] = None
+        self._row_pages: List[List[int]] = [[] for _ in range(B)]
+        # prefix-reuse accounting (benchmarks/serving_bench.py): prompt
+        # tokens admitted by page REFERENCE instead of prefill compute,
+        # requests that hit the tree, and cache-insert launches
+        self.prompt_tokens_referenced = 0
+        self.prefix_hits = 0
+        self.prefix_insert_dispatches = 0
 
     # ------------------------------------------------------------ properties
     @property
@@ -309,6 +373,23 @@ class ContinuousEngine:
         return len(self._occupied)
 
     @property
+    def pool_pages(self) -> int:
+        """Usable pages in the global pool (0 until the plan is calibrated
+        or in contiguous mode); excludes the reserved null page."""
+        return self._pool.n_pages - 1 if self._pool is not None else 0
+
+    @property
+    def pool_pages_resident(self) -> int:
+        """Pages currently held by rows or the prefix cache."""
+        return self._pool.n_resident if self._pool is not None else 0
+
+    @property
+    def pool_occupancy(self) -> float:
+        """Resident fraction of the usable pool, in [0, 1]."""
+        return self.pool_pages_resident / self.pool_pages \
+            if self.pool_pages else 0.0
+
+    @property
     def state_bytes(self) -> int:
         """Persistent decode-state footprint across all rows: budgeted KV
         arenas (0 until the plan is calibrated) plus the fixed-cost
@@ -322,13 +403,19 @@ class ContinuousEngine:
     # ---------------------------------------------------------------- jit fns
     def _build_fns(self):
         has_attn, has_rec = self._has_attn, self._has_rec
+        paged = self._paged
 
         def clear(state: ContinuousState, row):
             dec = state.dec
             upd = {"active": dec.active.at[row].set(False)}
             if has_attn:
-                upd["big"] = clear_row(dec.big, row)
-                upd["small"] = clear_row(dec.small, row)
+                if paged:    # metadata-only: drop the page table, never touch
+                    # pool contents (the host frees the page ids separately)
+                    upd["big"] = clear_tier_row(dec.big, row)
+                    upd["small"] = clear_tier_row(dec.small, row)
+                else:
+                    upd["big"] = clear_row(dec.big, row)
+                    upd["small"] = clear_row(dec.small, row)
             if has_rec:
                 upd["ssm_state"] = clear_state_row(dec.ssm_state, row)
                 upd["conv_state"] = clear_state_row(dec.conv_state, row)
@@ -387,27 +474,57 @@ class ContinuousEngine:
         admission — it dominated the serving trace before this was fused.)"""
         key = (NB, P)
         if key not in self._admit_fns:
-            def admit_fn(state: ContinuousState, rows, pre, rem0, akey):
-                return self._admit_apply(state, rows, pre, rem0, akey, NB)
+            def admit_fn(state: ContinuousState, rows, pre, rem0, akey, tbls):
+                return self._admit_apply(state, rows, pre, rem0, akey, NB,
+                                         tbls)
+
+            donate0 = {} if not self._donate else {"donate_argnums": (0,)}
+            self._admit_fns[key] = jax.jit(admit_fn, **donate0)
+        return self._admit_fns[key]
+
+    def _ctx_admit_jit(self, NB: int, Psuf: int):
+        """Compiled admission for a prefix-HIT bucket: the suffix-only
+        `prefill_ctx` output (context pages + suffix, request-shaped)
+        compacts through the same Algorithm-1 machinery, but the ctx-concat
+        slot layout interleaves empties with valid tokens, so the row
+        arenas are canonicalized (`sort_slots`) back to the valid-prefix
+        layout decode's in-order empty filling relies on.  Keyed separately
+        from the plain buckets — the executables differ in the canonical
+        sort only."""
+        key = ("ctx", NB, Psuf)
+        if key not in self._admit_fns:
+            def admit_fn(state: ContinuousState, rows, pre, rem0, akey, tbls):
+                rs = self.engine.build_state(pre, self.plan, NB,
+                                             canonical=True)
+                return self._apply_rows(state, rows, rs, pre.last_logits,
+                                        rem0, akey, tbls)
 
             donate0 = {} if not self._donate else {"donate_argnums": (0,)}
             self._admit_fns[key] = jax.jit(admit_fn, **donate0)
         return self._admit_fns[key]
 
     def _admit_apply(self, state: ContinuousState, rows, pre: PrefillOut,
-                     rem0, akey, NB: int):
+                     rem0, akey, NB: int, tbls):
         """Traced tail of the bucketed admit executables: Algorithm-1
         compaction of a request-shaped `PrefillOut` into row-shaped tier
         arenas (`Engine.build_state`), then the shared `_apply_rows`
         sampling + scatter."""
         rs = self.engine.build_state(pre, self.plan, NB)  # [L, NB, S, ...]
-        return self._apply_rows(state, rows, rs, pre.last_logits, rem0, akey)
+        return self._apply_rows(state, rows, rs, pre.last_logits, rem0, akey,
+                                tbls)
 
     def _apply_rows(self, state: ContinuousState, rows, rs: DecodeState,
-                    last_logits, rem0, akey):
+                    last_logits, rem0, akey, tbls=()):
         """Traced tail shared by the bucketed AND packed admit executables:
         first-token sampling and the drop-sentinel `insert_rows` scatter of
-        pre-built row-shaped tier arenas into the persistent state."""
+        pre-built row-shaped tier arenas into the persistent state.
+
+        Paged mode receives `tbls` — host-allocated ``([Lt, NB, npp_big],
+        [Lt, NB, npp_small])`` page tables (drop sentinel ``pool.n_pages``
+        on pad rows and released tail entries) — and splits the insert:
+        pos/score metadata scatter into the tier rows while the K/V slots
+        chunk-scatter into the global pool at those pages, both with traced
+        indices (same zero-retrace contract as `insert_rows`)."""
         sc, eos = self.ecfg.sampler, self.ecfg.eos_token
         token0 = sample(last_logits, akey, sc)               # [NB]
         act0 = rem0 > 0
@@ -418,7 +535,22 @@ class ContinuousEngine:
             "t": dec.t.at[rows].set(rs.t.astype(dec.t.dtype), mode="drop"),
             "active": dec.active.at[rows].set(act0, mode="drop"),
         }
-        if self._has_attn:
+        if self._has_attn and self._paged:
+            big_tbl, small_tbl = tbls
+            sent = self._pool.sentinel
+            upd["big"] = insert_tier_rows(dec.big, rs.big, rows, big_tbl,
+                                          sent)
+            upd["small"] = insert_tier_rows(dec.small, rs.small, rows,
+                                            small_tbl, sent)
+            pool = dec.kv_pool
+            if self.plan.n_big:
+                pool = scatter_rows_to_pages(pool, rs.big.k, rs.big.v,
+                                             big_tbl)
+            if self.plan.n_small:
+                pool = scatter_rows_to_pages(pool, rs.small.k, rs.small.v,
+                                             small_tbl)
+            upd["kv_pool"] = pool
+        elif self._has_attn:
             upd["big"] = insert_rows(dec.big, rs.big, rows)
             upd["small"] = insert_rows(dec.small, rs.small, rows)
         if self._has_rec:    # fixed-cost tier: whole-row state scatter
@@ -504,7 +636,7 @@ class ContinuousEngine:
             has_attn, has_rec = self._has_attn, self._has_rec
 
             def padmit(state: ContinuousState, rows, ppre, row_idx, start,
-                       seg_of, t_req, slot_len, rem0, akey):
+                       seg_of, t_req, slot_len, rem0, akey, tbls):
                 last = ppre.seg_logits[row_idx, seg_of]          # [NR, V]
                 t32 = t_req.astype(jnp.int32)
                 big = small = is_small = tier_index = ()
@@ -534,13 +666,30 @@ class ContinuousEngine:
                     ssm = conv = ()
                 rs = DecodeState(big, small, is_small, tier_index,
                                  ssm, conv, t32)
-                return self._apply_rows(state, rows, rs, last, rem0, akey)
+                return self._apply_rows(state, rows, rs, last, rem0, akey,
+                                        tbls)
 
             donate0 = {} if not self._donate else {"donate_argnums": (0,)}
             self._padmit_fns[key] = jax.jit(padmit, **donate0)
         return self._padmit_fns[key]
 
     # ------------------------------------------------------------- state init
+    def _prefix_budget(self) -> int:
+        """Pool headroom reserved for the radix tree's resident pages."""
+        if not self.ccfg.prefix_cache:
+            return 0
+        if self.ccfg.prefix_pages:
+            return self.ccfg.prefix_pages
+        psize = self.ccfg.page_size
+        return 8 * pages_for(self.ccfg.max_prompt_len, psize) \
+            * n_attn_layers(self.cfg)
+
+    @property
+    def _cmax(self) -> int:
+        """Static page capacity of the context region in ctx-prefill
+        executables: enough pages for the longest admissible prompt."""
+        return pages_for(self.ccfg.max_prompt_len, self.ccfg.page_size)
+
     def _init_state(self) -> ContinuousState:
         cfg, plan = self.cfg, self.plan
         B = self.ccfg.max_concurrency
@@ -553,10 +702,32 @@ class ContinuousEngine:
             return empty_cache(n_layers, B, budget, cfg.n_kv_heads, cfg.hd,
                                dtype)
 
+        kv_pool = ()
         if self._has_attn:
             is_small, tier_index = make_tier_indices(plan.is_small)
-            big = tier(plan.n_big, plan.b_big)
-            small = tier(plan.n_small, plan.b_small)
+            if self._paged:
+                psize = self.ccfg.page_size
+
+                def ptier(n_layers, budget):
+                    # dummy tiers MUST be PagedTier too: the decode step
+                    # dispatches on the carried type, not the plan
+                    if n_layers == 0:
+                        return empty_paged_tier(1, B, 16, psize)
+                    return empty_paged_tier(n_layers, B, budget, psize)
+
+                big = ptier(plan.n_big, plan.b_big)
+                small = ptier(plan.n_small, plan.b_small)
+                n_pool = plan_pool_pages(plan, B, psize,
+                                         prefix_pages=self._prefix_budget())
+                self._pool = PagePool(n_pool)
+                kv_pool = empty_pool(n_pool, psize, cfg.n_kv_heads, cfg.hd,
+                                     dtype)
+                if self.ccfg.prefix_cache:
+                    self._prefix = PrefixCache(self._pool, psize,
+                                               n_attn_layers(cfg))
+            else:
+                big = tier(plan.n_big, plan.b_big)
+                small = tier(plan.n_small, plan.b_small)
         else:                     # ssm-only: no KV tiers exist at all
             is_small = tier_index = big = small = ()
         if self._has_rec:         # fixed-cost recurrent tier, one row each
@@ -569,7 +740,8 @@ class ContinuousEngine:
             group_is_small=is_small, tier_index=tier_index,
             ssm_state=ssm, conv_state=conv,
             t=jnp.zeros((B,), jnp.int32),
-            active=jnp.zeros((B,), bool))
+            active=jnp.zeros((B,), bool),
+            kv_pool=kv_pool)
         return ContinuousState(
             dec,
             token=jnp.zeros((B,), jnp.int32),
@@ -596,6 +768,40 @@ class ContinuousEngine:
         self._build_fns()
 
     # -------------------------------------------------------------- admission
+    def _alloc_row_tables(self, slots: List[int], t_list: Sequence[int],
+                          mn_list: Sequence[int], NB: int):
+        """Allocate per-row page tables for one admit batch (paged mode).
+
+        Returns ``(big_tbl, small_tbl)`` as ``[Lt, NB, npp]`` int32 host
+        arrays.  Each row gets `pages_needed(t, budget, max_new)` pages per
+        layer — the tight bound on slots it can EVER fill (decode fills
+        empties in index order, see `core.cache.compact`'s paged contract)
+        — so short requests in large arenas stop paying for the budget
+        ceiling.  Unused tail entries and pad rows carry the pool's drop
+        sentinel: the K/V scatter discards them and the stored table remaps
+        them to the null page.  Allocated ids are recorded per slot and
+        freed at retirement."""
+        psize = self.ccfg.page_size
+        pool, plan = self._pool, self.plan
+        sent = pool.sentinel
+
+        def tier_tbl(n_layers, budget):
+            Lt = max(n_layers, 1)
+            npp = pages_for(budget if n_layers else 16, psize)
+            tbl = np.full((Lt, NB, npp), sent, np.int32)
+            if n_layers:
+                for r, (slot, t, mn) in enumerate(
+                        zip(slots, t_list, mn_list)):
+                    need = pages_needed(t, budget, mn, psize)
+                    for lay in range(Lt):
+                        ids = pool.alloc(need)
+                        tbl[lay, r, :need] = ids
+                        self._row_pages[slot].extend(int(i) for i in ids)
+            return tbl
+
+        return (tier_tbl(plan.n_big, plan.b_big),
+                tier_tbl(plan.n_small, plan.b_small))
+
     def admit(self, prompt: np.ndarray, max_new: int) -> int:
         """Prefill one request and insert it into a free row; returns the
         slot.  Raises if no row is free (callers check `has_free`)."""
@@ -679,9 +885,51 @@ class ContinuousEngine:
 
     def _admit_modality(self, reqs, embeds: bool) -> List[int]:
         """One modality partition of a burst through the configured
-        admission layout."""
+        admission layout.
+
+        With the prefix cache live (token prompts only — embeds carry no
+        token identity to key the radix tree on), the partition splits
+        again by cache outcome: misses run the ordinary bucketed path
+        (and then insert their prompt pages), hits prefill ONLY their
+        unmatched suffix with the cached pages as context
+        (`_admit_ctx_group`).  Matched paths stay pinned until every
+        admission of the burst has dispatched its gathers, so same-burst
+        allocations cannot LRU-evict pages in flight."""
         if self.ccfg.packed_prefill:
             return self._admit_packed(reqs, embeds=embeds)
+        if self._prefix is None or embeds:
+            return self._admit_bucketed(reqs, embeds)
+        matches = [self._prefix.lookup(np.asarray(p, np.int32))
+                   for p, _ in reqs]
+        try:
+            miss = [i for i, m in enumerate(matches) if m.matched == 0]
+            hit = [i for i, m in enumerate(matches) if m.matched > 0]
+            slots: List[Optional[int]] = [None] * len(reqs)
+            if miss:
+                got = self._admit_bucketed([reqs[i] for i in miss], embeds)
+                for i, slot in zip(miss, got):
+                    slots[i] = slot
+            if hit:
+                # group hits by bucketed SUFFIX length: the ctx executables
+                # are keyed on the suffix shape, exactly like plain buckets
+                suf = [len(reqs[i][0]) - matches[i].matched for i in hit]
+                if self.ccfg.length_sorted and len(hit) > 1:
+                    groups = group_by_bucket(suf, self.ccfg.prompt_bucket)
+                else:
+                    groups = [(0, list(range(len(hit))))]
+                for _, idxs in groups:
+                    sel = [hit[j] for j in idxs]
+                    got = self._admit_ctx_group(
+                        [reqs[i] for i in sel], [matches[i] for i in sel])
+                    for i, slot in zip(sel, got):
+                        slots[i] = slot
+            return slots
+        finally:
+            for m in matches:
+                self._prefix.release(m)
+
+    def _admit_bucketed(self, reqs, embeds: bool) -> List[int]:
+        """The non-prefix layouts: length-sorted buckets or pad-to-longest."""
         if self.ccfg.length_sorted and len(reqs) > 1:
             groups = group_by_bucket([len(p) for p, _ in reqs],
                                      self.ccfg.prompt_bucket)
@@ -742,10 +990,153 @@ class ContinuousEngine:
         rows = np.asarray(slots + [B] * (NB - n), np.int32)   # B = drop
         rem0 = np.asarray([mn - 1 for mn in max_news] + [0] * (NB - n),
                           np.int32)
+        tbls = self._alloc_row_tables(slots, [len(p) for p in prompts],
+                                      max_news, NB) if self._paged else ()
         token0, self.state = self._admit_jit(NB, P)(
-            self.state, rows, pre, rem0, sub)
+            self.state, rows, pre, rem0, sub, tbls)
         self._register_admitted(slots, np.asarray(token0), max_news, rem0)
+        if self._prefix is not None and not embeds:
+            # cache this burst's prefixes for later arrivals (best-effort;
+            # matched=0: a miss prefilled the whole prompt at slot c*psize)
+            self._prefix_insert(prompts, [0] * n, pre, ctx_off=0)
         return slots
+
+    def _admit_ctx_group(self, reqs: Sequence[Tuple[np.ndarray, int]],
+                         matches: Sequence[PrefixMatch]) -> List[int]:
+        """One prefix-HIT admission bucket: suffix-only prefill.
+
+        Each request's matched pages (pinned by the caller) enter the
+        context-prefill executable (`Engine.prefill_ctx_jit`) as traced
+        page ids: the kernel gathers them from the pool as read-only
+        context K/V — a fixed ``Cmax = pages(max_prompt_len)`` region, the
+        unmatched tail masked by ``pos = -1`` — and runs the transformer
+        over the suffix tokens ONLY, at their absolute positions.  The
+        concatenated (context + suffix) request-shaped output then admits
+        through `_ctx_admit_jit` (canonical slot sort included).  Rows
+        still copy: the gather writes into privately-owned pages, so cache
+        eviction and row retirement never alias (copy-on-admit).
+        """
+        max_news = [min(mn, self.ccfg.max_new_cap) for _, mn in reqs]
+        n = len(reqs)
+        NB = _pow2(n)
+        prompts = [np.asarray(p, np.int32) for p, _ in reqs]
+        suffixes = [p[m.matched:] for p, m in zip(prompts, matches)]
+        toks, valid = pad_prompts(suffixes, self.ccfg.prompt_bucket,
+                                  batch=NB,
+                                  max_len=self.ccfg.max_prompt_len)
+        Lat = n_attn_layers(self.cfg)
+        Cmax = self._cmax
+        ctx_ids = np.zeros((Lat, NB, Cmax), np.int32)   # default: null page
+        matched = np.zeros((NB,), np.int32)
+        for i, m in enumerate(matches):
+            ctx_ids[:, i, :m.ids.shape[1]] = m.ids
+            matched[i] = m.matched
+        for i in range(n, NB):    # pad rows replicate request 0
+            toks[i], valid[i] = toks[0], valid[0]
+            ctx_ids[:, i] = ctx_ids[:, 0]
+            matched[i] = matched[0]
+        Psuf = toks.shape[1]
+        pool_dev = self.state.dec.kv_pool
+        pre = self.engine.prefill_ctx_jit(NB, Psuf)(
+            self.params, toks, valid, matched, pool_dev.kp, pool_dev.vp,
+            ctx_ids)
+        # a hit implies the tree exists, which implies the plan is fixed —
+        # the first burst ever admitted always takes the miss path
+        assert self.plan is not None
+        self.admit_dispatches += 1
+        self.prefill_pad_tokens += NB * Psuf
+        self.prompt_tokens += sum(len(p) for p in prompts)
+        self.prompt_tokens_referenced += sum(int(m.matched) for m in matches)
+        self.prefix_hits += n
+
+        self._host_key, sub = jax.random.split(self._host_key)
+        slots = [self._free.pop(0) for _ in range(n)]
+        B = self.ccfg.max_concurrency
+        rows = np.asarray(slots + [B] * (NB - n), np.int32)   # B = drop
+        rem0 = np.asarray([mn - 1 for mn in max_news] + [0] * (NB - n),
+                          np.int32)
+        tbls = self._alloc_row_tables(slots, [len(p) for p in prompts],
+                                      max_news, NB)
+        token0, self.state = self._ctx_admit_jit(NB, Psuf)(
+            self.state, rows, pre, rem0, sub, tbls)
+        self._register_admitted(slots, np.asarray(token0), max_news, rem0)
+        # cache the suffix chunks too: the hit's own continuation becomes
+        # tomorrow's prefix (pre's slot layout: [Cmax pages | suffix])
+        self._prefix_insert(prompts, [int(m.matched) for m in matches], pre,
+                            ctx_off=Cmax)
+        return slots
+
+    def _insert_jit(self, NB: int, Ptot: int, M: int):
+        """Compiled prefix-cache page scatter: copy `M` (row, chunk) slices
+        of a request-shaped prefill's K/V into cache-owned pages.  Chunk
+        and page indices are traced; pad entries carry the drop sentinel."""
+        key = (NB, Ptot, M)
+        if key not in self._insert_fns:
+            psize = self.ccfg.page_size
+            nch = pages_for(Ptot, psize)
+
+            def ins(state: ContinuousState, pre_k, pre_v, rows_sel,
+                    chunk_sel, ids):
+                pool = state.dec.kv_pool
+                L = pre_k.shape[0]
+
+                def chunked(a):
+                    pad = [(0, 0), (0, 0), (0, nch * psize - Ptot)] \
+                        + [(0, 0)] * (a.ndim - 3)
+                    return jnp.pad(a, pad).reshape(
+                        L, a.shape[1], nch, psize, *a.shape[3:])
+
+                kc = chunked(pre_k)[:, rows_sel, chunk_sel]  # [L,M,psize,..]
+                vc = chunked(pre_v)[:, rows_sel, chunk_sel]
+                pool = KVPool(
+                    kp=pool.kp.at[ids].set(kc.astype(pool.kp.dtype),
+                                           mode="drop"),
+                    vp=pool.vp.at[ids].set(vc.astype(pool.vp.dtype),
+                                           mode="drop"))
+                return state._replace(dec=state.dec._replace(kv_pool=pool))
+
+            donate0 = {} if not self._donate else {"donate_argnums": (0,)}
+            self._insert_fns[key] = jax.jit(ins, **donate0)
+        return self._insert_fns[key]
+
+    def _prefix_insert(self, prompts: Sequence[np.ndarray],
+                       matched_list: Sequence[int], pre: PrefillOut,
+                       ctx_off: int):
+        """Insert a just-prefilled group's prompt chunks into the radix
+        tree and scatter their K/V into the fresh cache pages.
+
+        `insert` returns only NEWLY created nodes (existing chunks already
+        hold identical KV — same tokens, same pages — which also dedupes
+        identical prompts within one burst), so the scatter copies exactly
+        the new chunks.  Source slot of global chunk ``c`` in `pre`'s
+        request-shaped layout: plain prefill stores token ``j`` at slot
+        ``j`` (``ctx_off = 0``), the ctx layout prepends ``Cmax`` context
+        pages before the suffix — both collapse to chunk
+        ``ctx_off + c - matched // psize``.  Best-effort: under pool
+        pressure the tree caches a shorter prefix and the scatter shrinks
+        with it."""
+        psize = self.ccfg.page_size
+        rows_sel: List[int] = []
+        chunk_sel: List[int] = []
+        id_cols: List[np.ndarray] = []
+        for i, (p, m) in enumerate(zip(prompts, matched_list)):
+            for c, ids in self._prefix.insert(p, max_chunks=len(p) // psize):
+                rows_sel.append(i)
+                chunk_sel.append(ctx_off + c - m // psize)
+                id_cols.append(ids)
+        if not rows_sel:
+            return
+        M = _pow2(len(rows_sel))
+        sent = self._pool.sentinel
+        pad_n = M - len(rows_sel)
+        rows = np.asarray(rows_sel + [0] * pad_n, np.int32)
+        chunks = np.asarray(chunk_sel + [0] * pad_n, np.int32)
+        idm = np.full((self._prefix.n_layers, M), sent, np.int32)
+        idm[:, :len(id_cols)] = np.stack(id_cols, axis=1)
+        NB, Ptot = pre.k.shape[1], pre.k.shape[2]
+        self.state = self._insert_jit(NB, Ptot, M)(
+            self.state, pre.k, pre.v, rows, chunks, idm)
+        self.prefix_insert_dispatches += 1
 
     def _admit_packed(self, reqs: Sequence[Tuple[np.ndarray, int]],
                       embeds: bool = False) -> List[int]:
@@ -816,11 +1207,14 @@ class ContinuousEngine:
                              (self.plan.n_small, self.plan.b_small)):
                 if n_t and b_t > Pout:
                     self.admit_kv_copy_elems += n_t * per
+        tbls = self._alloc_row_tables(
+            slots, [int(t) for t in plan.lengths[:n]], max_news,
+            NR) if self._paged else ()
         token0, self.state = self._padmit_jit(
             plan.n_rows, plan.pack_len, plan.max_segments, NR, Pout)(
                 self.state, rows, ppre, pad(plan.row), pad(plan.start),
                 pad(plan.seg), pad(plan.lengths), pad(plan.slot_len),
-                rem0, sub)
+                rem0, sub, tbls)
         self._register_admitted(slots, np.asarray(token0), max_news, rem0)
         return slots
 
@@ -878,6 +1272,12 @@ class ContinuousEngine:
     def _retire(self, slot: int):
         """Free a finished row: clear its slots on-device and recycle it."""
         self.state = self._clear_fn(self.state, slot)
+        if self._paged and self._row_pages[slot]:
+            # the clear above nulled the row's page table on device, and any
+            # executable reusing these ids is enqueued after it — the pool
+            # can hand them out again immediately
+            self._pool.free(np.asarray(self._row_pages[slot], np.int32))
+            self._row_pages[slot] = []
         self._occupied.remove(slot)
         self._free.append(slot)
         toks = np.asarray(self._buf[slot], np.int32)

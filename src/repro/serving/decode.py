@@ -18,7 +18,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.cache import SlotCache, write_token
+from repro.core.cache import SlotCache, write_token, write_token_meta
+from repro.core.paging import KVPool, PagedTier, write_decode_records
 from repro.core.policies import PolicyConfig
 from repro.models import attention as attn_lib
 from repro.models import mlp as mlp_lib
@@ -32,8 +33,8 @@ from repro.serving.sampler import sample
 
 class DecodeState(NamedTuple):
     """Carried between decode steps.  Unused fields are () placeholders."""
-    big: SlotCache | tuple        # [n_big, B, b_big, Hkv, hd] arenas
-    small: SlotCache | tuple      # [n_small, B, b_small, ...]
+    big: SlotCache | PagedTier | tuple    # [n_big, B, b_big, Hkv, hd] arenas
+    small: SlotCache | PagedTier | tuple  # [n_small, B, b_small, ...]
     group_is_small: jnp.ndarray | tuple   # [n_attn] int32 (0/1) — data
     tier_index: jnp.ndarray | tuple       # [n_attn] index within its tier
     ssm_state: jnp.ndarray | tuple        # [n_ssm, B, H, P, N]
@@ -43,6 +44,10 @@ class DecodeState(NamedTuple):
     # row's flag ON DEVICE (no host sync) and its position stops advancing;
     # () = every row live forever (the one-shot generate/wave paths).
     active: jnp.ndarray | tuple = ()
+    # Paged engines (core/paging.py): big/small are PagedTiers (page tables +
+    # slot metadata) and the KV bytes live here, in ONE global page pool
+    # shared by both tiers and the prefix cache.  () = contiguous arenas.
+    kv_pool: KVPool | tuple = ()
 
 
 def make_tier_indices(is_small) -> tuple:
@@ -105,6 +110,65 @@ def _attn_decode_block(bp, cfg, pol, x, t, big, small, is_small, j, window,
     if cfg.use_post_norms:
         out = apply_norm(bp["post_attn_norm"], out, cfg)
     return x + out, big, small
+
+
+def _attend_tier_paged(bp, cfg, pol, h, t, tier: PagedTier, pool: KVPool, j,
+                       window, use_flash=False):
+    """`_attend_tier` over a paged arena: metadata updates in place, the
+    KV write DEFERRED as a record.
+
+    The pool rides the layer scan as a closure constant (read-only there);
+    scattering it inside the `lax.cond` tier branches would fork a
+    pool-sized copy per branch, so each layer instead emits
+    ``(k_new, v_new, page, offset)`` as scan outputs and
+    `paging.write_decode_records` lands all layers' writes in one batched
+    scatter after the scan.  Victim selection is `cache.write_token_meta` —
+    the SAME function the contiguous path uses, which is what keeps paged
+    decode bit-identical to contiguous decode."""
+    tbl_j = jax.lax.dynamic_index_in_dim(tier.tbl, j, 0, keepdims=False)
+    pos_j = jax.lax.dynamic_index_in_dim(tier.pos, j, 0, keepdims=False)
+    score_j = jax.lax.dynamic_index_in_dim(tier.score, j, 0, keepdims=False)
+    ap = attn_lib.AttnParams(**bp["attn"])
+    out = attn_lib.paged_decode_attention(ap, h, t, pool.kp, pool.vp, tbl_j,
+                                          pos_j, cfg, window,
+                                          use_flash=use_flash)
+    probs = out.slot_probs.mean(axis=1)          # [B, S+1] kv-head mean
+    # same convert-sinking barrier as the contiguous path (§Perf D4)
+    k_new, v_new = jax.lax.optimization_barrier((out.k_new, out.v_new))
+    pos2, score2, victim = write_token_meta(pol, pos_j, score_j, t, probs)
+    psize = pool.page_size
+    page = jnp.take_along_axis(tbl_j, (victim // psize)[:, None],
+                               axis=1)[:, 0]
+    # frozen rows: the cleared table points every entry at the null page 0,
+    # so their unconditional eviction write scribbles harmlessly there
+    rec = (k_new[:, 0], v_new[:, 0], page.astype(jnp.int32),
+           (victim % psize).astype(jnp.int32))
+    tier2 = tier._replace(
+        pos=jax.lax.dynamic_update_index_in_dim(tier.pos, pos2, j, 0),
+        score=jax.lax.dynamic_update_index_in_dim(tier.score, score2, j, 0))
+    return out.out, tier2, rec
+
+
+def _attn_decode_block_paged(bp, cfg, pol, x, t, big, small, is_small, j,
+                             window, pool, use_flash=False):
+    """`_attn_decode_block` for paged tiers; also returns the layer's
+    deferred KV write record (both cond branches emit the same shapes)."""
+    h = apply_norm(bp["attn_norm"], x, cfg)
+
+    def on_small(_):
+        o, small2, rec = _attend_tier_paged(bp, cfg, pol, h, t, small, pool,
+                                            j, window, use_flash)
+        return o, big, small2, rec
+
+    def on_big(_):
+        o, big2, rec = _attend_tier_paged(bp, cfg, pol, h, t, big, pool, j,
+                                          window, use_flash)
+        return o, big2, small, rec
+
+    out, big, small, rec = jax.lax.cond(is_small == 1, on_small, on_big, None)
+    if cfg.use_post_norms:
+        out = apply_norm(bp["post_attn_norm"], out, cfg)
+    return x + out, big, small, rec
 
 
 def _ffn_decode(bp, cfg, x):
@@ -172,6 +236,8 @@ def serve_step(
         sp = params["shared_attn"]
         period = cfg.attn_period
         n_super = cfg.n_layers // period
+        paged = isinstance(state.big, PagedTier)
+        pool = state.kv_pool
         sts = jax.tree.map(
             lambda a: a.reshape((n_super, period) + a.shape[1:]),
             (state.ssm_state, state.conv_state))
@@ -188,36 +254,56 @@ def serve_step(
                 return c + out, (_freeze(st2, st), _freeze(cv2, cv))
 
             x, (st2, cv2) = jax.lax.scan(inner, x, (bps, st_sb, cv_sb))
-            x, big, small = _attn_decode_block(
-                sp, cfg, pol, x, t, big, small, is_small, j,
-                attn_lib.GLOBAL_WINDOW, use_flash)
+            if paged:
+                x, big, small, rec = _attn_decode_block_paged(
+                    sp, cfg, pol, x, t, big, small, is_small, j,
+                    attn_lib.GLOBAL_WINDOW, pool, use_flash)
+            else:
+                x, big, small = _attn_decode_block(
+                    sp, cfg, pol, x, t, big, small, is_small, j,
+                    attn_lib.GLOBAL_WINDOW, use_flash)
+                rec = ()
             h2 = apply_norm(sp["mlp_norm"], x, cfg)
             x = x + mlp_lib.apply_mlp(mlp_lib.MlpParams(**sp["mlp"]), h2, cfg)
-            return (x, big, small), (st2, cv2)
+            return (x, big, small), ((st2, cv2), rec)
 
-        (x, big, small), (sts2, cvs2) = jax.lax.scan(
+        (x, big, small), ((sts2, cvs2), recs) = jax.lax.scan(
             body, (x, state.big, state.small),
             (params["layers"], sts, state.group_is_small, state.tier_index))
         flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), (sts2, cvs2))
         new_state = state._replace(big=big, small=small,
                                    ssm_state=flat[0], conv_state=flat[1], t=state.t + inc)
+        if paged:
+            new_state = new_state._replace(
+                kv_pool=write_decode_records(pool, *recs))
 
     else:
         windows = layer_windows(cfg)
+        paged = isinstance(state.big, PagedTier)
+        pool = state.kv_pool
 
         def body(carry, inp):
             x, big, small = carry
             bp, window, is_small, j = inp
-            x, big, small = _attn_decode_block(
-                bp, cfg, pol, x, t, big, small, is_small, j, window,
-                use_flash)
+            if paged:
+                x, big, small, rec = _attn_decode_block_paged(
+                    bp, cfg, pol, x, t, big, small, is_small, j, window,
+                    pool, use_flash)
+            else:
+                x, big, small = _attn_decode_block(
+                    bp, cfg, pol, x, t, big, small, is_small, j, window,
+                    use_flash)
+                rec = ()
             x = _ffn_decode(bp, cfg, x)
-            return (x, big, small), None
+            return (x, big, small), rec
 
-        (x, big, small), _ = jax.lax.scan(
+        (x, big, small), recs = jax.lax.scan(
             body, (x, state.big, state.small),
             (params["layers"], windows, state.group_is_small, state.tier_index))
         new_state = state._replace(big=big, small=small, t=state.t + inc)
+        if paged:
+            new_state = new_state._replace(
+                kv_pool=write_decode_records(pool, *recs))
 
     x = apply_norm(params["final_norm"], x, cfg)
     logits = (x[:, 0] @ params["unembed"]).astype(jnp.float32)

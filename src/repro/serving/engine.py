@@ -33,13 +33,13 @@ import numpy as np
 
 from repro.core.allocation import (BudgetPlan, allocate, recurrent_tier,
                                    total_state_bytes, uniform_plan)
-from repro.core.cache import SlotCache, compact, pad_cache
+from repro.core.cache import SlotCache, compact, pad_cache, sort_slots
 from repro.core.policies import PolicyConfig
 from repro.models.config import ModelConfig
 from repro.models.transformer import n_attn_layers
 from repro.serving.decode import (DecodeState, make_tier_indices,
                                   sampled_step, serve_step)
-from repro.serving.prefill import packed_prefill, prefill
+from repro.serving.prefill import packed_prefill, prefill, prefill_ctx
 from repro.serving.sampler import SamplerConfig, sample
 
 
@@ -133,6 +133,20 @@ class Engine:
                     p, self.cfg, tok, pos, val, seg, tl, ts, embeds=emb))
         return self._prefill_cache[key]
 
+    def prefill_ctx_jit(self, batch: int, suffix_len: int):
+        """The memoized PREFIX-HIT prefill executable (prefix reuse,
+        `serving/prefill.py:prefill_ctx`): transformer FLOPs for the
+        unmatched suffix only, cached-prefix pages attended as read-only
+        context.  Keyed on (batch, suffix bucket) alone — match lengths and
+        page ids are traced data, so every hit depth and page placement
+        reuses one executable."""
+        key = ("ctx", batch, suffix_len)
+        if key not in self._prefill_cache:
+            self._prefill_cache[key] = jax.jit(
+                lambda p, tok, val, matched, kp, vp, ids: prefill_ctx(
+                    p, self.cfg, tok, val, matched, kp, vp, ids))
+        return self._prefill_cache[key]
+
     def _step_fn(self, key):
         """Single decode step (one dispatch per token).  The generate loop
         runs on `_block_fn` instead; this stays as the per-step reference
@@ -199,12 +213,19 @@ class Engine:
                         min_budget=self.ecfg.min_budget)
 
     # ------------------------------------------------------------ state init
-    def build_state(self, pre, plan: BudgetPlan, batch: int) -> DecodeState:
+    def build_state(self, pre, plan: BudgetPlan, batch: int,
+                    canonical: bool = False) -> DecodeState:
         """Compact a prefill into budget-tier arenas (Algorithm 1 line 12).
 
         With ``batch=1`` this doubles as continuous-batching admission: the
         returned row-shaped arenas are what `insert_request` writes into a
         free row of the persistent state.
+
+        ``canonical`` re-sorts each compacted arena into position order with
+        empties trailing (`core.cache.sort_slots`) — required for the
+        context-prefill layout, whose valid slots are not a contiguous
+        prefix (the plain layout already IS canonical, so the flag is off
+        by default to keep the hot path gather-free).
         """
         cfg, pol = self.cfg, self.ecfg.policy
         if cfg.is_ssm_only:
@@ -232,8 +253,10 @@ class Engine:
             score = jnp.take(pre.scores, sel, axis=0)
             P = pos.shape[-1]
             if budget <= P:
-                return compact(pol, k, v, pos, score, budget, pre.t)
-            return pad_cache(SlotCache(k, v, pos, score), budget)
+                tier = compact(pol, k, v, pos, score, budget, pre.t)
+            else:
+                tier = pad_cache(SlotCache(k, v, pos, score), budget)
+            return sort_slots(tier) if canonical else tier
 
         big = build_tier(big_idx, plan.b_big)
         small = build_tier(small_idx, plan.b_small)

@@ -288,6 +288,71 @@ def prefill(
                       out.ssm_state, t)
 
 
+def prefill_ctx(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,       # [B, Psuf] suffix tokens (right-padded)
+    valid: jnp.ndarray,        # [B, Psuf]
+    matched: jnp.ndarray,      # [B] cached-prefix lengths (page multiples)
+    pool_k: jnp.ndarray,       # [N_pages, psize, Hkv, hd] global page pool
+    pool_v: jnp.ndarray,
+    ctx_ids: jnp.ndarray,      # [n_attn, B, Cmax] page ids (0 = null page)
+) -> PrefillOut:
+    """Prefix-hit prefill: run the transformer over ONLY the unmatched
+    suffix, attending the cached prefix pages as read-only context.
+
+    The prefix-reuse payoff (DESIGN.md §5): a request whose first
+    ``matched`` tokens are resident in the prefix cache pays transformer
+    FLOPs for ``Psuf`` tokens instead of ``matched + Psuf``.  Suffix
+    positions are absolute (``matched + i``), so RoPE matches the cold
+    path exactly.  ``ctx_ids`` is traced data — one executable per
+    (B, Psuf) serves every match length and page placement.
+
+    Returns a regular `PrefillOut` over the CONCATENATED layout
+    ``P_total = Cmax * psize + Psuf`` (gathered ctx region first, computed
+    suffix second) so the downstream `Engine.build_state` -> compact ->
+    admit machinery is reused unchanged.  Note the layout's valid slots are
+    no longer a contiguous prefix — the ctx region's tail (beyond
+    ``matched``) is empty — which is why the paged admit path re-sorts
+    slots canonically after compaction (`core.cache.sort_slots`).
+    """
+    B, Psuf = tokens.shape
+    n_attn, _, Cmax = ctx_ids.shape
+    psize = pool_k.shape[1]
+    C = Cmax * psize
+    matched = matched.astype(jnp.int32)
+
+    def g(a):   # [n_attn, B, Cmax] pages -> [n_attn, B, C, Hkv, hd]
+        return a[ctx_ids].reshape(n_attn, B, C, *a.shape[2:])
+
+    ck, cv = g(pool_k), g(pool_v)
+    cpos = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[None], (B, C))
+    cpos = jnp.where(cpos < matched[:, None], cpos, -1)          # [B, C]
+    positions = matched[:, None] + jnp.arange(Psuf, dtype=jnp.int32)[None]
+
+    out = forward(params, cfg, tokens=tokens, positions=positions,
+                  valid=valid, collect_kv=True, ctx=(ck, cv, cpos))
+
+    nsuf = valid.sum(-1).astype(jnp.int32)
+    t = matched + nsuf
+    last = jnp.take_along_axis(out.logits, (nsuf - 1)[:, None, None],
+                               axis=1)[:, 0]
+    k_suf, v_suf = out.kv
+    pos_suf = jnp.where(valid, positions, -1)
+    cache_pos = jnp.concatenate(
+        [jnp.broadcast_to(cpos[None], (n_attn, B, C)),
+         jnp.broadcast_to(pos_suf[None], (n_attn, B, Psuf))], axis=2)
+    # H2O column sums cover the concatenated key axis but count only the
+    # SUFFIX queries' mass (the prefix's own prefill mass is gone — this is
+    # why the engine gates prefix caching to position-based policies)
+    scores = out.attn_scores.mean(axis=2) / jnp.clip(
+        t.astype(jnp.float32)[None, :, None], 1.0)
+    return PrefillOut(last, out.cos_sims,
+                      jnp.concatenate([ck.astype(k_suf.dtype), k_suf], axis=2),
+                      jnp.concatenate([cv.astype(v_suf.dtype), v_suf], axis=2),
+                      cache_pos, scores, None, t)
+
+
 class PackedPrefillOut(NamedTuple):
     """Per-PACKED-ROW prefill outputs; request-shaped views are gathered by
     the fused unpack+admit executable (`ContinuousEngine._padmit_jit`)."""

@@ -1,0 +1,182 @@
+"""Host-side radix tree over prompt tokens -> resident KV pages.
+
+Prefix reuse (DESIGN.md §5): serving traffic is dominated by a handful of
+shared system prompts / few-shot preambles, so the prompt KV of those
+prefixes should be paid for ONCE.  After a request is prefilled, its prompt
+KV is chunked at page granularity and inserted here; a later request whose
+prompt shares a leading run of `page_size`-token chunks admits through the
+**context prefill** path (`serving.prefill.prefill_ctx`): the matched pages
+are gathered on-device as read-only context keys while only the unmatched
+suffix runs through the transformer.
+
+Granularity is the page: a node keys on one `page_size`-token chunk and owns
+one page per attention layer (`ids [n_layers]`, model layer order — NOT the
+tier split, which is a per-engine budget-plan detail).  Matching is
+exact-chunk, so a "partial prefix" matches down to the last shared page
+boundary — tokens past it are recomputed with the suffix.
+
+Ownership and lifetime:
+  * the tree holds one pool refcount per resident page (`PagePool.incref`
+    semantics via `alloc`); **rows never alias cache pages** — admission
+    copies (gathers) from them, so row retirement and budget compaction
+    never interact with cache residency;
+  * `lookup` **pins** every node on the matched path until `release`, so
+    the LRU eviction a same-burst allocation triggers cannot free pages an
+    in-flight admission is about to gather from;
+  * under pool pressure `PagePool.alloc` calls `_evict_one` (installed as
+    `pool.evict_hook`), which drops the least-recently-used unpinned LEAF —
+    interior nodes are by definition prefixes of live leaves and only
+    become evictable once their children are gone;
+  * insertion is best-effort: when the pool cannot yield pages even after
+    eviction, the tail of the prompt simply isn't cached (admission never
+    fails on a cold cache).
+
+The tree never touches device memory itself: it returns page ids, and the
+engine's jitted executables move the bytes (insert scatter / ctx gather).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from ..core.paging import PagePool
+
+
+class _Node:
+    __slots__ = ("chunk", "ids", "children", "parent", "pins", "last_use")
+
+    def __init__(self, chunk: Tuple[int, ...], ids: np.ndarray,
+                 parent: "Optional[_Node]"):
+        self.chunk = chunk
+        self.ids = ids                    # [n_layers] int32 page ids
+        self.children: Dict[Tuple[int, ...], _Node] = {}
+        self.parent = parent
+        self.pins = 0
+        self.last_use = 0
+
+
+class PrefixMatch(NamedTuple):
+    """Result of a pinned lookup. `matched` counts TOKENS (a multiple of
+    `page_size`); `ids` is [n_layers, matched // page_size] page ids in
+    prefix order; `nodes` is the pinned path (release via
+    `PrefixCache.release`)."""
+    matched: int
+    ids: np.ndarray
+    nodes: Tuple
+
+
+class PrefixCache:
+    """Radix tree mapping page-aligned prompt prefixes to resident pages."""
+
+    def __init__(self, pool: PagePool, page_size: int, n_layers: int):
+        assert page_size > 0 and n_layers > 0
+        self.pool = pool
+        self.page_size = int(page_size)
+        self.n_layers = int(n_layers)
+        self._root: Dict[Tuple[int, ...], _Node] = {}
+        self._clock = 0                   # monotonic LRU clock
+        self.evictions = 0
+        self.n_nodes = 0
+        pool.evict_hook = self._evict_one
+
+    # ------------------------------------------------------------------ LRU
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _evict_one(self) -> bool:
+        """Drop the least-recently-used unpinned leaf; True if one fell."""
+        victim: Optional[_Node] = None
+        stack = list(self._root.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            elif n.pins == 0 and (victim is None
+                                  or n.last_use < victim.last_use):
+                victim = n
+        if victim is None:
+            return False
+        siblings = (victim.parent.children if victim.parent is not None
+                    else self._root)
+        del siblings[victim.chunk]
+        self.pool.decref(victim.ids)
+        self.n_nodes -= 1
+        self.evictions += 1
+        return True
+
+    # --------------------------------------------------------------- lookup
+    def _chunks(self, tokens) -> List[Tuple[int, ...]]:
+        toks = [int(t) for t in tokens]
+        p = self.page_size
+        return [tuple(toks[i * p:(i + 1) * p])
+                for i in range(len(toks) // p)]
+
+    def lookup(self, tokens) -> PrefixMatch:
+        """Longest page-aligned cached prefix of `tokens`, pinned.
+
+        Capped at ``(len(tokens) - 1) // page_size`` chunks so at least one
+        prompt token always remains for the suffix prefill (the sampling
+        path needs real last-token logits).  Always `release` the returned
+        match once its pages have been gathered (or ignored)."""
+        cap = (len(tokens) - 1) // self.page_size
+        path: List[_Node] = []
+        level = self._root
+        for chunk in self._chunks(tokens)[:cap]:
+            node = level.get(chunk)
+            if node is None:
+                break
+            path.append(node)
+            level = node.children
+        now = self._tick()
+        for n in path:
+            n.pins += 1
+            n.last_use = now
+        ids = (np.stack([n.ids for n in path], axis=1)
+               if path else np.zeros((self.n_layers, 0), np.int32))
+        return PrefixMatch(matched=len(path) * self.page_size, ids=ids,
+                           nodes=tuple(path))
+
+    def release(self, match: PrefixMatch) -> None:
+        for n in match.nodes:
+            assert n.pins > 0
+            n.pins -= 1
+
+    # --------------------------------------------------------------- insert
+    def insert(self, tokens, max_chunks: Optional[int] = None
+               ) -> List[Tuple[int, np.ndarray]]:
+        """Extend the tree along `tokens`; returns [(chunk_index, ids)] for
+        NEWLY created nodes — the engine must scatter those chunks' KV into
+        `ids` ([n_layers] each).  Existing nodes are skipped (same tokens =>
+        same KV, already resident), which also dedupes identical prompts
+        admitted in one burst.  Best-effort under pool pressure."""
+        chunks = self._chunks(tokens)
+        if max_chunks is not None:
+            chunks = chunks[:max_chunks]
+        created: List[Tuple[int, np.ndarray]] = []
+        fresh: List[_Node] = []
+        level, parent = self._root, None
+        now = self._tick()
+        for ci, chunk in enumerate(chunks):
+            node = level.get(chunk)
+            if node is None:
+                ids = self.pool.try_alloc(self.n_layers)
+                if ids is None:
+                    break                          # pool full: cache a prefix
+                node = _Node(chunk, ids, parent)
+                node.pins = 1      # shield the fresh path from same-call LRU
+                level[chunk] = node
+                self.n_nodes += 1
+                created.append((ci, ids))
+                fresh.append(node)
+            node.last_use = now
+            level, parent = node.children, node
+        for node in fresh:
+            node.pins -= 1
+        return created
+
+    # ---------------------------------------------------------------- stats
+    @property
+    def resident_pages(self) -> int:
+        return self.n_nodes * self.n_layers

@@ -1,0 +1,275 @@
+"""Paged KV arenas + prefix caching under continuous batching.
+
+The load-bearing property mirrors tests/test_continuous.py: paging is a
+STORAGE-layout change, not a model or scheduling change, so per-request
+outputs through the page-table engine — admit → fused decode blocks →
+retire → recycle — must be token-identical to the contiguous-arena engine
+and to solo `Engine.generate`, for page sizes that divide the budgets and
+page sizes that do not, across dense / hybrid / ssm / multimodal families
+and both prefill layouts.  On top of that sit the paged-only invariants:
+zero retraces (page tables are traced data), the `pages_needed` release
+bound, full pool drain at retirement, and prefix-hit admissions that skip
+cached prompt chunks yet emit the same tokens.
+"""
+import pytest
+
+pytestmark = pytest.mark.system
+
+import numpy as np
+
+import jax
+
+from repro.core import PolicyConfig
+from repro.core.paging import pages_for, pages_needed
+from repro.models import ModelConfig, init_params
+from repro.serving import (ContinuousConfig, ContinuousEngine,
+                           ContinuousScheduler, Engine, EngineConfig,
+                           ImageSegment, IntakeEncoder, MultimodalRequest,
+                           TextSegment, pad_embeds, pad_prompt)
+
+DENSE = ModelConfig(name="s", arch_type="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                    dtype="float32", param_dtype="float32")
+HYBRID = ModelConfig(name="h", arch_type="hybrid", n_layers=4, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                     ssm_state=8, ssm_expand=2, ssm_head_dim=32, ssm_chunk=8,
+                     attn_period=2, dtype="float32", param_dtype="float32")
+SSM = ModelConfig(name="m", arch_type="ssm", n_layers=2, d_model=64,
+                  n_heads=1, n_kv_heads=1, head_dim=32, d_ff=0, vocab_size=97,
+                  ssm_state=8, ssm_expand=2, ssm_head_dim=32, ssm_chunk=8,
+                  dtype="float32", param_dtype="float32")
+VLM = ModelConfig(name="v", arch_type="vlm", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                  mrope_sections=(4, 2, 2), frontend="vision_stub",
+                  frontend_tokens=8, dtype="float32", param_dtype="float32")
+
+ECFG = EngineConfig(mode="uniform", policy=PolicyConfig("sliding_window"),
+                    budget_abs=12, bucket=4, min_budget=4)
+
+SPECS = [(5, 4), (11, 7), (16, 8), (3, 1), (9, 6), (20, 5)]
+
+
+def _ccfg(**kw):
+    base = dict(max_concurrency=3, prompt_bucket=8, max_prompt_len=24,
+                max_new_cap=8, sync_every=2)
+    base.update(kw)
+    return ContinuousConfig(**base)
+
+
+def _params(cfg):
+    return init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _run_stream(params, cfg, ccfg, specs, seed=0):
+    """Serve one request stream; returns (core, per-request token lists)."""
+    sched = ContinuousScheduler(params, cfg, ECFG, ccfg)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, 97, (n,)).astype(np.int32) for n, _ in specs]
+    rids = [sched.submit(p, max_new=mn)
+            for p, (_, mn) in zip(prompts, specs)]
+    done = {r.rid: r for r in sched.run_until_empty()}
+    assert len(done) == len(specs)
+    return sched.core, [done[rid].tokens.tolist() for rid in rids]
+
+
+def _assert_pool_drained(core):
+    """Retirement returned every row page; no leak survives the stream."""
+    assert core._pool is not None
+    assert core._pool.n_resident == (core._prefix.resident_pages
+                                     if core._prefix is not None else 0)
+    assert all(not pages for pages in core._row_pages)
+
+
+# ------------------------------------------------------------ token identity
+@pytest.mark.parametrize("psize", [4, 5], ids=["psize4", "psize5"])
+def test_paged_dense_matches_contiguous_and_solo(psize):
+    """Same stream through contiguous arenas and through the page pool —
+    page size 4 divides the 12-slot budget, 5 tears the last page — plus
+    the solo anchor.  6 requests on 3 slots force recycling through
+    recycled PAGES, not just recycled rows."""
+    params = _params(DENSE)
+    _, contiguous = _run_stream(params, DENSE, _ccfg(), SPECS)
+    core, paged = _run_stream(params, DENSE, _ccfg(page_size=psize), SPECS)
+    assert paged == contiguous
+    assert core._paged and core.pool_pages > 0
+    _assert_pool_drained(core)
+    assert core.pool_occupancy == 0.0
+
+    solo = Engine(params, DENSE, ECFG)
+    rng = np.random.default_rng(0)
+    for i, (n, mn) in enumerate(SPECS):
+        toks, valid = pad_prompt(rng.integers(0, 97, (n,)).astype(np.int32),
+                                 8)
+        ref = solo.generate(tokens=toks, valid=valid,
+                            max_new_tokens=mn).tokens[0]
+        assert paged[i] == ref.tolist(), i
+
+
+@pytest.mark.parametrize("cfg", [HYBRID, SSM], ids=["hybrid", "ssm"])
+def test_paged_recurrent_families_match_contiguous(cfg):
+    """Hybrid: attention tiers page, recurrent state stays a dense row
+    tensor.  Pure SSM: `page_size` is a documented no-op (no attention
+    layers -> no pool), never an error."""
+    params = _params(cfg)
+    _, contiguous = _run_stream(params, cfg, _ccfg(), SPECS)
+    core, paged = _run_stream(params, cfg, _ccfg(page_size=4), SPECS)
+    assert paged == contiguous
+    if cfg is SSM:
+        assert not core._paged and core._pool is None
+        assert core.pool_pages == 0
+    else:
+        assert core._paged
+        _assert_pool_drained(core)
+
+
+def test_paged_packed_admission_matches_bucketed():
+    """Packed prefill scatters straight into pages: same tokens as the
+    bucketed contiguous path (the documented packed identity scope)."""
+    params = _params(DENSE)
+    _, bucketed = _run_stream(params, DENSE, _ccfg(), SPECS)
+    core, packed = _run_stream(
+        params, DENSE, _ccfg(packed_prefill=True, pack_len=24, page_size=4),
+        SPECS)
+    assert packed == bucketed
+    assert core._paged
+    _assert_pool_drained(core)
+
+
+def test_paged_multimodal_matches_solo():
+    """Embeds-native admission (vlm) through the page pool: identical to
+    solo generate on the same stub embeds; embeds prompts page like token
+    prompts (only the PREFIX CACHE is token-keyed and skips them)."""
+    params = _params(VLM)
+    ccfg = _ccfg(max_prompt_len=40, page_size=4)
+    sched = ContinuousScheduler(params, VLM, ECFG, ccfg)
+    rng = np.random.default_rng(0)
+    specs = [(9, 5, 4), (4, 11, 7), (16, 8, 8)]
+    reqs = [MultimodalRequest(
+        (ImageSegment(nf),
+         TextSegment(rng.integers(0, 97, (nt,)).astype(np.int32))),
+        max_new=mn, seed=100 + i) for i, (nf, nt, mn) in enumerate(specs)]
+    rids = [sched.submit_multimodal(r) for r in reqs]
+    done = {r.rid: r for r in sched.run_until_empty()}
+    assert sched.core._paged
+    _assert_pool_drained(sched.core)
+
+    enc = IntakeEncoder(params, VLM)
+    solo = Engine(params, VLM, ECFG)
+    for rid, req in zip(rids, reqs):
+        emb, valid = pad_embeds([enc.encode_request(req)], 8)
+        ref = solo.generate(embeds=emb, valid=valid,
+                            max_new_tokens=req.max_new).tokens[0]
+        assert done[rid].tokens.tolist() == ref.tolist(), rid
+
+
+# -------------------------------------------------- zero retrace + recycling
+def test_paged_admission_never_retraces_and_recycles_pages():
+    """Page tables are DATA: requests landing on different slots with
+    different page-id lists (mixed prompt lengths and max_new => different
+    `pages_needed` counts, recycled ids on the second wave) reuse one
+    compiled executable per (batch, prompt-bucket) key and per block
+    length."""
+    params = _params(DENSE)
+    core, _ = _run_stream(params, DENSE, _ccfg(page_size=4),
+                          SPECS + [(7, 3), (13, 2), (8, 4)], seed=1)
+    assert core.admitted == 9
+    assert set(core._block_fns) <= set(range(1, 3))
+    assert all(fn._cache_size() == 1 for fn in core._block_fns.values())
+    assert core._clear_fn._cache_size() == 1
+    assert all(fn._cache_size() == 1 for fn in core._admit_fns.values())
+    assert core.admit_dispatches < core.admitted
+    # every slot recycled, every page back in the pool
+    assert sorted(core._free) == list(range(3))
+    assert (np.asarray(core.state.dec.big.pos) == -1).all()
+    _assert_pool_drained(core)
+
+
+def test_pages_needed_release_bound_holds_in_flight():
+    """Mid-flight residency equals the `pages_needed` bound — strictly
+    below the per-layer quota: sequence-wise squeezing RELEASED the tail
+    pages at admission instead of parking them on the row."""
+    params = _params(DENSE)
+    sched = ContinuousScheduler(params, DENSE, ECFG, _ccfg(page_size=4))
+    t, mn = 3, 4
+    sched.submit(np.arange(t, dtype=np.int32) + 1, max_new=mn)
+    sched.poll()                           # admit + first decode block only
+    core = sched.core
+    assert core.n_occupied == 1
+    per_layer = pages_needed(t, ECFG.budget_abs, mn, 4)
+    assert per_layer < pages_for(ECFG.budget_abs, 4)       # a real release
+    assert core._pool.n_resident == DENSE.n_layers * per_layer
+    assert sum(len(p) for p in core._row_pages) == core._pool.n_resident
+    sched.run_until_empty()
+    _assert_pool_drained(core)
+
+
+# ----------------------------------------------------------- prefix caching
+def test_prefix_hit_admission_matches_solo():
+    """Two waves sharing an 8-token system prefix: wave 1 is cold (tree is
+    empty), wave 2 admits through context prefill — cached chunks are
+    REFERENCED, only suffixes run the transformer — and every request in
+    both waves still matches its solo reference token-for-token.  The ctx
+    admit, the KV-insert scatter, and the decode blocks each stay one
+    compiled executable."""
+    params = _params(DENSE)
+    sched = ContinuousScheduler(params, DENSE, ECFG,
+                                _ccfg(page_size=4, prefix_cache=True))
+    core = sched.core
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, 97, (8,)).astype(np.int32)
+    tails = [rng.integers(0, 97, (n,)).astype(np.int32)
+             for n in (4, 6, 9, 5, 12, 3)]
+    prompts = [np.concatenate([shared, t]) for t in tails]
+    max_news = [4, 7, 5, 8, 3, 6]
+
+    done, rids = {}, []
+    for wave in (prompts[:3], prompts[3:]):              # 3 rows per wave
+        offset = len(rids)
+        rids += [sched.submit(p, max_new=mn)
+                 for p, mn in zip(wave, max_news[offset:offset + 3])]
+        done.update({r.rid: r for r in sched.run_until_empty()})
+    assert len(done) == 6
+
+    # wave 1 missed (cold tree), wave 2 hit the shared 2-chunk prefix
+    assert core.prefix_hits == 3
+    assert core.prompt_tokens_referenced == 3 * len(shared)
+    assert core._prefix.n_nodes > 0 and core.prefix_insert_dispatches > 0
+    # identity: hits and misses alike
+    solo = Engine(params, DENSE, ECFG)
+    for rid, p, mn in zip(rids, prompts, max_news):
+        toks, valid = pad_prompt(p, 8)
+        ref = solo.generate(tokens=toks, valid=valid,
+                            max_new_tokens=mn).tokens[0]
+        assert done[rid].tokens.tolist() == ref.tolist(), rid
+    # zero retrace across plain admits, ctx admits, inserts, decode blocks
+    assert all(fn._cache_size() == 1 for fn in core._admit_fns.values())
+    assert any(k[0] == "ctx" for k in core._admit_fns)
+    assert all(fn._cache_size() == 1 for fn in core._insert_fns.values())
+    assert all(fn._cache_size() == 1 for fn in core._block_fns.values())
+    # rows drained; only the tree's refcounted residency remains
+    assert sorted(core._free) == list(range(3))
+    _assert_pool_drained(core)
+    assert core._pool.n_resident == core._prefix.resident_pages > 0
+
+
+def test_prefix_cache_gating_errors():
+    """Unsupported combinations fail LOUDLY at engine construction, not
+    silently mid-serve."""
+    params = _params(DENSE)
+    with pytest.raises(ValueError, match="page_size"):
+        ContinuousEngine(params, DENSE, ECFG, _ccfg(page_size=-1))
+    with pytest.raises(ValueError, match="prefix_cache requires page_size"):
+        ContinuousEngine(params, DENSE, ECFG, _ccfg(prefix_cache=True))
+    with pytest.raises(ValueError, match="packed_prefill"):
+        ContinuousEngine(params, DENSE, ECFG,
+                         _ccfg(page_size=4, prefix_cache=True,
+                               packed_prefill=True, pack_len=24))
+    with pytest.raises(ValueError, match="attention-only"):
+        ContinuousEngine(_params(HYBRID), HYBRID, ECFG,
+                         _ccfg(page_size=4, prefix_cache=True))
+    with pytest.raises(ValueError, match="position-based"):
+        ContinuousEngine(params, DENSE,
+                         EngineConfig(mode="uniform",
+                                      policy=PolicyConfig("h2o"),
+                                      budget_abs=12, bucket=4, min_budget=4),
+                         _ccfg(page_size=4, prefix_cache=True))

@@ -1,0 +1,214 @@
+"""Unit tests for the paged-KV building blocks (DESIGN.md §3).
+
+Host allocator lifecycle (alloc/free/refcount/eviction), the page-count
+bounds that let sequence-wise squeezing release pages, the radix-tree
+prefix cache (partial matches on page boundaries, pinning, LRU leaf
+eviction, best-effort inserts), the canonical slot sort the ctx-prefill
+admission relies on, and the device gather/scatter round trip — including
+page sizes that do NOT divide the arena budget.
+"""
+import pytest
+
+pytestmark = pytest.mark.fast
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache import SlotCache, sort_slots
+from repro.core.allocation import page_quota, plan_pool_pages, uniform_plan
+from repro.core.paging import (KVPool, PagePool, clear_tier_row, empty_pool,
+                               empty_paged_tier, gather_layer_pages,
+                               insert_tier_rows, pages_for, pages_needed,
+                               scatter_rows_to_pages)
+from repro.serving.prefix import PrefixCache
+
+
+# ------------------------------------------------------------- page counting
+def test_pages_for_and_needed_bounds():
+    assert pages_for(16, 4) == 4
+    assert pages_for(17, 4) == 5          # no divisibility requirement
+    assert pages_for(1, 8) == 1
+    # a request with t prompt slots + max_new-1 decode writes can never
+    # touch a slot past min(budget, t + max_new - 1)
+    assert pages_needed(t=5, budget=32, max_new=4, page_size=4) == 2  # 8 slots
+    assert pages_needed(t=30, budget=32, max_new=8, page_size=4) == 8  # capped
+    assert pages_needed(t=0, budget=32, max_new=1, page_size=4) == 1
+    # short request in a big arena: far fewer pages than the budget ceiling
+    assert pages_needed(t=4, budget=128, max_new=2, page_size=16) == 1
+    assert pages_for(128, 16) == 8
+
+
+def test_plan_pool_pages_covers_worst_case():
+    plan = uniform_plan(n_layers=4, b_init=24)
+    # per row: every layer's budget in pages; +1 null page
+    per_row = 4 * page_quota(24, 8)
+    assert plan_pool_pages(plan, batch=3, page_size=8) == 1 + 3 * per_row
+    assert plan_pool_pages(plan, batch=3, page_size=8,
+                           prefix_pages=10) == 1 + 3 * per_row + 10
+
+
+# ------------------------------------------------------------ host allocator
+def test_page_pool_alloc_free_refcount():
+    pool = PagePool(8)                    # pages 1..7 usable, 0 = null
+    assert pool.sentinel == 8
+    assert pool.n_free == 7 and pool.n_resident == 0
+    a = pool.alloc(3)
+    assert sorted(a.tolist()) == [1, 2, 3]
+    assert pool.n_resident == 3
+    pool.incref(a[:1])                    # share page 1
+    pool.free(a)                          # rows drop their refs
+    assert pool.n_resident == 1           # page 1 still held by the share
+    pool.decref(a[:1])
+    assert pool.n_resident == 0 and pool.n_free == 7
+    b = pool.alloc(7)                     # the freed pages recycle
+    assert sorted(b.tolist()) == list(range(1, 8))
+    with pytest.raises(RuntimeError, match="page pool exhausted"):
+        pool.alloc(1)
+    pool.free(b)
+    with pytest.raises(AssertionError):   # double free trips the refcount
+        pool.decref(b[:1])
+
+
+def test_page_pool_evict_hook_under_pressure():
+    pool = PagePool(5)
+    held = [pool.alloc(1) for _ in range(4)]
+
+    def evict():
+        if held:
+            pool.decref(held.pop())
+            return True
+        return False
+
+    pool.evict_hook = evict
+    got = pool.alloc(2)                   # forces two evictions
+    assert got.size == 2 and len(held) == 2
+    assert pool.try_alloc(99) is None     # beyond any eviction's reach
+
+
+# ------------------------------------------------------------- prefix cache
+def _mk_cache(n_pages=64, psize=4, n_layers=2):
+    pool = PagePool(n_pages)
+    return pool, PrefixCache(pool, psize, n_layers)
+
+
+def test_prefix_insert_lookup_partial_match_on_page_boundary():
+    pool, pc = _mk_cache()
+    toks = np.arange(100, 111, dtype=np.int32)          # 11 tokens, psize 4
+    created = pc.insert(toks, max_chunks=len(toks) // 4)
+    assert [c for c, _ in created] == [0, 1]            # 2 full chunks cached
+    assert pc.n_nodes == 2 and pool.n_resident == 4     # 2 nodes x 2 layers
+
+    # identical prompt: lookup matches down to the page boundary, capped so
+    # at least one suffix token remains
+    m = pc.lookup(toks)
+    assert m.matched == 8 and m.ids.shape == (2, 2)
+    pc.release(m)
+    # exactly page-aligned prompt: the cap keeps the last chunk as suffix
+    m = pc.lookup(toks[:8])
+    assert m.matched == 4
+    pc.release(m)
+    # diverging token inside chunk 2 of a longer prompt: matches chunks 0-1
+    other = np.concatenate([toks[:8], [7, 7, 7, 7, 7]]).astype(np.int32)
+    m = pc.lookup(other)
+    assert m.matched == 8
+    pc.release(m)
+    # divergence inside chunk 0: no match
+    assert pc.lookup(other[::-1]).matched == 0
+
+
+def test_prefix_insert_dedupes_and_extends():
+    pool, pc = _mk_cache()
+    a = np.arange(0, 12, dtype=np.int32)
+    b = np.concatenate([a[:8], np.arange(50, 58)]).astype(np.int32)  # shares 2
+    assert len(pc.insert(a, max_chunks=3)) == 3
+    created = pc.insert(b, max_chunks=4)
+    assert [c for c, _ in created] == [2, 3]   # only the divergent tail
+    assert pc.n_nodes == 5
+    # re-inserting an identical prompt creates nothing (same-burst dedup)
+    assert pc.insert(a, max_chunks=3) == []
+
+
+def test_prefix_lru_leaf_eviction_respects_pins():
+    pool, pc = _mk_cache(n_pages=9, psize=4, n_layers=2)   # 4 nodes capacity
+    a = np.arange(0, 9, dtype=np.int32)
+    b = np.arange(100, 109, dtype=np.int32)
+    pc.insert(a, max_chunks=2)
+    pc.insert(b, max_chunks=2)                # pool now full (4 nodes)
+    ma = pc.lookup(a)                         # pin a's path, refresh its LRU
+    assert ma.matched == 8
+    # allocation pressure: the unpinned LRU LEAF falls — b's deepest node
+    got = pool.alloc(2)
+    assert got.size == 2
+    assert pc.evictions == 1 and pc.n_nodes == 3
+    mb = pc.lookup(b)
+    assert mb.matched == 4                    # b lost its leaf, kept chunk 0
+    pc.release(ma)
+    # with a released (and b's survivor pinned), pressure strips a's leaf
+    pool.alloc(2)
+    assert pc.evictions == 2
+    m = pc.lookup(a)
+    assert m.matched == 4
+    pc.release(m)
+    pc.release(mb)
+
+
+def test_prefix_insert_best_effort_when_pool_full():
+    pool, pc = _mk_cache(n_pages=5, psize=4, n_layers=2)   # 2 nodes capacity
+    toks = np.arange(0, 17, dtype=np.int32)
+    created = pc.insert(toks, max_chunks=4)
+    assert [c for c, _ in created] == [0, 1]   # caches a prefix, then stops
+    assert pc.n_nodes == 2
+
+
+# ------------------------------------------------------- canonical slot sort
+def test_sort_slots_moves_empties_to_tail():
+    pos = jnp.asarray([[[3, -1, 0, -1, 8, 1]]], jnp.int32)     # [1, 1, 6]
+    k = jnp.arange(6, dtype=jnp.float32).reshape(1, 1, 6, 1, 1)
+    score = jnp.asarray([[[.3, 0., .0, 0., .8, .1]]], jnp.float32)
+    out = sort_slots(SlotCache(k=k, v=k, pos=pos, score=score))
+    assert np.asarray(out.pos[0, 0]).tolist() == [0, 1, 3, 8, -1, -1]
+    # k/v/score moved with their slots
+    assert np.asarray(out.k[0, 0, :, 0, 0]).tolist() == [2., 5., 0., 4., 1., 3.]
+    np.testing.assert_allclose(np.asarray(out.score[0, 0]),
+                               [.0, .1, .3, .8, 0., 0.], rtol=1e-6)
+
+
+# -------------------------------------------------- device gather / scatter
+def test_paged_scatter_gather_roundtrip_non_divisible():
+    psize, S, L, B = 4, 10, 2, 3                  # 10 slots -> 3 pages, torn
+    npp = pages_for(S, psize)
+    pool_h = PagePool(1 + L * B * npp)
+    pool = empty_pool(pool_h.n_pages, psize, kv_heads=2, head_dim=2,
+                      dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(L, B, S, 2, 2)), jnp.float32)
+    v = -k
+    tbl = np.stack([pool_h.alloc(npp * B).reshape(B, npp) for _ in range(L)])
+    pool = scatter_rows_to_pages(pool, k, v, jnp.asarray(tbl))
+    for lay in range(L):
+        gk, gv = gather_layer_pages(pool, jnp.asarray(tbl[lay]), S)
+        np.testing.assert_array_equal(np.asarray(gk), np.asarray(k[lay]))
+        np.testing.assert_array_equal(np.asarray(gv), np.asarray(v[lay]))
+
+
+def test_insert_tier_rows_sentinel_and_clear():
+    psize, S, B = 4, 6, 4
+    npp = pages_for(S, psize)
+    tier = empty_paged_tier(1, B, S, psize)
+    sent = 99
+    rows_pos = jnp.asarray([[[0, 1, 2, -1, -1, -1]],
+                            [[0, 1, 2, 3, 4, 5]]], jnp.int32).transpose(1, 0, 2)
+    rows = SlotCache(k=(), v=(), pos=rows_pos,
+                     score=jnp.zeros((1, 2, S), jnp.float32))
+    # row 0 releases its second page (sentinel); row 3 is a pad row (drop)
+    tbl = jnp.asarray([[[5, sent], [7, 8]]], jnp.int32)
+    out = insert_tier_rows(tier, rows, jnp.asarray([0, B], jnp.int32), tbl,
+                           sent)
+    assert np.asarray(out.tbl[0, 0]).tolist() == [5, 0]   # sentinel -> null
+    assert np.asarray(out.pos[0, 0]).tolist() == [0, 1, 2, -1, -1, -1]
+    assert (np.asarray(out.pos[0, 1:]) == -1).all()       # pad row dropped
+    cleared = clear_tier_row(out, 0)
+    assert (np.asarray(cleared.tbl) == 0).all()
+    assert (np.asarray(cleared.pos) == -1).all()
