@@ -743,6 +743,159 @@ def prefix_reuse_trace(quick=False, n_req=32, n_sys=SYS_K, write_json=True):
 
 
 # --------------------------------------------------------------------------- #
+# pool pressure: overcommitted paged serving under the degradation ladder
+# --------------------------------------------------------------------------- #
+
+PP_PAGE, PP_BUCKET, PP_MAX_PROMPT, PP_MAX_NEW = 4, 8, 16, 4
+PP_BUDGET = 16                     # >= plen + max_new: preempt-resume exact
+PP_CONC = 8
+PP_OVERCOMMIT = 0.5                # pool = half the worst-case row region
+PP_WM_LOW, PP_WM_HIGH = 0.05, 0.25
+PP_PREEMPT_AFTER = 2
+RESIDENT_GAIN_MIN = 1.3            # gated: peak rows vs worst-case sizing
+
+
+def _pressure_trace(n_req: int, seed: int = 29):
+    """Short-window requests (plen 3..5, max_new 3..4): every row's live
+    slots span ~half its worst-case page quota, which is exactly the slack
+    overcommitted sizing converts into extra resident rows.  Lengths stay
+    under PP_BUDGET so a preempted request's re-prefill window never
+    overflows the cache budget — the scope where preempt-resume is
+    token-exact (DESIGN.md §5)."""
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, TRACE_CFG.vocab_size,
+                          (int(rng.integers(3, 6)),)).astype(np.int32),
+             int(rng.integers(3, 5))) for _ in range(n_req)]
+
+
+def _pressure_sched(params, ecfg, overcommit, injector=None):
+    from repro.core.paging import PoolFaultInjector   # noqa: F401 (doc aid)
+    pressured = overcommit != 1.0
+    return ContinuousScheduler(params, TRACE_CFG, ecfg, ContinuousConfig(
+        max_concurrency=PP_CONC, prompt_bucket=PP_BUCKET,
+        max_prompt_len=PP_MAX_PROMPT, max_new_cap=PP_MAX_NEW,
+        sync_every=1,     # one decode step per poll: pressure persists
+        page_size=PP_PAGE, overcommit=overcommit,
+        watermark_low=PP_WM_LOW if pressured else 0.0,
+        watermark_high=PP_WM_HIGH if pressured else 0.0,
+        preempt_after=PP_PREEMPT_AFTER, audit_pool=pressured),
+        injector=injector)
+
+
+def _pressure_run(sched, trace):
+    """Submit everything up front (constant pressure), poll until drained;
+    returns (wall_s, tokens per request in submit order)."""
+    t0 = time.perf_counter()
+    rids = [sched.submit(p, max_new=mn) for p, mn in trace]
+    done = []
+    polls = 0
+    while sched.queue or sched.core.n_occupied:
+        done.extend(sched.poll())
+        polls += 1
+        assert polls < 100 * len(trace), "pressure trace failed to drain"
+    wall = time.perf_counter() - t0
+    d = {r.rid: r for r in done}
+    assert len(d) == len(trace), (len(d), len(trace))
+    return wall, [d[r].tokens.tolist() for r in rids]
+
+
+def pool_pressure_trace(quick=False, n_req=20, write_json=True):
+    """Overcommitted paged serving through the degradation ladder, vs the
+    SAME trace on a worst-case-sized pool (ISSUE-7 tentpole).
+
+    The overcommitted engine runs with half the worst-case row region,
+    watermark backpressure, preemption after `PP_PREEMPT_AFTER` held polls,
+    a scripted `PoolFaultInjector` (page steals + forced allocation
+    failures mid-trace), and the full pool-accounting audit after EVERY
+    poll.
+
+    Asserted claims (the acceptance gates):
+      * every request completes and is TOKEN-IDENTICAL to the uninterrupted
+        worst-case-sized run — backpressure, preemption and fault injection
+        are scheduling events, never model events;
+      * the ladder actually fired: >=1 preemption (with its requeue), >=1
+        stalled poll, >=1 watermark hit;
+      * peak resident rows >= RESIDENT_GAIN_MIN x what worst-case sizing
+        supports in the same pool — the capacity win overcommit buys;
+      * the pool books balance after the drain (free list + refcounts +
+        row/injector residency tile the pool; deep page-table check).
+    """
+    from repro.core.paging import PoolFaultInjector
+    del quick                 # deterministic counters; one pass either way
+    params = init_params(jax.random.PRNGKey(0), TRACE_CFG)
+    ecfg = EngineConfig(mode="uniform",
+                        policy=PolicyConfig("sliding_window"),
+                        budget_abs=PP_BUDGET, bucket=4, min_budget=4)
+    trace = _pressure_trace(n_req)
+
+    base = _pressure_sched(params, ecfg, overcommit=1.0)
+    wall_b, ref = _pressure_run(base, trace)
+
+    inj = PoolFaultInjector({3: [("steal", 24), ("fail_alloc", 3)],
+                             8: [("release", -1)]})
+    over = _pressure_sched(params, ecfg, overcommit=PP_OVERCOMMIT,
+                           injector=inj)
+    wall_o, out = _pressure_run(over, trace)
+    core = over.core
+    inj.release_all(core._pool)
+    core.audit_pool(deep=True)        # books balance after the drain
+
+    # worst-case sizing supports floor(pool / quota) rows; the baseline
+    # pool IS PP_CONC quotas, so quota falls out of its own sizing
+    quota = base.core.pool_pages // PP_CONC
+    worst_rows = core.pool_pages // quota
+    gain = core.peak_resident_rows / max(worst_rows, 1)
+    assert out == ref, "token divergence under pool pressure"
+    assert core.preemptions >= 1 and core.requeues >= 1, \
+        (core.preemptions, core.requeues)
+    assert core.stall_polls >= 1 and core.watermark_hits >= 1, \
+        (core.stall_polls, core.watermark_hits)
+    assert gain >= RESIDENT_GAIN_MIN, \
+        (core.peak_resident_rows, worst_rows, gain)
+
+    bm = {"wall_s": round(wall_b, 4), "pool_pages": base.core.pool_pages,
+          "peak_resident_rows": base.core.peak_resident_rows}
+    om = {"wall_s": round(wall_o, 4), "pool_pages": core.pool_pages,
+          "peak_resident_rows": core.peak_resident_rows,
+          "preemptions": core.preemptions, "requeues": core.requeues,
+          "stall_polls": core.stall_polls,
+          "watermark_hits": core.watermark_hits}
+    record = {
+        "bench": "pool_pressure",
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "n_req": n_req,
+        "page_size": PP_PAGE,
+        "overcommit": PP_OVERCOMMIT,
+        "watermarks": [PP_WM_LOW, PP_WM_HIGH],
+        "preempt_after": PP_PREEMPT_AFTER,
+        "worst_case": bm,
+        "overcommitted": om,
+        "worst_case_rows": worst_rows,
+        "resident_gain": round(gain, 3),
+        "token_identical": True,
+    }
+    if write_json:
+        _append_json(record)
+
+    return [
+        row("pool_pressure_worst_case", bm["wall_s"] * 1e6,
+            f"pool_pages={bm['pool_pages']};"
+            f"peak_rows={bm['peak_resident_rows']}"),
+        row("pool_pressure_overcommit", om["wall_s"] * 1e6,
+            f"pool_pages={om['pool_pages']};"
+            f"peak_rows={om['peak_resident_rows']};"
+            f"preempt={om['preemptions']};requeues={om['requeues']};"
+            f"stalls={om['stall_polls']};wm_hits={om['watermark_hits']}"),
+        row("pool_pressure_gain", 0.0,
+            f"resident_gain={gain:.2f}x(gate>={RESIDENT_GAIN_MIN});"
+            f"worst_case_rows={worst_rows};"
+            f"overcommit={PP_OVERCOMMIT};tokens_identical=True;"
+            f"n_req={n_req}"),
+    ]
+
+
+# --------------------------------------------------------------------------- #
 # CI smoke + bench-regression gate
 # --------------------------------------------------------------------------- #
 
@@ -849,11 +1002,16 @@ def smoke():
     # tokens by page reference), identity reuse==no_reuse, pool accounting
     for r in prefix_reuse_trace(n_req=8, n_sys=2, write_json=False):
         print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    # tiny overcommitted trace: degradation ladder fires (backpressure,
+    # >=1 preempt-resume), tokens stay identical, per-poll audit clean,
+    # resident-rows gain >= RESIDENT_GAIN_MIN vs worst-case sizing
+    for r in pool_pressure_trace(n_req=12, write_json=False):
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
     print("serving_bench smoke OK")
 
 
 ALL = [serving_trace, admission_trace, multimodal_trace,
-       prefix_reuse_trace]
+       prefix_reuse_trace, pool_pressure_trace]
 
 
 if __name__ == "__main__":
@@ -870,5 +1028,6 @@ if __name__ == "__main__":
         for r in serving_trace(quick=args.quick, policy=args.policy) \
                 + admission_trace(quick=args.quick) \
                 + multimodal_trace(quick=args.quick) \
-                + prefix_reuse_trace(quick=args.quick):
+                + prefix_reuse_trace(quick=args.quick) \
+                + pool_pressure_trace(quick=args.quick):
             print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")

@@ -21,6 +21,7 @@ n_layer heterogeneous bodies.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 import numpy as np
@@ -170,13 +171,24 @@ def plan_page_quota(plan: BudgetPlan, page_size: int) -> int:
 
 
 def plan_pool_pages(plan: BudgetPlan, batch: int, page_size: int,
-                    prefix_pages: int = 0) -> int:
+                    prefix_pages: int = 0, overcommit: float = 1.0) -> int:
     """Global pool size for a paged engine: the reserved null page, the
-    worst-case row demand (every row at quota), and the prefix cache's
-    residency headroom.  Sized so row allocation can always succeed —
-    prefix pages are reclaimable (LRU leaf eviction) whenever rows need the
-    space back."""
-    return 1 + batch * plan_page_quota(plan, page_size) + int(prefix_pages)
+    row-demand region, and the prefix cache's residency headroom.
+
+    ``overcommit = 1.0`` sizes the row region for the worst case (every row
+    at quota) so admission-time allocation always succeeds.  ``overcommit <
+    1.0`` is the capacity win paging buys (DESIGN.md §5): squeezed layers'
+    `pages_needed` release means typical rows use well under quota, so a
+    smaller pool hosts the same — or more — resident rows, with the engine's
+    watermark backpressure / preemption ladder absorbing the worst case.
+    The row region never shrinks below one full row quota, so a lone
+    request can always eventually admit (liveness floor)."""
+    overcommit = float(overcommit)
+    if overcommit <= 0.0:
+        raise ValueError(f"overcommit must be positive, got {overcommit}")
+    quota = plan_page_quota(plan, page_size)
+    rows_region = max(quota, math.ceil(batch * quota * overcommit))
+    return 1 + rows_region + int(prefix_pages)
 
 
 # --------------------------------------------------------------------------- #

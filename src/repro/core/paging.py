@@ -31,7 +31,9 @@ into a device page table is remapped to the null page 0.
 """
 from __future__ import annotations
 
-from typing import Callable, List, NamedTuple, Optional
+from collections import deque
+from typing import Callable, Deque, Dict, Iterable, NamedTuple, Optional, \
+    Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -220,6 +222,16 @@ class PagePool:
     ``evict_hook`` (set by `serving.prefix.PrefixCache`) is called when an
     allocation cannot be satisfied; it should release refcount-0-pinnable
     pages (LRU leaves) and return True while progress is possible.
+
+    **Watermarks** (`set_watermarks`) are advisory thresholds for an
+    *overcommitted* pool (DESIGN.md §5): `below_low()` tells the engine to
+    stop admitting, `above_high()` that free pages recovered enough to
+    resume.  They never change `alloc` semantics.  `forced_failures` is the
+    fault-injection hook: `try_alloc` (and the engine's admission headroom
+    check) consume one scripted failure per call before touching the free
+    list; the raising `alloc` ignores it so a mid-burst allocation can
+    never be failed out from under an admission the engine already
+    committed to.
     """
 
     def __init__(self, n_pages: int):
@@ -227,8 +239,11 @@ class PagePool:
         self.n_pages = int(n_pages)
         self.refcount = np.zeros(self.n_pages, np.int32)
         self.refcount[0] = 1                      # null page: never allocated
-        self._free: List[int] = list(range(1, self.n_pages))
+        self._free: Deque[int] = deque(range(1, self.n_pages))
         self.evict_hook: Optional[Callable[[], bool]] = None
+        self.low_pages = 0          # advisory: admission stalls below this
+        self.high_pages = 0         # advisory: stall clears above this
+        self.forced_failures = 0    # fault injection: try_alloc failures owed
 
     @property
     def sentinel(self) -> int:
@@ -244,25 +259,46 @@ class PagePool:
         """Allocated pages (excluding the null page)."""
         return self.n_pages - 1 - len(self._free)
 
+    def set_watermarks(self, low_pages: int, high_pages: int) -> None:
+        """Install advisory low/high free-page thresholds (page counts)."""
+        low_pages, high_pages = int(low_pages), int(high_pages)
+        if not 0 <= low_pages <= high_pages < self.n_pages:
+            raise ValueError(
+                f"watermarks must satisfy 0 <= low <= high < n_pages; got "
+                f"low={low_pages} high={high_pages} n_pages={self.n_pages}")
+        self.low_pages, self.high_pages = low_pages, high_pages
+
+    def below_low(self, extra_free: int = 0) -> bool:
+        """Free pages (+ `extra_free` reclaimables) at/below the low mark."""
+        return len(self._free) + int(extra_free) <= self.low_pages
+
+    def above_high(self, extra_free: int = 0) -> bool:
+        """Free pages (+ `extra_free` reclaimables) past the high mark."""
+        return len(self._free) + int(extra_free) > self.high_pages
+
     def alloc(self, n: int) -> np.ndarray:
         """Allocate `n` pages (refcount 1 each), evicting through
         ``evict_hook`` under pressure.  Raises RuntimeError when the pool is
-        genuinely exhausted — by construction the pool is sized for the
-        worst-case row demand, so this means the prefix cache's *pinned*
-        pages exceeded their headroom."""
+        genuinely exhausted — under the admission-time headroom check
+        (`ContinuousEngine.admissible_prefix`) this means a caller bypassed
+        the degradation ladder, or the prefix cache's *pinned* pages
+        exceeded their headroom."""
         while len(self._free) < n:
             if self.evict_hook is None or not self.evict_hook():
                 raise RuntimeError(
                     f"page pool exhausted: need {n}, free {len(self._free)} "
                     f"of {self.n_pages} (pinned prefix pages exceed headroom)")
-        ids = np.asarray([self._free.pop(0) for _ in range(n)], np.int32)
+        ids = np.asarray([self._free.popleft() for _ in range(n)], np.int32)
         self.refcount[ids] = 1
         return ids
 
     def try_alloc(self, n: int) -> Optional[np.ndarray]:
         """`alloc` that returns None instead of raising (prefix-cache
         insertion is best-effort: a full pool skips caching, never fails
-        admission)."""
+        admission).  Consumes one scripted `forced_failures` per call."""
+        if self.forced_failures > 0:
+            self.forced_failures -= 1
+            return None
         while len(self._free) < n:
             if self.evict_hook is None or not self.evict_hook():
                 return None
@@ -270,14 +306,138 @@ class PagePool:
 
     def incref(self, ids) -> None:
         ids = np.asarray(ids, np.int64).reshape(-1)
+        self._check_known(ids)
         self.refcount[ids] += 1
 
     def decref(self, ids) -> None:
         ids = np.asarray(ids, np.int64).reshape(-1)
-        assert (self.refcount[ids] > 0).all(), "double free"
+        self._check_known(ids)
+        if not (self.refcount[ids] > 0).all():
+            bad = ids[self.refcount[ids] <= 0]
+            raise RuntimeError(f"page double free: ids {bad.tolist()} "
+                               f"already have refcount 0")
         self.refcount[ids] -= 1
         for i in ids[self.refcount[ids] == 0]:
-            assert i != 0
             self._free.append(int(i))
 
+    def _check_known(self, ids: np.ndarray) -> None:
+        if ids.size and not ((ids > 0) & (ids < self.n_pages)).all():
+            bad = ids[(ids <= 0) | (ids >= self.n_pages)]
+            raise RuntimeError(
+                f"unknown page ids {bad.tolist()}: valid ids are "
+                f"1..{self.n_pages - 1} (0 is the reserved null page)")
+
     free = decref    # rows free privately-owned (refcount-1) pages
+
+
+def audit_pool_accounting(pool: PagePool,
+                          owners: Dict[str, Iterable[np.ndarray]],
+                          page_tables: Sequence[np.ndarray] = ()) -> None:
+    """Assert the pool's books balance: free list + owned pages must tile
+    ``{1, ..., n_pages - 1}`` exactly (DESIGN.md §5's pool-accounting audit).
+
+    ``owners`` maps an owner label (for error messages) to an iterable of
+    page-id arrays it holds; an id may appear under several owners only via
+    refcount sharing, and every owned id's refcount must equal the number of
+    owner entries referencing it.  ``page_tables`` are optional host copies
+    of device tables whose non-null entries must all be owned (the "deep"
+    check).  Raises AssertionError with a labelled message on any violation.
+    """
+    free = np.asarray(list(pool._free), np.int64)
+    if free.size != len(set(free.tolist())):
+        raise AssertionError("pool audit: duplicate ids on the free list")
+    if free.size and not ((free > 0) & (free < pool.n_pages)).all():
+        raise AssertionError("pool audit: free list holds out-of-range ids")
+    if (pool.refcount[free] != 0).any() if free.size else False:
+        raise AssertionError("pool audit: free page with nonzero refcount")
+
+    held: Dict[int, int] = {}
+    owner_of: Dict[int, str] = {}
+    for label, arrays in owners.items():
+        for arr in arrays:
+            for i in np.asarray(arr, np.int64).reshape(-1).tolist():
+                if not 0 < i < pool.n_pages:
+                    raise AssertionError(
+                        f"pool audit: owner {label!r} holds invalid id {i}")
+                held[i] = held.get(i, 0) + 1
+                owner_of[i] = label
+    free_set = set(free.tolist())
+    for i, n_refs in held.items():
+        if i in free_set:
+            raise AssertionError(
+                f"pool audit: page {i} owned by {owner_of[i]!r} but free")
+        if int(pool.refcount[i]) != n_refs:
+            raise AssertionError(
+                f"pool audit: page {i} refcount {int(pool.refcount[i])} != "
+                f"{n_refs} owner references (last owner {owner_of[i]!r})")
+    if int(pool.refcount[0]) != 1:
+        raise AssertionError("pool audit: null page refcount disturbed")
+    leaked = set(range(1, pool.n_pages)) - free_set - set(held)
+    if leaked:
+        raise AssertionError(f"pool audit: leaked pages {sorted(leaked)} "
+                             f"(neither free nor owned)")
+
+    owned = set(held)
+    for tbl in page_tables:
+        entries = np.asarray(tbl, np.int64).reshape(-1)
+        live = entries[(entries != 0) & (entries != pool.sentinel)]
+        bad = [i for i in set(live.tolist()) if i not in owned]
+        if bad:
+            raise AssertionError(
+                f"pool audit: device table references unowned pages {bad}")
+
+
+class PoolFaultInjector:
+    """Deterministic scripted pool pressure (DESIGN.md §5 fault injection).
+
+    ``script`` maps a tick index (the scheduler calls `tick(pool)` once per
+    poll that has a live pool, counting from 0) to a list of actions:
+
+      * ``("steal", n)``      — allocate up to ``n`` free pages and hold them
+      * ``("release", n)``    — return up to ``n`` stolen pages (-1: all)
+      * ``("fail_alloc", k)`` — owe the pool ``k`` forced `try_alloc`/
+                                headroom-check failures
+      * ``("evict_storm", k)`` — fire ``evict_hook`` up to ``k`` times
+
+    Stolen pages are real allocations (refcount 1, audited under the
+    injector's name), so steals exercise exactly the accounting paths a
+    burst of real admissions would.
+    """
+
+    def __init__(self, script: Dict[int, Sequence[Tuple[str, int]]]):
+        self.script = {int(k): list(v) for k, v in script.items()}
+        self.ticks = 0
+        self.stolen: Deque[int] = deque()
+
+    @property
+    def stolen_pages(self) -> np.ndarray:
+        return np.asarray(list(self.stolen), np.int32)
+
+    def tick(self, pool: PagePool) -> None:
+        actions = self.script.get(self.ticks, ())
+        self.ticks += 1
+        for op, arg in actions:
+            if op == "steal":
+                got = pool.try_alloc(min(int(arg), pool.n_free))
+                if got is not None:
+                    self.stolen.extend(got.tolist())
+            elif op == "release":
+                n = len(self.stolen) if arg < 0 else min(int(arg),
+                                                         len(self.stolen))
+                if n:
+                    ids = [self.stolen.popleft() for _ in range(n)]
+                    pool.decref(np.asarray(ids, np.int32))
+            elif op == "fail_alloc":
+                pool.forced_failures += int(arg)
+            elif op == "evict_storm":
+                for _ in range(int(arg)):
+                    if pool.evict_hook is None or not pool.evict_hook():
+                        break
+            else:
+                raise ValueError(f"unknown fault action {op!r}")
+
+    def release_all(self, pool: PagePool) -> None:
+        """Return every stolen page (end-of-trace cleanup)."""
+        if self.stolen:
+            pool.decref(self.stolen_pages)
+            self.stolen.clear()

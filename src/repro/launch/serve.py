@@ -90,6 +90,18 @@ def _run_oneshot(params, cfg, ecfg, args):
         print(f"out[{b}]: {r.tokens[b].tolist()}")
 
 
+def _parse_watermark(spec: str):
+    """``LOW:HIGH`` free-page fractions (e.g. ``0.05:0.25``) -> floats."""
+    if not spec:
+        return 0.0, 0.0
+    try:
+        low, high = (float(x) for x in spec.split(":"))
+    except ValueError:
+        raise SystemExit(f"--watermark expects LOW:HIGH fractions "
+                         f"(e.g. 0.05:0.25), got {spec!r}")
+    return low, high
+
+
 def _run_continuous(params, cfg, ecfg, args):
     """Heterogeneous-length traffic through the persistent-arena core."""
     bucket = max(4, args.prompt_len // 2)   # two buckets: length-sorted path
@@ -97,6 +109,7 @@ def _run_continuous(params, cfg, ecfg, args):
         # packed recurrent segments must align with the SSD chunk grid
         # (ContinuousEngine enforces it); round the bucket up to a multiple
         bucket = -(-bucket // cfg.ssm_chunk) * cfg.ssm_chunk
+    wm_low, wm_high = _parse_watermark(args.watermark)
     ccfg = ContinuousConfig(
         max_concurrency=args.max_concurrency, prompt_bucket=bucket,
         max_prompt_len=args.prompt_len, max_new_cap=args.max_new,
@@ -104,7 +117,9 @@ def _run_continuous(params, cfg, ecfg, args):
         length_sorted=not args.no_length_sort,
         packed_prefill=args.packed_prefill,
         page_size=args.page_size,
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache,
+        overcommit=args.overcommit,
+        watermark_low=wm_low, watermark_high=wm_high)
     sched = ContinuousScheduler(params, cfg, ecfg, ccfg, seed=args.seed)
     print(f"capability: {sched.capability.describe()}")
     rng = np.random.default_rng(args.seed)
@@ -173,6 +188,14 @@ def _run_continuous(params, cfg, ecfg, args):
         print(f"page pool: {core.pool_pages} pages of {ccfg.page_size} "
               f"tokens, occupancy {core.pool_occupancy:.2f} "
               f"({core.pool_pages_resident} resident)")
+    if ccfg.overcommit != 1.0 or ccfg.watermark_high > 0.0:
+        print(f"pool pressure: overcommit {ccfg.overcommit:.2f}, "
+              f"watermarks {ccfg.watermark_low:.2f}:"
+              f"{ccfg.watermark_high:.2f}; peak resident rows "
+              f"{core.peak_resident_rows}, {core.stall_polls} stalled "
+              f"poll(s), {core.watermark_hits} watermark hit(s), "
+              f"{core.preemptions} preemption(s), {core.requeues} "
+              f"requeue(s)")
     if ccfg.prefix_cache and core._prefix is not None:
         print(f"prefix cache: {core.prefix_hits} hit(s), "
               f"{core.prompt_tokens_referenced} prompt tokens admitted by "
@@ -217,6 +240,16 @@ def main():
                          "chunks: shared prompts prefill once and later "
                          "requests admit by page reference (requires "
                          "--page-size > 0)")
+    ap.add_argument("--overcommit", type=float, default=1.0,
+                    help="page-pool overcommit factor (continuous batching, "
+                         "needs --page-size): <1.0 sizes the pool below the "
+                         "worst case so squeezed pages host more rows; the "
+                         "engine absorbs exhaustion with backpressure and "
+                         "preemption instead of raising")
+    ap.add_argument("--watermark", default="",
+                    help="LOW:HIGH free-page fractions for admission "
+                         "backpressure hysteresis (e.g. 0.05:0.25); empty = "
+                         "fit-based admission only")
     ap.add_argument("--flash-decode", action="store_true",
                     help="route decode attention through the Pallas "
                          "flash-decode kernel (interpret mode off-TPU)")

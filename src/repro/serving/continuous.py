@@ -75,9 +75,10 @@ from repro.core.allocation import (BudgetPlan, RecurrentTier, plan_pool_pages,
 from repro.core.cache import (SlotCache, clear_row, clear_state_row,
                               empty_cache, gather_row_segments, insert_rows,
                               insert_state_rows, pad_cache)
-from repro.core.paging import (KVPool, PagePool, clear_tier_row, empty_pool,
-                               empty_paged_tier, insert_tier_rows, pages_for,
-                               pages_needed, scatter_rows_to_pages)
+from repro.core.paging import (KVPool, PagePool, audit_pool_accounting,
+                               clear_tier_row, empty_pool, empty_paged_tier,
+                               insert_tier_rows, pages_for, pages_needed,
+                               scatter_rows_to_pages)
 from repro.core.policies import H2O, SINK_H2O, keep_priority
 from repro.models.frontend import STUB_FRONTENDS
 from repro.models.ssm import empty_decode_state
@@ -144,6 +145,29 @@ class ContinuousConfig:
     #: pressure LRU leaves evict first, then inserts cache a shorter
     #: prefix
     prefix_pages: int = 0
+    #: pool overcommit factor (requires `page_size`>0 when != 1.0): the row
+    #: region of the page pool is sized to `overcommit` x the worst case, so
+    #: squeezed layers' released pages host MORE resident rows than the
+    #: worst-case sizing allows (DESIGN.md §5).  < 1.0 makes admission-time
+    #: exhaustion reachable — the engine absorbs it with the degradation
+    #: ladder (prefix eviction -> backpressure -> preemption) instead of
+    #: raising.  Never drops below one full row quota (liveness floor).
+    overcommit: float = 1.0
+    #: low watermark, a fraction of usable pool pages: admission stalls
+    #: (backpressure) once admitting would leave <= this many pages free
+    #: after counting reclaimable prefix residency.  0 = fit-based only.
+    watermark_low: float = 0.0
+    #: high watermark fraction: a stalled engine resumes admission only once
+    #: effective free pages recover PAST this mark (hysteresis, so admission
+    #: doesn't flap at the low mark).  Must be >= watermark_low.
+    watermark_high: float = 0.0
+    #: consecutive fully-stalled scheduler polls tolerated before the ladder
+    #: escalates to preempting a victim row (fewest decoded tokens first)
+    preempt_after: int = 3
+    #: run the pool-accounting audit after every scheduler poll (free list +
+    #: refcounts + row tables + prefix residency must tile the pool); debug
+    #: flag — tests and the `pool_pressure` bench keep it on
+    audit_pool: bool = False
 
     def resolved_pack_len(self) -> int:
         b = self.prompt_bucket
@@ -269,6 +293,22 @@ class ContinuousEngine:
                 f"with the SSD chunk grid")
         if ccfg.page_size < 0:
             raise ValueError(f"page_size must be >= 0, got {ccfg.page_size}")
+        if ccfg.overcommit <= 0:
+            raise ValueError(
+                f"overcommit must be positive, got {ccfg.overcommit}")
+        if not 0.0 <= ccfg.watermark_low <= ccfg.watermark_high < 1.0:
+            raise ValueError(
+                f"watermarks must satisfy 0 <= low <= high < 1; got "
+                f"low={ccfg.watermark_low} high={ccfg.watermark_high}")
+        if ccfg.preempt_after < 1:
+            raise ValueError(
+                f"preempt_after must be >= 1, got {ccfg.preempt_after}")
+        if (ccfg.overcommit != 1.0 or ccfg.watermark_high > 0.0) \
+                and ccfg.page_size <= 0:
+            raise ValueError(
+                "overcommit / watermarks require page_size > 0: contiguous "
+                "arenas are sized per row, there is no shared pool to "
+                "overcommit")
         if ccfg.prefix_cache:
             if ccfg.page_size <= 0:
                 raise ValueError(
@@ -358,6 +398,18 @@ class ContinuousEngine:
         self.prompt_tokens_referenced = 0
         self.prefix_hits = 0
         self.prefix_insert_dispatches = 0
+        # pool-pressure accounting (the degradation ladder, DESIGN.md §5):
+        # rows preempted mid-decode, their re-queued resumptions (the
+        # scheduler increments requeues), polls that held queued requests
+        # under pressure, low-watermark stall transitions, and the high
+        # point of simultaneously resident rows — the number the
+        # `pool_pressure` bench compares against worst-case sizing
+        self.preemptions = 0
+        self.requeues = 0
+        self.stall_polls = 0
+        self.watermark_hits = 0
+        self.peak_resident_rows = 0
+        self._stalled = False    # low-watermark hysteresis state
 
     # ------------------------------------------------------------ properties
     @property
@@ -371,6 +423,16 @@ class ContinuousEngine:
     @property
     def n_occupied(self) -> int:
         return len(self._occupied)
+
+    @property
+    def occupied_slots(self) -> List[int]:
+        """Live row indices, admission order (a copy)."""
+        return list(self._occupied)
+
+    def decoded_tokens(self, slot: int) -> int:
+        """Tokens an occupied row has generated so far (admission token
+        included) — the preemption cost the victim policy minimizes."""
+        return len(self._buf[slot])
 
     @property
     def pool_pages(self) -> int:
@@ -690,6 +752,16 @@ class ContinuousEngine:
         executables: enough pages for the longest admissible prompt."""
         return pages_for(self.ccfg.max_prompt_len, self.ccfg.page_size)
 
+    @property
+    def _admit_max_len(self) -> int:
+        """Admission-time prompt cap.  A PREEMPTED request resumes as
+        prompt + generated-so-far, which can legitimately exceed
+        `max_prompt_len` by up to ``max_new_cap - 1`` tokens; the arenas
+        are sized for ``max_prompt_len + max_new_cap`` total positions, so
+        the relaxed cap never overflows a tier.  User-facing submission
+        still enforces `max_prompt_len` (`ContinuousScheduler.submit`)."""
+        return self.ccfg.max_prompt_len + self.ccfg.max_new_cap - 1
+
     def _init_state(self) -> ContinuousState:
         cfg, plan = self.cfg, self.plan
         B = self.ccfg.max_concurrency
@@ -718,8 +790,13 @@ class ContinuousEngine:
                 big = ptier(plan.n_big, plan.b_big)
                 small = ptier(plan.n_small, plan.b_small)
                 n_pool = plan_pool_pages(plan, B, psize,
-                                         prefix_pages=self._prefix_budget())
+                                         prefix_pages=self._prefix_budget(),
+                                         overcommit=self.ccfg.overcommit)
                 self._pool = PagePool(n_pool)
+                usable = n_pool - 1
+                self._pool.set_watermarks(
+                    int(self.ccfg.watermark_low * usable),
+                    int(self.ccfg.watermark_high * usable))
                 kv_pool = empty_pool(n_pool, psize, cfg.n_kv_heads, cfg.hd,
                                      dtype)
                 if self.ccfg.prefix_cache:
@@ -801,6 +878,120 @@ class ContinuousEngine:
 
         return (tier_tbl(plan.n_big, plan.b_big),
                 tier_tbl(plan.n_small, plan.b_small))
+
+    # ------------------------------------------------- pool-pressure ladder
+    def req_pages(self, prompt_len: int, max_new: int) -> int:
+        """Pages ONE request will allocate at admission, across every
+        attention layer of both tiers (the host twin of
+        `_alloc_row_tables`'s per-layer `pages_needed` calls)."""
+        plan, psize = self.plan, self.ccfg.page_size
+        mn = min(max_new, self.ccfg.max_new_cap)
+        return (plan.n_big * pages_needed(prompt_len, plan.b_big, mn, psize)
+                + plan.n_small * pages_needed(prompt_len, plan.b_small, mn,
+                                              psize))
+
+    def admissible_prefix(self, reqs: Sequence[Tuple[np.ndarray, int]]
+                          ) -> int:
+        """How many leading requests of `reqs` the pool can admit NOW —
+        the scheduler's backpressure gate (DESIGN.md §5 degradation
+        ladder).
+
+        Contiguous mode admits everything (rows are the only capacity).
+        Paged mode charges each request its exact `req_pages` demand
+        against the pool's effective headroom: free pages plus the prefix
+        cache's reclaimable residency (the ladder's first rung — `alloc`
+        LRU-evicts those on demand), minus the low watermark.  Returning 0
+        enters the STALLED state; a stalled engine keeps refusing until
+        effective free pages recover past the HIGH watermark (hysteresis),
+        or a preemption (`preempt`) clears the stall outright.  Scripted
+        `PagePool.forced_failures` are consumed here — one refused poll
+        per owed failure — so fault injection exercises exactly the
+        backpressure path real exhaustion takes.  The low watermark is
+        waived when no rows are resident: a lone over-quota-priced
+        request must always eventually admit (liveness)."""
+        if not self._paged:
+            return len(reqs)
+        if self._pool is None:
+            # the plan (and the pool) calibrate on the first admission;
+            # under overcommit admit ONE request so the calibration burst
+            # itself cannot overrun the undersized pool
+            return 1 if self.ccfg.overcommit < 1.0 else len(reqs)
+        pool = self._pool
+        if pool.forced_failures > 0:
+            pool.forced_failures -= 1
+            self._enter_stall()
+            return 0
+        reclaim = self._prefix.reclaimable_pages if self._prefix else 0
+        if self._stalled:
+            if pool.above_high(reclaim):
+                self._stalled = False
+            else:
+                return 0
+        floor = pool.low_pages if self._occupied else 0
+        headroom = pool.n_free + reclaim - floor
+        ok = 0
+        for p, mn in reqs:
+            need = self.req_pages(len(p), mn)
+            if need > headroom:
+                break
+            headroom -= need
+            ok += 1
+        if ok == 0:
+            self._enter_stall()
+        return ok
+
+    def _enter_stall(self):
+        if not self._stalled:
+            self._stalled = True
+            self.watermark_hits += 1
+
+    def preempt(self, slot: int) -> np.ndarray:
+        """Evict a LIVE row mid-decode (the ladder's last rung): clear its
+        device slots, release its pages, recycle the row, and return the
+        tokens it had generated so far (admission token included) — the
+        scheduler re-queues the request as prompt + these tokens, so a
+        resumed run re-prefills its own history and (greedy, position-based
+        policies) continues token-identically.  No `Completed` is emitted.
+        Clears a watermark stall: the released pages are exactly what the
+        stalled admission was waiting for."""
+        if slot not in self._occupied:
+            raise ValueError(f"slot {slot} is not occupied")
+        self.state = self._clear_fn(self.state, slot)
+        if self._paged and self._row_pages[slot]:
+            self._pool.free(np.asarray(self._row_pages[slot], np.int32))
+            self._row_pages[slot] = []
+        self._occupied.remove(slot)
+        self._free.append(slot)
+        toks = np.asarray(self._buf[slot], np.int32)
+        self._buf[slot] = []
+        self._max_new[slot] = 0
+        self._steps[slot] = 0
+        self.preemptions += 1
+        self._stalled = False
+        return toks
+
+    def audit_pool(self, extra_owned: Sequence[np.ndarray] = (),
+                   deep: bool = False) -> None:
+        """Assert the page pool's books balance (free list + refcounts +
+        row page ids + prefix residency tile ``{1..n_pages-1}``); `deep`
+        additionally checks every live device page-table entry is owned.
+        No-op in contiguous mode or before the plan is calibrated.
+        `extra_owned` names pages held outside the engine (a
+        `PoolFaultInjector`'s steals)."""
+        if self._pool is None:
+            return
+        owners = {"rows": [np.asarray(ids, np.int32)
+                           for ids in self._row_pages if ids]}
+        if self._prefix is not None:
+            owners["prefix"] = self._prefix.page_ids()
+        if len(extra_owned):
+            owners["injected"] = [np.asarray(a, np.int32)
+                                  for a in extra_owned]
+        tbls = ()
+        if deep and self._has_attn:
+            tbls = [np.asarray(self.state.dec.big.tbl),
+                    np.asarray(self.state.dec.small.tbl)]
+        audit_pool_accounting(self._pool, owners, tbls)
 
     def admit(self, prompt: np.ndarray, max_new: int) -> int:
         """Prefill one request and insert it into a free row; returns the
@@ -899,7 +1090,13 @@ class ContinuousEngine:
             return self._admit_packed(reqs, embeds=embeds)
         if self._prefix is None or embeds:
             return self._admit_bucketed(reqs, embeds)
+        # resumed (preempted) prompts can exceed max_prompt_len; the ctx
+        # executables' context region is sized for max_prompt_len pages, so
+        # over-long prompts bypass the tree (treated as a miss)
+        no_match = PrefixMatch(
+            0, np.zeros((self._prefix.n_layers, 0), np.int32), ())
         matches = [self._prefix.lookup(np.asarray(p, np.int32))
+                   if len(p) <= self.ccfg.max_prompt_len else no_match
                    for p, _ in reqs]
         try:
             miss = [i for i, m in enumerate(matches) if m.matched == 0]
@@ -963,7 +1160,7 @@ class ContinuousEngine:
             prompts = [np.asarray(e, np.float32) for e, _ in reqs]
             emb, valid = pad_embeds(prompts, self.ccfg.prompt_bucket,
                                     batch=NB,
-                                    max_len=self.ccfg.max_prompt_len)
+                                    max_len=self._admit_max_len)
             for i in range(n, NB):    # pad rows replicate request 0
                 emb[i], valid[i] = emb[0], valid[0]
             P = emb.shape[1]
@@ -973,7 +1170,7 @@ class ContinuousEngine:
             prompts = [np.asarray(p, np.int32) for p, _ in reqs]
             toks, valid = pad_prompts(prompts, self.ccfg.prompt_bucket,
                                       batch=NB,
-                                      max_len=self.ccfg.max_prompt_len)
+                                      max_len=self._admit_max_len)
             for i in range(n, NB):    # pad rows replicate request 0
                 toks[i], valid[i] = toks[0], valid[0]
             P = toks.shape[1]
@@ -1023,7 +1220,7 @@ class ContinuousEngine:
         suffixes = [p[m.matched:] for p, m in zip(prompts, matches)]
         toks, valid = pad_prompts(suffixes, self.ccfg.prompt_bucket,
                                   batch=NB,
-                                  max_len=self.ccfg.max_prompt_len)
+                                  max_len=self._admit_max_len)
         Lat = n_attn_layers(self.cfg)
         Cmax = self._cmax
         ctx_ids = np.zeros((Lat, NB, Cmax), np.int32)   # default: null page
@@ -1165,7 +1362,7 @@ class ContinuousEngine:
             plan = plan_pack_lengths([len(e) for e in prompts], bucket,
                                      self.ccfg.resolved_pack_len(),
                                      quantum=quantum,
-                                     max_len=self.ccfg.max_prompt_len)
+                                     max_len=self._admit_max_len)
             packed = pack_embeds(plan, prompts)
             ppre = self.engine.packed_prefill_jit(
                 plan.n_rows, plan.pack_len, plan.max_segments, embeds=True)(
@@ -1175,7 +1372,7 @@ class ContinuousEngine:
             prompts = [np.asarray(p, np.int32) for p, _ in reqs]
             plan = plan_pack(prompts, bucket, self.ccfg.resolved_pack_len(),
                              quantum=quantum,
-                             max_len=self.ccfg.max_prompt_len)
+                             max_len=self._admit_max_len)
             ppre = self.engine.packed_prefill_jit(
                 plan.n_rows, plan.pack_len, plan.max_segments)(
                     self.params, plan.tokens, None, plan.positions,
@@ -1229,6 +1426,8 @@ class ContinuousEngine:
             self._max_new[slot] = max_news[i]
             self._steps[slot] = 0
             self._occupied.append(slot)
+            self.peak_resident_rows = max(self.peak_resident_rows,
+                                          len(self._occupied))
             self.admitted += 1
             self.tokens_emitted += 1
             if not (rem0[i] > 0 and not (eos >= 0 and t0 == eos)):

@@ -180,3 +180,37 @@ class PrefixCache:
     @property
     def resident_pages(self) -> int:
         return self.n_nodes * self.n_layers
+
+    def _walk(self) -> List[_Node]:
+        out: List[_Node] = []
+        stack = list(self._root.values())
+        while stack:
+            n = stack.pop()
+            out.append(n)
+            stack.extend(n.children.values())
+        return out
+
+    @property
+    def reclaimable_pages(self) -> int:
+        """Pages LRU eviction could free right now (unpinned-subtree
+        residency).  The engine's watermark headroom counts these as
+        effectively free: backpressure should not stall on memory the
+        ladder's first rung can reclaim."""
+        return sum(self.n_layers for n in self._walk() if self._droppable(n))
+
+    def _droppable(self, node: _Node) -> bool:
+        """A node is reclaimable iff nothing at or below it is pinned
+        (eviction frees leaves first, but a fully unpinned subtree falls
+        one leaf per eviction call)."""
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            if n.pins:
+                return False
+            stack.extend(n.children.values())
+        return True
+
+    def page_ids(self) -> List[np.ndarray]:
+        """Every resident page-id array ([n_layers] per node) — the prefix
+        cache's entry in the pool-accounting audit."""
+        return [n.ids for n in self._walk()]

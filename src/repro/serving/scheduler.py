@@ -23,10 +23,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.paging import PoolFaultInjector
 from repro.serving.continuous import ContinuousConfig, ContinuousEngine
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.intake import IntakeEncoder, MultimodalRequest
@@ -39,7 +40,14 @@ class Request:
     the payload: token prompts carry `prompt`, pre-encoded embedding
     sequences carry `embeds` ([len, d] float32), and typed multimodal
     requests carry `mm` until the admission poll encodes them (batched,
-    one frontend dispatch per bucket — `IntakeEncoder`)."""
+    one frontend dispatch per bucket — `IntakeEncoder`).
+
+    `generated` is the preempt-and-resume carry (DESIGN.md §5): tokens the
+    request had produced before a preemption released its row.  A resumed
+    request re-queues with ``prompt = original prompt + generated`` (it
+    re-prefills its own history) and its remaining token budget shrinks by
+    ``len(generated)``; harvest prepends `generated` so `tokens` is always
+    the full `max_new`-length output, preemptions invisible."""
     rid: int
     prompt: Optional[np.ndarray]        # [P] int32 (token requests)
     max_new: int
@@ -48,6 +56,17 @@ class Request:
     latency_s: float = 0.0
     embeds: Optional[np.ndarray] = None       # [P, d] float32
     mm: Optional[MultimodalRequest] = None    # encoded at poll time
+    generated: Optional[np.ndarray] = None    # tokens emitted pre-preemption
+
+
+def select_victim(candidates: Sequence[Tuple[int, int]]) -> Optional[int]:
+    """Preemption victim policy over ``(slot, tokens_generated)`` pairs:
+    fewest generated tokens first — the resumed prefill re-pays exactly
+    those tokens, so the cheapest victim is the youngest — with the slot
+    index as a deterministic tie-break.  None when nothing is eligible."""
+    if not candidates:
+        return None
+    return min(candidates, key=lambda c: (int(c[1]), int(c[0])))[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,16 +154,31 @@ class ContinuousScheduler(_RequestQueue):
     """
 
     def __init__(self, params, cfg, ecfg: EngineConfig,
-                 ccfg: ContinuousConfig = ContinuousConfig(), seed: int = 0):
+                 ccfg: ContinuousConfig = ContinuousConfig(), seed: int = 0,
+                 injector: Optional[PoolFaultInjector] = None):
         super().__init__()
         self.core = ContinuousEngine(params, cfg, ecfg, ccfg, seed=seed)
         self.intake = IntakeEncoder(params, cfg)
         self._slot_req: Dict[int, Request] = {}
+        self.injector = injector       # scripted pool pressure (tests/bench)
+        self._stall_streak = 0         # consecutive pressure-held polls
 
     @property
     def capability(self):
         """Config-driven report: budget-tiered vs fixed-cost layers."""
         return self.core.cap
+
+    def submit(self, prompt: np.ndarray, max_new: int = 32) -> int:
+        """Enqueue a token prompt.  Length is validated at SUBMIT time
+        against `max_prompt_len`: the ENGINE's admission cap is relaxed to
+        admit resumed (prompt + generated) payloads, so the user-facing
+        bound has to be enforced here."""
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) > self.core.ccfg.max_prompt_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} exceeds max_prompt_len "
+                f"{self.core.ccfg.max_prompt_len}")
+        return super().submit(prompt, max_new)
 
     def submit_embeds(self, embeds: np.ndarray, max_new: int = 32) -> int:
         """Enqueue a pre-encoded embedding sequence ([len, d] float32) —
@@ -188,13 +222,19 @@ class ContinuousScheduler(_RequestQueue):
 
     def _admit_payloads(self, reqs: List[Request]):
         """Resolve each burst member to its admit_many payload, encoding
-        the typed multimodal members in one batched intake pass."""
+        the typed multimodal members in one batched intake pass.  Encoded
+        members drop their `mm` handle so a burst held back by pool
+        backpressure is not re-encoded on the retry poll.  A resumed
+        member's budget shrinks by what it already generated."""
         mm = [r for r in reqs if r.mm is not None]
         if mm:
             encoded = self.intake.encode_burst([r.mm for r in mm])
             for r, e in zip(mm, encoded):
                 r.embeds = e
-        return [(r.prompt if r.prompt is not None else r.embeds, r.max_new)
+                r.mm = None
+        return [(r.prompt if r.prompt is not None else r.embeds,
+                 r.max_new - (len(r.generated) if r.generated is not None
+                              else 0))
                 for r in reqs]
 
     @property
@@ -212,28 +252,96 @@ class ContinuousScheduler(_RequestQueue):
         done = []
         for c in self.core.pop_completed():
             r = self._slot_req.pop(c.slot)
-            r.tokens = c.tokens[:r.max_new]
+            toks = c.tokens if r.generated is None \
+                else np.concatenate([r.generated, c.tokens])
+            r.tokens = toks[:r.max_new]
             r.latency_s = time.perf_counter() - r.submitted_at
             done.append(r)
         return done
 
+    def preempt_slot(self, slot: int) -> Request:
+        """Preempt the row in `slot` (the ladder's last rung — also the
+        test hook for forcing a preempt→resume): release its pages, bank
+        the tokens it generated, and re-queue it at the HEAD of the queue
+        as ``prompt + generated`` so re-admission resumes it
+        token-identically (greedy, position-based policies).  Only
+        token-prompt requests are eligible (`select_victim` candidates);
+        embeds/multimodal rows cannot re-prefill appended token ids."""
+        r = self._slot_req.pop(slot)
+        if r.prompt is None:
+            raise ValueError(f"slot {slot} holds an embeds request — not "
+                             f"resumable, pick a token-prompt victim")
+        toks = self.core.preempt(slot)
+        prev = r.generated if r.generated is not None \
+            else np.zeros(0, np.int32)
+        r.generated = np.concatenate([prev, toks]).astype(np.int32)
+        r.prompt = np.concatenate([r.prompt, toks]).astype(np.int32)
+        self.core.requeues += 1
+        self.queue.insert(0, r)
+        return r
+
+    def _victim_slot(self) -> Optional[int]:
+        """Fewest-generated-tokens-first victim among resumable rows."""
+        cands = [(s, self.core.decoded_tokens(s))
+                 for s in self.core.occupied_slots
+                 if self._slot_req[s].prompt is not None]
+        return select_victim(cands)
+
     def poll(self) -> List[Request]:
         """One scheduler iteration, fixed contract (docs/API.md): harvest
         finished rows → admit every queued arrival that fits a free row
-        (typed multimodal members are frontend-encoded first, batched
-        across the burst, then ONE `admit_many` per burst; the engine
-        picks the packed / length-sorted / padded layout per modality) →
-        one fused decode block → harvest and return completions."""
+        AND the page pool's headroom (typed multimodal members are
+        frontend-encoded first, batched across the burst, then ONE
+        `admit_many` per burst; the engine picks the packed /
+        length-sorted / padded layout per modality) → one fused decode
+        block → harvest and return completions.
+
+        Under pool pressure (`ContinuousEngine.admissible_prefix` refusing
+        the queue head) admission is HELD — the queue is the backpressure
+        buffer — and after `preempt_after` consecutive held polls the
+        ladder escalates: ONE victim row per poll (fewest generated
+        tokens, `select_victim`) is preempted and re-queued so its pages
+        host the stalled head.  A configured `PoolFaultInjector` ticks at
+        the top of every poll with a live pool; `ccfg.audit_pool` runs the
+        pool-accounting audit (device tables included) at the bottom."""
         done = self._harvest()
+        if self.injector is not None and self.core._pool is not None:
+            self.injector.tick(self.core._pool)
+        held = False
+        preempted = False
         while self.queue and self.core.has_free:
             take = min(len(self.queue), self.core.n_free)
-            reqs, self.queue = self.queue[:take], self.queue[take:]
-            slots = self.core.admit_many(self._admit_payloads(reqs))
+            payloads = self._admit_payloads(self.queue[:take])
+            n_ok = self.core.admissible_prefix(payloads)
+            if n_ok == 0:
+                if not preempted and \
+                        self._stall_streak + 1 >= self.core.ccfg.preempt_after:
+                    victim = self._victim_slot()
+                    if victim is not None:
+                        self.preempt_slot(victim)
+                        preempted = True
+                        continue
+                held = True
+                break
+            reqs, self.queue = self.queue[:n_ok], self.queue[n_ok:]
+            slots = self.core.admit_many(payloads[:n_ok])
             for r, s in zip(reqs, slots):
                 self._slot_req[s] = r
             done.extend(self._harvest())   # instant EOS / max_new == 1
+            if n_ok < take:               # partial fit: pressure remains
+                held = True
+                break
+        if held:
+            self._stall_streak += 1
+            self.core.stall_polls += 1
+        else:
+            self._stall_streak = 0
         self.core.decode_block()
         done.extend(self._harvest())
+        if self.core.ccfg.audit_pool:
+            extra = (self.injector.stolen_pages,) \
+                if self.injector is not None else ()
+            self.core.audit_pool(extra_owned=extra, deep=True)
         return done
 
     def run_until_empty(self) -> List[Request]:

@@ -1,0 +1,367 @@
+"""Overcommitted paged serving: the degradation ladder end to end.
+
+Fast-lane units cover the host-side pieces in isolation — watermark math,
+the O(1) deque free list, `RuntimeError` lifecycle guards (they must
+survive ``python -O``), forced-failure fault injection, the scripted
+`PoolFaultInjector`, victim selection, the pool-accounting audit, and
+overcommitted pool sizing.
+
+System-lane tests drive the whole ladder through the scheduler: preempted
+requests resume TOKEN-IDENTICALLY across dense / hybrid / ssm families and
+both prefill layouts, and an overcommitted pool under fault injection
+serves the same tokens as a worst-case-sized one with the per-poll audit
+on.  Identity scope (DESIGN.md §5): a resumed request re-prefills
+``prompt + generated``, so exactness requires that length to stay within
+the cache budget (all specs here keep ``plen + max_new <= budget``).
+"""
+import time
+
+import pytest
+
+import numpy as np
+
+import jax
+
+from repro.core import PolicyConfig
+from repro.core.allocation import plan_page_quota, plan_pool_pages, \
+    uniform_plan
+from repro.core.paging import (PagePool, PoolFaultInjector,
+                               audit_pool_accounting)
+from repro.models import ModelConfig, init_params
+from repro.serving import (ContinuousConfig, ContinuousEngine,
+                           ContinuousScheduler, EngineConfig)
+from repro.serving.scheduler import select_victim
+
+fast = pytest.mark.fast
+system = pytest.mark.system
+
+
+# =========================================================== fast-lane units
+@fast
+def test_watermark_validation_and_predicates():
+    pool = PagePool(11)                   # 10 usable pages
+    for lo, hi in ((-1, 2), (3, 2), (2, 11), (11, 11)):
+        with pytest.raises(ValueError):
+            pool.set_watermarks(lo, hi)
+    pool.set_watermarks(2, 5)
+    assert not pool.below_low() and pool.above_high()       # free = 10
+    a = pool.alloc(8)                                       # free = 2
+    assert pool.below_low() and not pool.above_high()
+    # reclaimable headroom counts as effectively free
+    assert not pool.below_low(extra_free=1)
+    assert pool.above_high(extra_free=4)
+    pool.free(a)
+    assert pool.above_high()
+    # watermarks are advisory: alloc itself never consults them
+    b = pool.alloc(10)
+    assert b.size == 10
+
+
+@fast
+def test_free_list_is_constant_time_at_scale():
+    """10k-page alloc/free cycles: the deque free list keeps this well
+    under a second; the old `list.pop(0)` free list is O(pages) per alloc
+    and blows far past it."""
+    pool = PagePool(10_001)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        ids = pool.alloc(10_000)
+        pool.free(ids)
+    assert time.perf_counter() - t0 < 1.0
+    # FIFO recycling keeps ids in deterministic order
+    assert pool.alloc(3).tolist() == [1, 2, 3]
+
+
+@fast
+def test_lifecycle_guards_raise_runtime_error():
+    """Double free and unknown ids must raise `RuntimeError`, not rely on
+    `assert` — the guards hold under ``python -O``."""
+    pool = PagePool(6)
+    a = pool.alloc(2)
+    pool.free(a)
+    with pytest.raises(RuntimeError, match="double free"):
+        pool.decref(a)
+    with pytest.raises(RuntimeError, match="unknown page"):
+        pool.decref(np.asarray([0], np.int32))      # null page is reserved
+    with pytest.raises(RuntimeError, match="unknown page"):
+        pool.decref(np.asarray([6], np.int32))      # past the pool
+    with pytest.raises(RuntimeError, match="unknown page"):
+        pool.incref(np.asarray([-3], np.int32))
+
+
+@fast
+def test_try_alloc_and_forced_failures():
+    pool = PagePool(4)
+    assert pool.try_alloc(5) is None                # over capacity: no raise
+    pool.forced_failures = 2
+    assert pool.try_alloc(1) is None                # consumed one debt each
+    assert pool.forced_failures == 1
+    a = pool.alloc(1)                               # raising alloc is exempt
+    assert a.size == 1 and pool.forced_failures == 1
+    assert pool.try_alloc(1) is None
+    got = pool.try_alloc(2)                         # debt paid: real pages
+    assert got is not None and got.size == 2
+
+
+@fast
+def test_fault_injector_scripts_are_deterministic():
+    evictions = []
+
+    def run():
+        pool = PagePool(9)
+        pool.evict_hook = lambda: (evictions.append(1), False)[1]
+        inj = PoolFaultInjector({0: [("steal", 3)],
+                                 1: [("fail_alloc", 2)],
+                                 2: [("release", 2), ("evict_storm", 3)],
+                                 3: [("release", -1)]})
+        log = []
+        for _ in range(5):
+            inj.tick(pool)
+            log.append((pool.n_free, pool.forced_failures,
+                        inj.stolen_pages.tolist()))
+        return pool, inj, log
+
+    p1, i1, log1 = run()
+    p2, i2, log2 = run()
+    assert log1 == log2                             # scripted, not sampled
+    assert log1[0] == (5, 0, [1, 2, 3])             # steal holds real pages
+    assert log1[1][1] == 2                          # fail_alloc owes debt
+    assert log1[2][2] == [3]                        # partial release, FIFO
+    assert log1[3][2] == []                         # release -1 drains
+    assert p1.n_free == 8 - 0                       # all stolen pages back
+    assert len(evictions) == 2                      # storm stops on False
+    i1.release_all(p1)                              # idempotent when empty
+    with pytest.raises(ValueError, match="unknown fault action"):
+        PoolFaultInjector({0: [("melt", 1)]}).tick(p1)
+    # steals audit as a first-class owner
+    i3 = PoolFaultInjector({0: [("steal", 4)]})
+    i3.tick(p2)
+    audit_pool_accounting(p2, {"injected": [i3.stolen_pages]})
+
+
+@fast
+def test_select_victim_prefers_fewest_decoded_then_lowest_slot():
+    assert select_victim([]) is None
+    assert select_victim([(3, 5), (1, 2), (2, 8)]) == 1
+    assert select_victim([(3, 2), (1, 2), (2, 1)]) == 2     # fewest decoded
+    assert select_victim([(4, 2), (2, 2)]) == 2             # tie: lowest slot
+
+
+@fast
+def test_audit_detects_each_violation_class():
+    pool = PagePool(8)
+    rows = pool.alloc(3)
+    cache = pool.alloc(2)
+    owners = {"rows": [rows], "cache": [cache]}
+    audit_pool_accounting(pool, owners)             # balanced books pass
+
+    with pytest.raises(AssertionError, match="leaked"):
+        audit_pool_accounting(pool, {"rows": [rows]})   # cache pages orphaned
+    with pytest.raises(AssertionError, match="refcount"):
+        audit_pool_accounting(pool, {"rows": [rows, rows[:1]],
+                                     "cache": [cache]})  # claim > refcount
+    pool.incref(rows[:1])                           # now the share is real
+    audit_pool_accounting(pool, {"rows": [rows, rows[:1]], "cache": [cache]})
+    pool.decref(rows[:1])
+    with pytest.raises(AssertionError, match="invalid id"):
+        audit_pool_accounting(pool, {"rows": [np.asarray([0], np.int32)]})
+    # deep check: device tables may reference only owned pages (0 and the
+    # drop sentinel are layout values, not references)
+    tbl = np.asarray([[0, int(rows[0]), pool.sentinel]], np.int32)
+    audit_pool_accounting(pool, owners, [tbl])
+    free_id = pool.n_pages - 1                      # never allocated above
+    with pytest.raises(AssertionError, match="unowned"):
+        audit_pool_accounting(
+            pool, owners, [np.asarray([[free_id]], np.int32)])
+    # free-list corruption classes
+    pool._free.append(int(rows[0]))                 # resident id marked free
+    with pytest.raises(AssertionError, match="nonzero refcount"):
+        audit_pool_accounting(pool, owners)
+    pool._free.pop()
+    pool._free.append(pool._free[0])
+    with pytest.raises(AssertionError, match="duplicate"):
+        audit_pool_accounting(pool, owners)
+
+
+@fast
+def test_plan_pool_pages_overcommit_math_and_liveness_floor():
+    plan = uniform_plan(4, 16)
+    quota = plan_page_quota(plan, 4)                # 16 pages per row
+    assert plan_pool_pages(plan, 8, 4) == 1 + 8 * quota
+    assert plan_pool_pages(plan, 8, 4, overcommit=0.5) == 1 + 4 * quota
+    # the row region never shrinks below ONE full quota: a lone request
+    # can always eventually admit no matter how aggressive the overcommit
+    assert plan_pool_pages(plan, 8, 4, overcommit=0.001) == 1 + quota
+    assert plan_pool_pages(plan, 8, 4, prefix_pages=7,
+                           overcommit=0.5) == 1 + 4 * quota + 7
+    with pytest.raises(ValueError, match="overcommit"):
+        plan_pool_pages(plan, 8, 4, overcommit=0.0)
+
+
+# ======================================================== system-lane ladder
+DENSE = ModelConfig(name="s", arch_type="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                    dtype="float32", param_dtype="float32")
+HYBRID = ModelConfig(name="h", arch_type="hybrid", n_layers=4, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                     ssm_state=8, ssm_expand=2, ssm_head_dim=32, ssm_chunk=8,
+                     attn_period=2, dtype="float32", param_dtype="float32")
+SSM = ModelConfig(name="m", arch_type="ssm", n_layers=2, d_model=64,
+                  n_heads=1, n_kv_heads=1, head_dim=32, d_ff=0, vocab_size=97,
+                  ssm_state=8, ssm_expand=2, ssm_head_dim=32, ssm_chunk=8,
+                  dtype="float32", param_dtype="float32")
+
+ECFG = EngineConfig(mode="uniform", policy=PolicyConfig("sliding_window"),
+                    budget_abs=12, bucket=4, min_budget=4)
+
+# every spec keeps plen + max_new <= budget_abs: a preempted request's
+# re-prefill window then never overflows the cache, the scope where
+# preempt-resume is token-exact (see module docstring)
+SPECS_FIT = [(5, 4), (8, 4), (3, 2), (7, 5), (4, 8), (6, 6), (5, 7)]
+
+LAYOUTS = {"bucketed": {}, "packed": dict(packed_prefill=True, pack_len=24)}
+
+
+def _ccfg(**kw):
+    base = dict(max_concurrency=3, prompt_bucket=8, max_prompt_len=24,
+                max_new_cap=8, sync_every=2, page_size=4)
+    base.update(kw)
+    return ContinuousConfig(**base)
+
+
+def _params(cfg):
+    return init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _run(params, cfg, ccfg, specs, preempt_at=None, injector=None):
+    """Serve one stream; optionally force a preemption at poll index
+    `preempt_at`.  Returns (scheduler, per-request token lists,
+    {rid: tokens carried at preemption})."""
+    sched = ContinuousScheduler(params, cfg, ECFG, ccfg, injector=injector)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 97, (n,)).astype(np.int32) for n, _ in specs]
+    rids = [sched.submit(p, max_new=mn)
+            for p, (_, mn) in zip(prompts, specs)]
+    done, polls, preempted = [], 0, {}
+    while sched.queue or sched.core.n_occupied:
+        if polls == preempt_at:
+            victim = sched._victim_slot()
+            if victim is not None:
+                req = sched.preempt_slot(victim)
+                preempted[req.rid] = req.generated.tolist()
+        done.extend(sched.poll())
+        polls += 1
+        assert polls < 500, "pressure stream failed to drain"
+    d = {r.rid: r for r in done}
+    assert len(d) == len(specs)
+    return sched, [d[r].tokens.tolist() for r in rids], \
+        {rid: (rids.index(rid), toks) for rid, toks in preempted.items()}
+
+
+@system
+@pytest.mark.parametrize("layout", list(LAYOUTS), ids=list(LAYOUTS))
+@pytest.mark.parametrize("cfg", [DENSE, HYBRID, SSM],
+                         ids=["dense", "hybrid", "ssm"])
+def test_preempt_resume_identity_scope(cfg, layout):
+    """A forced mid-flight preemption (clear row, release pages, requeue as
+    prompt + generated) must be invisible in the token stream — with the
+    documented family scope (DESIGN.md §5).  Rows are independent under
+    greedy decoding, so only the PREEMPTED request can possibly change:
+
+      * attention-only families: bit-exact — the resumed re-prefill
+        rebuilds the same position-based cache window;
+      * recurrent families (hybrid / ssm): the carried pre-preemption
+        tokens are exact (host-copied) and the request completes at full
+        length, but the chunked-rescan state is mathematically — not
+        bitwise — the stepwise decode state, so post-resume tokens may
+        drift (verified against the solo engine: `prefill(p + g)` itself
+        differs from `prefill(p)` + `g` decode steps).
+
+    SSM has no attention pool, so this also proves preemption is not a
+    paging-only feature."""
+    params = _params(cfg)
+    ccfg = _ccfg(**LAYOUTS[layout])
+    _, ref, _ = _run(params, cfg, ccfg, SPECS_FIT)
+    sched, out, pre = _run(params, cfg, ccfg, SPECS_FIT, preempt_at=1)
+    assert sched.core.preemptions == 1 and sched.core.requeues == 1
+    assert len(pre) == 1
+    (idx, carried), = pre.values()
+    assert [len(t) for t in out] == [mn for _, mn in SPECS_FIT]
+    # untouched rows: preemption elsewhere is pure scheduling
+    assert all(o == r for i, (o, r) in enumerate(zip(out, ref)) if i != idx)
+    # the carried tokens survive the requeue verbatim
+    assert out[idx][:len(carried)] == carried == ref[idx][:len(carried)]
+    if cfg.arch_type == "dense":
+        assert out == ref                           # bit-exact scope
+    if sched.core._paged:
+        sched.core.audit_pool(deep=True)
+
+
+@system
+def test_overcommitted_stream_matches_worst_case_sizing():
+    """The tentpole end to end: half-sized pool, watermark backpressure,
+    organic preemption, scripted fault injection, per-poll deep audit —
+    and the exact tokens of the worst-case-sized run."""
+    params = _params(DENSE)
+    base = dict(max_concurrency=6, prompt_bucket=8, max_prompt_len=24,
+                max_new_cap=8, sync_every=2, page_size=4)
+    _, ref, _ = _run(params, DENSE, ContinuousConfig(**base), SPECS_FIT)
+
+    pressed = ContinuousConfig(**base, overcommit=0.5, watermark_low=0.05,
+                               watermark_high=0.2, preempt_after=2,
+                               audit_pool=True)
+    inj = PoolFaultInjector({1: [("steal", 20), ("fail_alloc", 2)],
+                             4: [("release", -1)]})
+    sched, out, _ = _run(params, DENSE, pressed, SPECS_FIT, injector=inj)
+    core = sched.core
+    assert out == ref, "token divergence under pool pressure"
+    assert core.stall_polls >= 1 and core.watermark_hits >= 1
+    assert core.preemptions >= 1 and core.requeues >= 1
+    assert core.pool_pages < 6 * plan_page_quota(core.plan, 4)
+    inj.release_all(core._pool)
+    core.audit_pool(deep=True)                      # books balance after
+
+
+@system
+def test_backpressure_holds_admissions_until_high_watermark():
+    """With the whole pool stolen, admission stalls (no raise, no admit);
+    hysteresis keeps it stalled until free pages recover PAST the high
+    mark, then the queue drains normally."""
+    params = _params(DENSE)
+    ccfg = _ccfg(max_concurrency=2, overcommit=0.9, watermark_low=0.1,
+                 watermark_high=0.3, preempt_after=50, audit_pool=True)
+    inj = PoolFaultInjector({1: [("steal", 10_000)],
+                             5: [("release", -1)]})
+    sched, out, _ = _run(params, DENSE, ccfg, SPECS_FIT[:4], injector=inj)
+    core = sched.core
+    assert core.stall_polls >= 1 and core.watermark_hits >= 1
+    assert core.preemptions == 0                    # backpressure sufficed
+    assert [len(t) for t in out] == [mn for _, mn in SPECS_FIT[:4]]
+    # the trace can drain (rows retiring past the high mark) before the
+    # scripted release tick arrives — end-of-trace cleanup handles both
+    inj.release_all(core._pool)
+    core.audit_pool(deep=True)
+
+
+@system
+def test_pressure_config_validation_and_submit_cap():
+    params = _params(DENSE)
+    with pytest.raises(ValueError, match="overcommit"):
+        ContinuousEngine(params, DENSE, ECFG, _ccfg(overcommit=-0.5))
+    with pytest.raises(ValueError, match="watermark"):
+        ContinuousEngine(params, DENSE, ECFG,
+                         _ccfg(watermark_low=0.5, watermark_high=0.2))
+    with pytest.raises(ValueError, match="watermark"):
+        ContinuousEngine(params, DENSE, ECFG, _ccfg(watermark_high=1.0))
+    with pytest.raises(ValueError, match="preempt_after"):
+        ContinuousEngine(params, DENSE, ECFG, _ccfg(preempt_after=0))
+    with pytest.raises(ValueError, match="page_size"):
+        ContinuousEngine(params, DENSE, ECFG,
+                         ContinuousConfig(max_concurrency=3, prompt_bucket=8,
+                                          max_prompt_len=24, max_new_cap=8,
+                                          overcommit=0.5))
+    # the engine-side cap is relaxed so RESUMED prompts fit; the scheduler
+    # still enforces the user-facing max_prompt_len at submit time
+    sched = ContinuousScheduler(params, DENSE, ECFG, _ccfg())
+    with pytest.raises(ValueError, match="max_prompt_len"):
+        sched.submit(np.zeros(25, np.int32), max_new=2)
