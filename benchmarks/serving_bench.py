@@ -896,6 +896,200 @@ def pool_pressure_trace(quick=False, n_req=20, write_json=True):
 
 
 # --------------------------------------------------------------------------- #
+# latency_trace: long-prompt admissions mixed into steady decode
+# --------------------------------------------------------------------------- #
+
+LT_SHORT_MAX_NEW = 32     # steady decode traffic: fixed short generations
+LT_CONC = 4
+LT_P95_TARGET = 1.3       # acceptance bar: chunked p95 within 1.3x baseline
+# full-run shape (quick/smoke shrinks it): "8k-class" long prompts scaled
+# to the reduced CPU trace config — 32x the short-prompt bucket, split into
+# bucket-multiple chunks.  Enough steady decode blocks per long that the
+# chunk-carrying polls stay a <5% minority: p95 then measures the steady
+# state, max measures the (bounded) chunk cost.
+LT_FULL = dict(n_short=96, n_long=2, long_plen=1024, chunk_len=256,
+               inject_every=60)
+LT_QUICK = dict(n_short=64, n_long=1, long_plen=512, chunk_len=128,
+                inject_every=40)
+
+
+def _lt_trace(n_short, n_long, long_plen, seed=37):
+    """Steady short-request decode traffic plus a few very long prompts.
+    Shorts land in one prompt bucket with a FIXED token budget (the steady
+    state whose per-block latency we protect); longs are exactly
+    `long_plen` tokens — the admission spike generator."""
+    rng = np.random.default_rng(seed)
+    shorts = [(rng.integers(0, TRACE_CFG.vocab_size,
+                            (int(rng.integers(PROMPT_BUCKET // 2,
+                                              PROMPT_BUCKET + 1)),)).astype(
+        np.int32), LT_SHORT_MAX_NEW) for _ in range(n_short)]
+    longs = [(rng.integers(0, TRACE_CFG.vocab_size,
+                           (long_plen,)).astype(np.int32), LT_SHORT_MAX_NEW)
+             for _ in range(n_long)]
+    return shorts, longs
+
+
+def _lt_sched(params, ecfg, long_plen, chunk_len, chunked):
+    return ContinuousScheduler(params, TRACE_CFG, ecfg, ContinuousConfig(
+        max_concurrency=LT_CONC, prompt_bucket=PROMPT_BUCKET,
+        max_prompt_len=long_plen, max_new_cap=LT_SHORT_MAX_NEW,
+        sync_every=SYNC_EVERY,
+        chunked_prefill=chunked, chunk_len=chunk_len))
+
+
+def _lt_warm(sched, long_plen, with_long):
+    """Compile every shape the timed run will hit: short buckets, the
+    spread of bound-clamped block lengths, and — when the variant admits
+    longs — the long-prompt path itself (monolithic (1, long_plen) prefill
+    or the per-chunk mid/final executables)."""
+    rng = np.random.default_rng(5)
+    news = [1, 3, SYNC_EVERY, LT_SHORT_MAX_NEW]
+    for i in range(8):
+        sched.submit(rng.integers(0, TRACE_CFG.vocab_size,
+                                  (PROMPT_BUCKET,)).astype(np.int32),
+                     news[i % len(news)])
+    if with_long:
+        sched.submit(rng.integers(0, TRACE_CFG.vocab_size,
+                                  (long_plen,)).astype(np.int32),
+                     LT_SHORT_MAX_NEW)
+    sched.run_until_empty()
+
+
+def _lt_run(sched, shorts, longs, inject_every):
+    """Submit the steady traffic up front, inject one long prompt every
+    `inject_every` polls, and time each poll wall-to-wall.  Returns
+    (per-poll seconds, rid -> tokens)."""
+    for p, mn in shorts:
+        sched.submit(p, mn)
+    queue_longs = list(longs)
+    per_poll, done, polls = [], [], 0
+    while (sched.queue or sched.core.n_occupied or sched.core.n_pending
+           or queue_longs):
+        if queue_longs and polls and polls % inject_every == 0:
+            p, mn = queue_longs.pop(0)
+            sched.submit(p, mn)
+        t0 = time.perf_counter()
+        done.extend(sched.poll())
+        per_poll.append(time.perf_counter() - t0)
+        polls += 1
+        assert polls < 10000, "latency trace failed to drain"
+    return np.asarray(per_poll), {r.rid: r.tokens for r in done}
+
+
+def _lt_stats(per_poll):
+    return {"polls": int(per_poll.size),
+            "p50_block_ms": round(float(np.percentile(per_poll, 50)) * 1e3, 3),
+            "p95_block_ms": round(float(np.percentile(per_poll, 95)) * 1e3, 3),
+            "max_block_ms": round(float(per_poll.max()) * 1e3, 3)}
+
+
+def latency_trace(quick=False, write_json=True):
+    rows_, _ = _latency_trace(quick=quick, write_json=write_json)
+    return rows_
+
+
+def _latency_trace(quick=False, write_json=True):
+    """Per-block decode latency under long-prompt admission pressure
+    (ISSUE-8 tentpole): the SAME short-request decode traffic runs three
+    ways — no longs at all (baseline), longs admitted monolithically (one
+    prefill dispatch stalls every resident row), and longs streamed
+    through `chunked_prefill` (one chunk rides each fused decode block).
+
+    Asserted claims:
+      * chunked vs monolithic outputs are token-identical per request —
+        chunking is a scheduling change, never a model change;
+      * (full run) chunked p95 per-block latency stays within
+        ``LT_P95_TARGET`` (1.3x) of the no-admission baseline, while the
+        monolithic spike (max block / baseline p95) records multi-x.
+    """
+    shape = LT_QUICK if quick else LT_FULL
+    n_short, n_long = shape["n_short"], shape["n_long"]
+    long_plen, chunk_len = shape["long_plen"], shape["chunk_len"]
+    params = init_params(jax.random.PRNGKey(0), TRACE_CFG)
+    ecfg = EngineConfig(mode="uniform",
+                        policy=PolicyConfig("sliding_window"),
+                        budget_abs=PROMPT_BUCKET, bucket=4, min_budget=4)
+    shorts, longs = _lt_trace(n_short, n_long, long_plen)
+
+    variants = {}
+    outs = {}
+    for name, chunked, use_longs in [("baseline", False, False),
+                                     ("monolithic", False, True),
+                                     ("chunked", True, True)]:
+        sched = _lt_sched(params, ecfg, long_plen, chunk_len, chunked)
+        _lt_warm(sched, long_plen, with_long=use_longs)
+        best = None
+        for _ in range(2):        # best-of-2: p95 is noisy on a shared CPU
+            cd0 = sched.core.chunk_dispatches
+            ca0 = sched.core.chunked_admitted
+            per_poll, toks = _lt_run(sched, shorts,
+                                     longs if use_longs else [],
+                                     shape["inject_every"])
+            assert len(toks) == n_short + (n_long if use_longs else 0)
+            st = _lt_stats(per_poll)
+            if chunked:
+                st["chunk_dispatches"] = sched.core.chunk_dispatches - cd0
+                st["chunked_admitted"] = sched.core.chunked_admitted - ca0
+            if best is None or st["p95_block_ms"] < best[0]["p95_block_ms"]:
+                best = (st, toks)
+        variants[name], outs[name] = best
+
+    # rids differ per kept trial; submission ORDER is deterministic and
+    # shared (shorts in sequence, longs at their inject polls)
+    mono = [outs["monolithic"][k] for k in sorted(outs["monolithic"])]
+    chnk = [outs["chunked"][k] for k in sorted(outs["chunked"])]
+    for i, (a, b) in enumerate(zip(mono, chnk)):
+        assert np.array_equal(a, b), \
+            f"token divergence at request {i} (chunked vs monolithic)"
+
+    base_p95 = variants["baseline"]["p95_block_ms"]
+    ratio_ch = variants["chunked"]["p95_block_ms"] / base_p95
+    ratio_mono = variants["monolithic"]["p95_block_ms"] / base_p95
+    spike_mono = variants["monolithic"]["max_block_ms"] / base_p95
+    spike_ch = variants["chunked"]["max_block_ms"] / base_p95
+    if not quick:
+        assert ratio_ch <= LT_P95_TARGET, \
+            (f"chunked p95 {variants['chunked']['p95_block_ms']}ms exceeds "
+             f"{LT_P95_TARGET}x baseline p95 {base_p95}ms")
+
+    record = {
+        "bench": "latency_trace",
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "n_short": n_short, "n_long": n_long,
+        "long_plen": long_plen, "chunk_len": chunk_len,
+        "sync_every": SYNC_EVERY, "max_concurrency": LT_CONC,
+        "baseline": variants["baseline"],
+        "monolithic": variants["monolithic"],
+        "chunked": variants["chunked"],
+        "p95_ratio_chunked": round(ratio_ch, 3),
+        "p95_ratio_monolithic": round(ratio_mono, 3),
+        "spike_monolithic": round(spike_mono, 3),
+        "spike_chunked": round(spike_ch, 3),
+        "token_identical": True,
+    }
+    if write_json:
+        _append_json(record)
+
+    return [
+        row("latency_baseline", variants["baseline"]["p95_block_ms"] * 1e3,
+            f"p95_block_ms={variants['baseline']['p95_block_ms']};"
+            f"polls={variants['baseline']['polls']}"),
+        row("latency_monolithic",
+            variants["monolithic"]["p95_block_ms"] * 1e3,
+            f"p95_block_ms={variants['monolithic']['p95_block_ms']};"
+            f"max_block_ms={variants['monolithic']['max_block_ms']};"
+            f"spike={spike_mono:.2f}x"),
+        row("latency_chunked", variants["chunked"]["p95_block_ms"] * 1e3,
+            f"p95_block_ms={variants['chunked']['p95_block_ms']};"
+            f"max_block_ms={variants['chunked']['max_block_ms']};"
+            f"p95_ratio={ratio_ch:.2f}x(gate<={LT_P95_TARGET});"
+            f"chunks={variants['chunked']['chunk_dispatches']};"
+            f"tokens_identical=True"),
+    ], record
+
+
+# --------------------------------------------------------------------------- #
 # CI smoke + bench-regression gate
 # --------------------------------------------------------------------------- #
 
@@ -956,6 +1150,30 @@ def _regression_gate(record):
           f"{cur_ratio:.3f} (recorded {last_ratio:.3f})")
 
 
+def _latency_gate(record):
+    """Compare the smoke latency run against the last recorded
+    `latency_trace` entry: the gated quantity is the chunked/baseline p95
+    per-block ratio — machine-independent, like the dispatch gates.  The
+    threshold floors at ``LT_P95_TARGET`` (the acceptance bar itself) so a
+    recorded ratio well under 1.0 doesn't turn CI noise into failures.
+    >REGRESSION_TOL x worse than recorded (and above the floor) fails CI.
+    """
+    last = _last_recorded(bench="latency_trace")
+    if last is None:
+        print("bench-gate: no recorded latency_trace entry — "
+              "skipping comparison")
+        return
+    cur = record["p95_ratio_chunked"]
+    rec = last["p95_ratio_chunked"]
+    thresh = max(rec * REGRESSION_TOL, LT_P95_TARGET)
+    if cur > thresh:
+        raise SystemExit(f"bench-gate REGRESSION vs {last['ts']}: chunked "
+                         f"p95 ratio {cur:.3f} > max({rec:.3f} * "
+                         f"{REGRESSION_TOL}, {LT_P95_TARGET})")
+    print(f"bench-gate OK vs {last['ts']}: chunked/baseline p95 ratio "
+          f"{cur:.3f} (recorded {rec:.3f}, gate {thresh:.3f})")
+
+
 def _admission_smoke():
     """Deterministic (counter-based, no timing) proof that length-sorted
     and packed admission successively cut prefilled tokens on one bimodal
@@ -1007,11 +1225,18 @@ def smoke():
     # resident-rows gain >= RESIDENT_GAIN_MIN vs worst-case sizing
     for r in pool_pressure_trace(n_req=12, write_json=False):
         print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    # tiny long-prompt latency trace: chunked admission rides the decode
+    # blocks, tokens identical to monolithic, p95 per-block ratio gated
+    # against the recorded trajectory (floor LT_P95_TARGET)
+    lt_rows, lt_record = _latency_trace(quick=True, write_json=False)
+    for r in lt_rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    _latency_gate(lt_record)
     print("serving_bench smoke OK")
 
 
 ALL = [serving_trace, admission_trace, multimodal_trace,
-       prefix_reuse_trace, pool_pressure_trace]
+       prefix_reuse_trace, pool_pressure_trace, latency_trace]
 
 
 if __name__ == "__main__":
@@ -1029,5 +1254,6 @@ if __name__ == "__main__":
                 + admission_trace(quick=args.quick) \
                 + multimodal_trace(quick=args.quick) \
                 + prefix_reuse_trace(quick=args.quick) \
-                + pool_pressure_trace(quick=args.quick):
+                + pool_pressure_trace(quick=args.quick) \
+                + latency_trace(quick=args.quick):
             print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")

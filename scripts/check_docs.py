@@ -20,7 +20,21 @@ import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DOCS = ["README.md", "DESIGN.md", "docs/API.md", "ROADMAP.md"]
+
+
+def _discover_docs() -> list[str]:
+    """Every checked page: the root docs plus EVERYTHING under docs/ —
+    new pages get link/anchor coverage without editing this list."""
+    docs = [d for d in ("README.md", "DESIGN.md", "ROADMAP.md", "PAPER.md")
+            if os.path.exists(os.path.join(ROOT, d))]
+    ddir = os.path.join(ROOT, "docs")
+    if os.path.isdir(ddir):
+        docs += sorted("docs/" + f for f in os.listdir(ddir)
+                       if f.endswith(".md"))
+    return docs
+
+
+DOCS = _discover_docs()
 SNIPPET_DOC = "docs/API.md"
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

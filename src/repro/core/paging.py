@@ -90,6 +90,13 @@ def pages_needed(t, budget: int, max_new: int, page_size: int) -> int:
     ``min(budget, t + max_new - 1)``.  Pages beyond that bound stay the
     null page: sequence-wise squeezing releases them to the pool instead of
     leaving torn half-pages resident.
+
+    Chunked admission (`ContinuousEngine.begin_chunked`) books this same
+    quota UP FRONT — the pending row's pages are allocated before its
+    first chunk runs and sit unscattered until the final chunk's fused
+    admit — so a partially-prefilled row holds exactly the headroom a
+    monolithic admission of the same request would, and pool accounting
+    (`audit_pool`) balances at every intermediate poll.
     """
     used = min(int(budget), max(int(t), 0) + max(int(max_new), 1) - 1)
     return pages_for(max(used, 1), page_size)

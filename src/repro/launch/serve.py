@@ -7,6 +7,10 @@
     PYTHONPATH=src python -m repro.launch.serve --arch mistral-7b --reduced \
         --batching continuous --batch 6 --max-concurrency 4
 
+    # long prompts streamed in chunks co-scheduled with resident decode
+    PYTHONPATH=src python -m repro.launch.serve --arch mistral-7b --reduced \
+        --batching continuous --batch 6 --chunked-prefill --chunk-len 64
+
 Loads a config (reduced for CPU; full configs serve under the production
 mesh proven by launch/dryrun.py), optionally restores a checkpoint, and
 runs batched generation with the requested KV-cache mode.  `--policy`
@@ -110,6 +114,12 @@ def _run_continuous(params, cfg, ecfg, args):
         # (ContinuousEngine enforces it); round the bucket up to a multiple
         bucket = -(-bucket // cfg.ssm_chunk) * cfg.ssm_chunk
     wm_low, wm_high = _parse_watermark(args.watermark)
+    if args.chunked_prefill and (cfg.is_ssm_only or cfg.is_hybrid):
+        # chunk boundaries must land on the SSD chunk grid for bit-exact
+        # recurrent resume (ContinuousEngine enforces bucket % ssm_chunk)
+        bucket = -(-bucket // cfg.ssm_chunk) * cfg.ssm_chunk
+    chunk_len = args.chunk_len if args.chunk_len else 2 * bucket
+    chunk_len = -(-chunk_len // bucket) * bucket   # bucket-multiple contract
     ccfg = ContinuousConfig(
         max_concurrency=args.max_concurrency, prompt_bucket=bucket,
         max_prompt_len=args.prompt_len, max_new_cap=args.max_new,
@@ -119,7 +129,9 @@ def _run_continuous(params, cfg, ecfg, args):
         page_size=args.page_size,
         prefix_cache=args.prefix_cache,
         overcommit=args.overcommit,
-        watermark_low=wm_low, watermark_high=wm_high)
+        watermark_low=wm_low, watermark_high=wm_high,
+        chunked_prefill=args.chunked_prefill,
+        chunk_len=chunk_len if args.chunked_prefill else 0)
     sched = ContinuousScheduler(params, cfg, ecfg, ccfg, seed=args.seed)
     print(f"capability: {sched.capability.describe()}")
     rng = np.random.default_rng(args.seed)
@@ -154,7 +166,7 @@ def _run_continuous(params, cfg, ecfg, args):
         else:
             sched.submit(text, max_new)
     n_tok = 0
-    while sched.queue or sched.core.n_occupied:
+    while sched.queue or sched.core.n_occupied or sched.core.n_pending:
         for r in sched.poll():     # stream completions as they finish
             n_tok += r.tokens.size
             print(f"rid={r.rid} done: {r.tokens.size} tokens, "
@@ -184,6 +196,12 @@ def _run_continuous(params, cfg, ecfg, args):
           f"prefill pad tokens {core.prefill_pad_tokens} for "
           f"{core.prompt_tokens} prompt tokens"
           f" (admission={layout})")
+    if ccfg.chunked_prefill:
+        print(f"chunked prefill: {core.chunked_admitted} long prompt(s) "
+              f"streamed in {core.chunk_dispatches} chunk(s) of "
+              f"{ccfg.resolved_chunk_len()} tokens "
+              f"({core.chunk_tokens_prefilled} tokens co-scheduled with "
+              f"decode)")
     if core.pool_pages:
         print(f"page pool: {core.pool_pages} pages of {ccfg.page_size} "
               f"tokens, occupancy {core.pool_occupancy:.2f} "
@@ -246,6 +264,14 @@ def main():
                          "worst case so squeezed pages host more rows; the "
                          "engine absorbs exhaustion with backpressure and "
                          "preemption instead of raising")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="split long prompts into fixed chunks co-scheduled "
+                         "inside the fused decode blocks, so resident rows "
+                         "keep decoding while a long admission streams in "
+                         "(continuous batching)")
+    ap.add_argument("--chunk-len", type=int, default=0,
+                    help="prefill chunk length in tokens (rounded up to the "
+                         "prompt bucket; 0 = 2x the prompt bucket)")
     ap.add_argument("--watermark", default="",
                     help="LOW:HIGH free-page fractions for admission "
                          "backpressure hysteresis (e.g. 0.05:0.25); empty = "

@@ -112,12 +112,16 @@ def full_attention(
     visible key (the tail padding of a packed row) are dropped rather than
     softmax-uniform garbage.
 
-    ``ctx`` is the prefix-reuse hook (DESIGN.md §5): already-RoPE'd keys and
-    values of a cached prompt prefix, gathered from the page pool, attended
-    as EXTRA keys ahead of this call's own tokens (whose ``positions`` then
-    start past the prefix).  Context entries with ``pos_ctx = -1`` are
-    masked out exactly like empty cache slots.  With ``ctx`` the returned
-    colsums cover the concatenated key axis [B, Hkv, C+S].
+    ``ctx`` is the carried-prefix hook (DESIGN.md §5): already-RoPE'd keys
+    and values of earlier prompt tokens, attended as EXTRA keys ahead of
+    this call's own tokens (whose ``positions`` then start past the
+    prefix).  Two callers share it — prefix-cache admission gathers a
+    cached prompt's pages, and chunked prefill passes the staging buffer
+    of chunks landed so far (`serving/prefill.py:chunk_prefill`), which is
+    why a mid-stream chunk sees exactly the keys the monolithic prefill
+    would have at the same position.  Context entries with ``pos_ctx = -1``
+    are masked out exactly like empty cache slots.  With ``ctx`` the
+    returned colsums cover the concatenated key axis [B, Hkv, C+S].
     """
     B, S, _ = x.shape
     q, k, v = _project_qkv(p, x, positions, cfg)

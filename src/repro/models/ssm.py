@@ -61,7 +61,11 @@ def empty_decode_state(cfg, n_layers: int, batch: int):
     model-dtype)`` — the layout `ssm_decode_step` carries and continuous
     batching scatters per-row (`core.cache.insert_state_rows`).  The SSD
     state accumulates in fp32 (`ssd_chunked` emits fp32 finals); the conv
-    tail is raw activations, so it stays in the model dtype.
+    tail is raw activations, so it stays in the model dtype.  The same
+    pair doubles as the carry-in/carry-out of chunked prefill
+    (`forward(..., state_in=...)`): chunk boundaries land on the SSD
+    chunk grid (DESIGN.md §5), so resuming from a carried state is
+    bit-identical to scanning the prompt in one piece.
     """
     H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     W, C = cfg.ssm_conv_width, conv_channels(cfg)

@@ -166,6 +166,7 @@ def forward(
     state_take: Optional[jnp.ndarray] = None,  # [B, K] recurrent-state snapshots
     state_take_aligned: bool = False,          # static: takes sit on chunk ends
     ctx=None,                                  # (k [L,B,C,Hkv,hd], v, pos [B,C])
+    state_in=None,                             # (ssm [L,B,H,P,N], conv [L,B,W-1,C])
 ) -> ForwardOut:
     """remat=True reruns each layer's interior in the backward pass so the
     layer scan saves only its carry — without it, XLA's while-loop autodiff
@@ -179,12 +180,22 @@ def forward(
     snapshots after those positions ([L, B, K, ...]) instead of row-final
     states — one per packed segment.
 
-    ``ctx`` is per-layer cached-prefix KV (prefix reuse, DESIGN.md §5):
-    the leading axis matches the attention-layer scan, so each layer's
-    gathered context rides the scan as an extra input.  Attention-only
-    families only — a cached prefix cannot restore a recurrent layer's
-    state, which is why the serving layer gates prefix caching to
-    attention-only models."""
+    ``ctx`` is per-layer cached-prefix KV (prefix reuse and chunked
+    prefill, DESIGN.md §5): the leading axis matches the attention-layer
+    scan, so each layer's gathered context rides the scan as an extra
+    input.  On its own it serves attention-only families — a cached
+    prefix cannot restore a recurrent layer's state, which is why the
+    serving layer gates prefix caching to attention-only models.
+
+    ``state_in`` lifts that restriction for CHUNKED prefill: per-layer
+    initial recurrent carries ``(ssm [L_rec, B, H, P, N], conv
+    [L_rec, B, W-1, C])`` — the states the previous chunk's forward
+    returned — seed each recurrent layer's scan, so a prompt split at
+    SSD-chunk-aligned boundaries integrates bit-identically to one
+    monolithic pass (`ssm.ssd_chunked`'s `initial_state` path).  Hybrid
+    families may then combine ``ctx`` (the previous chunks' KV) with
+    ``state_in`` (their recurrent carries); ``ctx`` without ``state_in``
+    still asserts on recurrent families."""
     x = _embed(params, cfg, tokens, embeds)
     B, S, _ = x.shape
     if positions is None:
@@ -194,15 +205,17 @@ def forward(
         assert ctx is None, "prefix ctx requires attention layers"
         x, cos, ssm_state = _ssm_stack(params, cfg, x, valid, remat,
                                        segments, state_take,
-                                       state_take_aligned)
+                                       state_take_aligned, state_in)
         kv = scores = None
         aux = jnp.zeros((), jnp.float32)
     elif cfg.is_hybrid:
-        assert ctx is None, "prefix ctx cannot restore recurrent state"
+        assert ctx is None or state_in is not None, \
+            "prefix ctx cannot restore recurrent state"
         x, cos, kv, scores, ssm_state, aux = _hybrid_stack(
             params, cfg, x, positions, valid, collect_kv, remat,
-            segments, state_take, state_take_aligned)
+            segments, state_take, state_take_aligned, ctx, state_in)
     else:
+        assert state_in is None, "state_in requires recurrent layers"
         x, cos, kv, scores, aux = _dense_stack(
             params, cfg, x, positions, valid, collect_kv, remat, segments,
             ctx=ctx)
@@ -290,45 +303,73 @@ def _dense_stack(params, cfg, x, positions, valid, collect_kv, remat=False,
 
 
 def _ssm_stack(params, cfg, x, valid, remat=False, segments=None,
-               state_take=None, state_take_aligned=False):
-    def body(carry, bp):
+               state_take=None, state_take_aligned=False, state_in=None):
+    # chunked-prefill resume: per-layer initial carries ride the layer scan
+    # as extra inputs, seeding each mixer exactly where the last chunk left it
+    xs = (params["layers"],) + (tuple(state_in) if state_in is not None
+                                else ())
+
+    def body(carry, inp):
+        bp, s0, c0 = inp if state_in is not None else (inp, None, None)
         x = hint(carry, {0: "batch", 2: "model"} if remat else {0: "batch"})
         pre = x
         h = apply_norm(bp["norm"], x, cfg)
         out, (state, conv) = ssm_lib.ssm_forward(
             ssm_lib.SsmParams(**bp["ssm"]), h, cfg,
+            state=s0, conv_state=c0,
             segments=segments, state_take=state_take,
             state_take_aligned=state_take_aligned)
         x = x + out
         cos = _cos_sim(pre, x, valid)
         return x, (cos, state, conv)
 
-    x, (cos, states, convs) = jax.lax.scan(_remat(body, remat), x,
-                                           params["layers"])
+    x, (cos, states, convs) = jax.lax.scan(
+        _remat(body, remat), x, xs if state_in is not None else xs[0])
     return x, cos, (states, convs)
 
 
 def _hybrid_stack(params, cfg, x, positions, valid, collect_kv, remat=False,
-                  segments=None, state_take=None, state_take_aligned=False):
+                  segments=None, state_take=None, state_take_aligned=False,
+                  ctx=None, state_in=None):
     """Zamba2-style: scan over super-blocks of `attn_period` mamba blocks +
-    one shared-weight attention/mlp block (its KV cache IS per-invocation)."""
+    one shared-weight attention/mlp block (its KV cache IS per-invocation).
+
+    Chunked prefill threads BOTH optionals through the super-block scan:
+    ``state_in`` carries reshape to [n_super, period, ...] and seed the
+    inner mamba scan, ``ctx``'s leading axis is the attention-invocation
+    count (== n_super), one context slice per shared-attention call."""
     sp = params["shared_attn"]
+    n_super = cfg.n_layers // cfg.attn_period
+    s_xs = ()
+    if state_in is not None:
+        s_xs = tuple(a.reshape((n_super, cfg.attn_period) + a.shape[1:])
+                     for a in state_in)
+    ctx_xs = (ctx[0], ctx[1]) if ctx is not None else ()
+    pos_ctx = ctx[2] if ctx is not None else None
 
-    def body(carry, bps):
+    def body(carry, inp):
         x = carry
+        bps, rest = inp[0], inp[1:]
+        if state_in is not None:
+            in_xs, rest = (bps,) + rest[:2], rest[2:]
+        else:
+            in_xs = bps
+        ctx_l = (rest[0], rest[1], pos_ctx) if rest else None
 
-        def inner(c, bp):
+        def inner(c, binp):
+            bp, s0, c0 = binp if state_in is not None else (binp, None, None)
             h = apply_norm(bp["norm"], c, cfg)
             out, (state, conv) = ssm_lib.ssm_forward(
                 ssm_lib.SsmParams(**bp["ssm"]), h, cfg,
+                state=s0, conv_state=c0,
                 segments=segments, state_take=state_take,
                 state_take_aligned=state_take_aligned)
             return c + out, (state, conv)
 
-        x, (states, convs) = jax.lax.scan(inner, x, bps)
+        x, (states, convs) = jax.lax.scan(inner, x, in_xs)
         x, cos, k, v, colsum = _attn_block(sp, cfg, x, positions, valid,
                                            GLOBAL_WINDOW, collect_kv,
-                                           segments)
+                                           segments, ctx=ctx_l)
         h2 = apply_norm(sp["mlp_norm"], x, cfg)
         x = x + mlp_lib.apply_mlp(mlp_lib.MlpParams(**sp["mlp"]), h2, cfg)
         outs = (cos, states, convs)
@@ -336,7 +377,8 @@ def _hybrid_stack(params, cfg, x, positions, valid, collect_kv, remat=False,
             outs = outs + (k, v, colsum)
         return x, outs
 
-    x, outs = jax.lax.scan(_remat(body, remat), x, params["layers"])
+    x, outs = jax.lax.scan(_remat(body, remat), x,
+                           (params["layers"],) + s_xs + ctx_xs)
     cos, states, convs = outs[0], outs[1], outs[2]
     n_super = states.shape[0]
     # flatten [n_super, period, ...] -> [n_layers, ...]

@@ -86,8 +86,9 @@ from repro.models.transformer import n_attn_layers
 from repro.serving.decode import (DecodeState, make_tier_indices,
                                   sampled_step)
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.prefill import (PrefillOut, group_by_bucket, pack_embeds,
-                                   pad_embeds, pad_prompts, plan_pack,
+from repro.serving.prefill import (ChunkPlan, PrefillOut, chunk_prefill,
+                                   group_by_bucket, pack_embeds, pad_embeds,
+                                   pad_prompts, plan_chunks, plan_pack,
                                    plan_pack_lengths)
 from repro.serving.prefix import PrefixCache, PrefixMatch
 from repro.serving.sampler import sample
@@ -168,10 +169,25 @@ class ContinuousConfig:
     #: refcounts + row tables + prefix residency must tile the pool); debug
     #: flag — tests and the `pool_pressure` bench keep it on
     audit_pool: bool = False
+    #: chunked prefill (DESIGN.md §5): long prompts admit as a PENDING row
+    #: whose prefill advances at most one `chunk_len` chunk per fused decode
+    #: block — inside the SAME dispatch as the resident rows' decode steps —
+    #: instead of one monolithic prefill that stalls every resident row.
+    #: The final chunk flips the row live for sampling.  Recurrent families
+    #: additionally require `prompt_bucket % cfg.ssm_chunk == 0` (checked
+    #: at construction) so chunk boundaries sit on the SSD chunk grid.
+    chunked_prefill: bool = False
+    #: prefill tokens advanced per decode block for a pending chunked row;
+    #: must be a multiple of `prompt_bucket` (checked at construction).
+    #: 0 = auto (2 buckets).
+    chunk_len: int = 0
 
     def resolved_pack_len(self) -> int:
         b = self.prompt_bucket
         return self.pack_len or 2 * (-(-self.max_prompt_len // b) * b)
+
+    def resolved_chunk_len(self) -> int:
+        return self.chunk_len or 2 * self.prompt_bucket
 
 
 @dataclasses.dataclass(frozen=True)
@@ -258,6 +274,13 @@ class ContinuousState(NamedTuple):
     key: jnp.ndarray         # PRNG key (stochastic sampling only)
     emit_tok: jnp.ndarray    # [sync_every, B] int32 emission buffer
     emit_act: jnp.ndarray    # [sync_every, B] bool: emission was live
+    #: chunked-prefill staging (empty tuple unless `chunked_prefill` is on):
+    #: ``(k, v, pos, score, ssm, conv)`` with ``()`` placeholders per family
+    #: — the ONE in-flight pending row's accumulated prompt KV
+    #: ([n_attn, 1, Cstage, Hkv, hd], pos/score [.., 1, Cstage], -1 = not
+    #: yet prefilled) and its recurrent carries, living on device so a
+    #: chunk advance is a single fused dispatch (DESIGN.md §5)
+    chunk: tuple = ()
 
 
 @dataclasses.dataclass
@@ -331,6 +354,25 @@ class ContinuousEngine:
                     f"(a reused prefix is never re-prefilled, so "
                     f"{ecfg.policy.name!r} column sums for it would be "
                     f"partial); use sliding_window or streaming_llm")
+        if ccfg.chunked_prefill:
+            cl = ccfg.resolved_chunk_len()
+            if cl <= 0 or cl % ccfg.prompt_bucket != 0:
+                raise ValueError(
+                    f"chunk_len ({cl}) must be a positive multiple of "
+                    f"prompt_bucket ({ccfg.prompt_bucket}) — chunk "
+                    f"boundaries must sit on bucket edges so the final "
+                    f"chunk always holds the last valid token")
+            if (cfg.is_ssm_only or cfg.is_hybrid) \
+                    and ccfg.prompt_bucket % cfg.ssm_chunk != 0:
+                # chunk lengths are bucket multiples; putting buckets on the
+                # SSD chunk grid is what makes a carried recurrent state
+                # BIT-identical to the monolithic scan (ssd_chunked resumes
+                # from initial_state at an aligned boundary)
+                raise ValueError(
+                    f"chunked prefill with recurrent layers requires "
+                    f"prompt_bucket ({ccfg.prompt_bucket}) to be a "
+                    f"multiple of ssm_chunk ({cfg.ssm_chunk}) so chunk "
+                    f"boundaries align with the SSD chunk grid")
         self.engine = Engine(params, cfg, ecfg)   # shared prefill/compaction
         self.params = params
         self.cfg = cfg
@@ -410,6 +452,20 @@ class ContinuousEngine:
         self.watermark_hits = 0
         self.peak_resident_rows = 0
         self._stalled = False    # low-watermark hysteresis state
+        # chunked-prefill host state (DESIGN.md §5): at most ONE pending
+        # row accumulates prompt KV chunk-by-chunk in the on-device staging
+        # buffers; `_pending` holds its slot / plan / progress until the
+        # final chunk flips it live.  Latency counters for the SLO story
+        # (benchmarks/serving_bench.py latency_trace): chunk-carrying block
+        # launches (each rode an EXISTING decode dispatch — chunking never
+        # adds dispatches), rows admitted chunked, and prompt tokens
+        # prefilled through chunks.
+        self._pending: Optional[dict] = None
+        self._chunk_fns = {}     # (C, n_steps, final) -> chunk+decode block
+        self._chunk_reset_fn = None
+        self.chunked_admitted = 0
+        self.chunk_dispatches = 0
+        self.chunk_tokens_prefilled = 0
 
     # ------------------------------------------------------------ properties
     @property
@@ -423,6 +479,30 @@ class ContinuousEngine:
     @property
     def n_occupied(self) -> int:
         return len(self._occupied)
+
+    @property
+    def n_pending(self) -> int:
+        """Chunk-admitted rows still prefilling (0 or 1): holding a slot
+        but not yet live — not occupied, not preemptible, advanced one
+        chunk per decode block until the final chunk flips them live."""
+        return 0 if self._pending is None else 1
+
+    @property
+    def pending_prefilled_len(self) -> int:
+        """Prompt tokens the pending row has staged so far (0 if none
+        pending) — `prefilled_len < prompt_len` is the partially-prefilled
+        contract `scheduler.poll` admits under."""
+        if self._pending is None:
+            return 0
+        plan = self._pending["plan"]
+        return sum(plan.lens[:self._pending["next"]])
+
+    @property
+    def chunk_ready(self) -> bool:
+        """True once chunked admission can run: mode on AND the plan is
+        calibrated (the first request must go monolithic via `admit_many`
+        so `_ensure_plan` sees a batched prefill)."""
+        return self.ccfg.chunked_prefill and self._chunk_reset_fn is not None
 
     @property
     def occupied_slots(self) -> List[int]:
@@ -486,6 +566,20 @@ class ContinuousEngine:
         donate0 = {} if not self._donate else {"donate_argnums": (0,)}
         self._clear_fn = jax.jit(clear, **donate0)
 
+        if self.ccfg.chunked_prefill:
+            def chunk_reset(state: ContinuousState):
+                # wipe the staging METADATA between pending rows: stale pos
+                # entries would unmask a previous prompt's keys, stale
+                # scores/carries would leak into the next accumulation.
+                # K/V values can stay (pos = -1 masks them everywhere).
+                ck, cv, cpos, csc, cssm, cconv = state.chunk
+                z = jax.tree.map(jnp.zeros_like, (csc, cssm, cconv))
+                if self._has_attn:
+                    cpos = jnp.full_like(cpos, -1)
+                return state._replace(chunk=(ck, cv, cpos) + z)
+
+            self._chunk_reset_fn = jax.jit(chunk_reset, **donate0)
+
     def _block_jit(self, n_steps: int):
         """Compiled fused decode block: `n_steps` serve_step iterations in
         ONE donated `lax.scan` executable.  Each step samples, updates the
@@ -495,34 +589,46 @@ class ContinuousEngine:
         per block length — the tail of a drain runs shorter blocks, so at
         most `sync_every` executables exist."""
         if n_steps not in self._block_fns:
-            cfg, pol, sc = self.cfg, self.ecfg.policy, self.ecfg.sampler
-            eos = self.ecfg.eos_token
-            use_flash = self.ecfg.use_flash_decode
-
             def block(params, state: ContinuousState) -> ContinuousState:
-                def body(st, i):
-                    active_prev = st.dec.active
-                    nxt, dec, key = sampled_step(
-                        params, cfg, pol, sc, st.dec, st.token, st.key,
-                        use_flash=use_flash)
-                    rem = st.remaining - active_prev.astype(jnp.int32)
-                    done = active_prev & (rem <= 0)
-                    if eos >= 0:
-                        done = done | (active_prev & (nxt == eos))
-                    dec = dec._replace(active=active_prev & ~done)
-                    return ContinuousState(
-                        dec, nxt, rem, key,
-                        jax.lax.dynamic_update_index_in_dim(
-                            st.emit_tok, nxt, i, 0),
-                        jax.lax.dynamic_update_index_in_dim(
-                            st.emit_act, active_prev, i, 0)), None
-
-                state, _ = jax.lax.scan(body, state,
-                                        jnp.arange(n_steps, dtype=jnp.int32))
-                return state
+                return self._scan_steps(params, state, n_steps)
 
             self._block_fns[n_steps] = jax.jit(block, **self._donate)
         return self._block_fns[n_steps]
+
+    def _scan_steps(self, params, state: ContinuousState, n_steps: int):
+        """Traced interior of every fused decode block (`_block_jit` AND the
+        chunk-carrying executables `_chunk_jit`): `n_steps` sampled decode
+        steps in one `lax.scan`, appending ``(token, pre-step active)`` to
+        the on-device emission buffer each step.  Fields outside the decode
+        loop (the chunk staging) pass through untouched."""
+        cfg, pol, sc = self.cfg, self.ecfg.policy, self.ecfg.sampler
+        eos = self.ecfg.eos_token
+        use_flash = self.ecfg.use_flash_decode
+
+        def body(st, i):
+            active_prev = st.dec.active
+            nxt, dec, key = sampled_step(
+                params, cfg, pol, sc, st.dec, st.token, st.key,
+                use_flash=use_flash)
+            rem = st.remaining - active_prev.astype(jnp.int32)
+            done = active_prev & (rem <= 0)
+            if eos >= 0:
+                done = done | (active_prev & (nxt == eos))
+            dec = dec._replace(active=active_prev & ~done)
+            return st._replace(
+                dec=dec, token=nxt, remaining=rem, key=key,
+                emit_tok=jax.lax.dynamic_update_index_in_dim(
+                    st.emit_tok, nxt, i, 0),
+                emit_act=jax.lax.dynamic_update_index_in_dim(
+                    st.emit_act, active_prev, i, 0)), None
+
+        # the chunk staging is loop-invariant: detach it from the scan
+        # carry so plain decode blocks never shuttle the (multi-MB)
+        # staging arrays through the while-loop state
+        chunk = state.chunk
+        state, _ = jax.lax.scan(body, state._replace(chunk=()),
+                                jnp.arange(n_steps, dtype=jnp.int32))
+        return state._replace(chunk=chunk)
 
     def _admit_jit(self, NB: int, P: int):
         """Compiled admission for one (admit batch, prompt) bucket:
@@ -621,12 +727,11 @@ class ContinuousEngine:
             upd["conv_state"] = insert_state_rows(
                 dec.conv_state, rs.conv_state, rows)
         dec = dec._replace(**upd)
-        return token0, ContinuousState(
-            dec,
-            state.token.at[rows].set(
+        return token0, state._replace(
+            dec=dec,
+            token=state.token.at[rows].set(
                 token0.astype(state.token.dtype), mode="drop"),
-            state.remaining.at[rows].set(rem0, mode="drop"),
-            state.key, state.emit_tok, state.emit_act)
+            remaining=state.remaining.at[rows].set(rem0, mode="drop"))
 
     def _packed_tiers(self, kp, vp, cpos, scores, row_idx, start, t,
                       Pout: int, NR: int):
@@ -735,6 +840,85 @@ class ContinuousEngine:
             self._padmit_fns[key] = jax.jit(padmit, **donate0)
         return self._padmit_fns[key]
 
+    def _chunk_jit(self, C: int, n_steps: int, final: bool):
+        """Compiled chunk-carrying fused block (DESIGN.md §5): ONE dispatch
+        runs (a) the pending row's next prefill chunk — forward over ``C``
+        tokens attending the staged previous chunks as read-only context
+        (`prefill.chunk_prefill`), recurrent layers resuming from the
+        staged carries — (b) the staging-buffer update, (c) on the FINAL
+        chunk the whole admission tail (Algorithm-1 compaction of the
+        assembled staging `PrefillOut`, first-token sampling, the
+        row/paged scatters — the exact `_admit_apply` the monolithic path
+        runs), and (d) `n_steps` decode steps for the resident rows
+        (`_scan_steps`).  Decode therefore never waits on a prefill-only
+        dispatch; the chunk rides the block it would have stalled.
+
+        Memoized per (chunk length, block length, final?) — chunk lengths
+        come from the tiny bucket-multiple set `prefill.plan_chunks`
+        guarantees and ``start`` / row indices are traced, so repeated
+        long-prompt traffic never retraces."""
+        key = (C, n_steps, final)
+        if key not in self._chunk_fns:
+            has_attn, has_rec = self._has_attn, self._has_rec
+            cfg = self.cfg
+
+            def advance(params, state: ContinuousState, tok_c, val_c, start):
+                ck, cv, cpos, csc, cssm, cconv = state.chunk
+                ctx = (ck, cv, cpos) if has_attn else None
+                st_in = (cssm, cconv) if has_rec else None
+                out = chunk_prefill(params, cfg, tok_c, val_c, start,
+                                    ctx=ctx, state_in=st_in)
+                if has_attn:
+                    ck = jax.lax.dynamic_update_slice(
+                        ck, out.k.astype(ck.dtype), (0, 0, start, 0, 0))
+                    cv = jax.lax.dynamic_update_slice(
+                        cv, out.v.astype(cv.dtype), (0, 0, start, 0, 0))
+                    cpos = jax.lax.dynamic_update_slice(
+                        cpos, out.pos_row, (0, start))
+                    Cs = csc.shape[-1]
+                    # the chunk's colsums cover [staged | chunk] keys: the
+                    # staged part ACCUMULATES (later queries add mass to
+                    # earlier keys, the H2O invariant), the chunk's own
+                    # keys are fresh — write them at their offset (their
+                    # staged-part contribution is exactly 0: pos=-1 masked)
+                    csc = csc + out.colsums[..., :Cs]
+                    csc = jax.lax.dynamic_update_slice(
+                        csc, out.colsums[..., Cs:], (0, 0, start))
+                if has_rec:
+                    cssm, cconv = out.ssm_state
+                return out, state._replace(
+                    chunk=(ck, cv, cpos, csc, cssm, cconv))
+
+            if final:
+                def fn(params, state, tok_c, val_c, start, t_req, rows,
+                       rem0, akey, tbls):
+                    out, state = advance(params, state, tok_c, val_c, start)
+                    ck, cv, cpos, csc, cssm, cconv = state.chunk
+                    t32 = t_req.astype(jnp.int32)
+                    if has_attn:
+                        La, _, Cs = csc.shape
+                        cache_pos = jnp.broadcast_to(cpos[None], (La, 1, Cs))
+                        scores = csc / jnp.clip(
+                            t32.astype(jnp.float32)[None, :, None], 1.0)
+                        pk, pv = ck, cv
+                    else:
+                        pk = pv = cache_pos = scores = None
+                    pre = PrefillOut(
+                        out.last_logits,
+                        jnp.zeros((n_attn_layers(cfg), 1), jnp.float32),
+                        pk, pv, cache_pos, scores,
+                        (cssm, cconv) if has_rec else None, t32)
+                    token0, state = self._admit_apply(state, rows, pre,
+                                                      rem0, akey, 1, tbls)
+                    return token0, self._scan_steps(params, state, n_steps)
+            else:
+                def fn(params, state, tok_c, val_c, start):
+                    _, state = advance(params, state, tok_c, val_c, start)
+                    return self._scan_steps(params, state, n_steps)
+
+            self._chunk_fns[key] = jax.jit(fn, **self._donate)
+        return self._chunk_fns[key]
+
     # ------------------------------------------------------------- state init
     def _prefix_budget(self) -> int:
         """Pool headroom reserved for the radix tree's resident pages."""
@@ -751,6 +935,15 @@ class ContinuousEngine:
         """Static page capacity of the context region in ctx-prefill
         executables: enough pages for the longest admissible prompt."""
         return pages_for(self.ccfg.max_prompt_len, self.ccfg.page_size)
+
+    @property
+    def _chunk_stage_len(self) -> int:
+        """Static length of the chunk staging buffers: the bucket-rounded
+        longest CHUNK-admissible prompt.  Chunked admission takes token
+        prompts up to `max_prompt_len` only (resumed over-long prompts go
+        monolithic), so this bounds every plan's padded total."""
+        b = self.ccfg.prompt_bucket
+        return -(-self.ccfg.max_prompt_len // b) * b
 
     @property
     def _admit_max_len(self) -> int:
@@ -819,13 +1012,33 @@ class ContinuousEngine:
             t=jnp.zeros((B,), jnp.int32),
             active=jnp.zeros((B,), bool),
             kv_pool=kv_pool)
+        chunk = ()
+        if self.ccfg.chunked_prefill:
+            # staging for the ONE pending chunked row: full-prompt KV
+            # accumulates here chunk by chunk, assembled into a PrefillOut
+            # at the final chunk.  Sized for the longest admissible prompt
+            # (bucket-rounded); positions -1 mask the not-yet-written tail
+            # exactly like empty cache slots.
+            Cs = self._chunk_stage_len
+            ck = cv = cpos = csc = cssm = cconv = ()
+            if self._has_attn:
+                La = n_attn_layers(cfg)
+                ck = jnp.zeros((La, 1, Cs, cfg.n_kv_heads, cfg.hd), dtype)
+                cv = jnp.zeros((La, 1, Cs, cfg.n_kv_heads, cfg.hd), dtype)
+                cpos = jnp.full((1, Cs), -1, jnp.int32)
+                csc = jnp.zeros((La, 1, Cs), jnp.float32)
+            if self._has_rec:
+                cssm, cconv = empty_decode_state(
+                    cfg, self.cap.n_recurrent_layers, 1)
+            chunk = (ck, cv, cpos, csc, cssm, cconv)
         return ContinuousState(
             dec,
             token=jnp.zeros((B,), jnp.int32),
             remaining=jnp.zeros((B,), jnp.int32),
             key=self._state_key,
             emit_tok=jnp.zeros((E, B), jnp.int32),
-            emit_act=jnp.zeros((E, B), bool))
+            emit_act=jnp.zeros((E, B), bool),
+            chunk=chunk)
 
     def _ensure_plan(self, pre):
         """Fix (tier sizes, layer grouping) on first admission.
@@ -1433,27 +1646,108 @@ class ContinuousEngine:
             if not (rem0[i] > 0 and not (eos >= 0 and t0 == eos)):
                 self._retire(slot)
 
+    # --------------------------------------------------------- chunked admit
+    def begin_chunked(self, prompt, max_new: int) -> int:
+        """Open a chunked admission (DESIGN.md §5): reserve a decode slot
+        for ``prompt`` NOW, but prefill it one `chunk_len`-token chunk per
+        subsequent `decode_block` instead of in a monolithic dispatch.
+        Resident decode rows keep stepping while the prompt streams in;
+        the final chunk flips the row live inside the same fused block.
+
+        Preconditions (asserted): `chunked_prefill` on, a free slot, no
+        other pending row (the staging buffers hold exactly one), and a
+        calibrated plan — the FIRST request of a session must go through
+        `admit_many`, whose batched prefill feeds `_ensure_plan`.  Paged
+        mode allocates the row's full page tables here, up front, so
+        `admissible_prefix` headroom accounting is identical to the
+        monolithic path; the pages stay unscattered until the final chunk.
+
+        Returns the slot.  The row is NOT occupied until the final chunk
+        lands — track it via `n_pending` / `pending_prefilled_len`."""
+        assert self.ccfg.chunked_prefill, "chunked_prefill is off"
+        assert self._pending is None, \
+            "one pending chunked row at a time (staging buffers hold one)"
+        assert self._free, "no free slot for chunked admission"
+        assert self._chunk_reset_fn is not None, \
+            "chunked admission needs a calibrated plan; admit the first " \
+            "request via admit_many"
+        p = np.asarray(prompt, np.int32)
+        plan = plan_chunks(
+            p, self.ccfg.resolved_chunk_len(), self.ccfg.prompt_bucket,
+            ssm_chunk=self.cfg.ssm_chunk if self._has_rec else 0,
+            max_len=self.ccfg.max_prompt_len)
+        mn = min(max_new, self.ccfg.max_new_cap)
+        slot = self._free.pop(0)
+        tbls = self._alloc_row_tables([slot], [plan.t], [mn], 1) \
+            if self._paged else ()
+        self.state = self._chunk_reset_fn(self.state)
+        self._pending = {"slot": slot, "plan": plan, "next": 0,
+                         "max_new": mn, "tbls": tbls}
+        self.chunked_admitted += 1
+        return slot
+
+    def _advance_chunk(self, pending: dict, n_steps: int):
+        """Launch the chunk-carrying fused block for the pending row's next
+        chunk (plus `n_steps` decode steps); on the final chunk, run the
+        admit tail and open the row's emission buffer."""
+        plan: ChunkPlan = pending["plan"]
+        c = pending["next"]
+        s0, C = plan.starts[c], plan.lens[c]
+        tok_c = plan.tokens[None, s0:s0 + C]
+        val_c = plan.valid[None, s0:s0 + C]
+        start = np.int32(s0)
+        if c == plan.n_chunks - 1:
+            slot, mn = pending["slot"], pending["max_new"]
+            self._host_key, sub = jax.random.split(self._host_key)
+            rows = np.asarray([slot], np.int32)
+            rem0 = np.asarray([mn - 1], np.int32)
+            t_req = np.asarray([plan.t], np.int32)
+            token0, self.state = self._chunk_jit(C, n_steps, True)(
+                self.params, self.state, tok_c, val_c, start, t_req,
+                rows, rem0, sub, pending["tbls"])
+            self._pending = None
+            self.prefill_pad_tokens += plan.total
+            self.prompt_tokens += plan.t
+            self._register_admitted([slot], np.asarray(token0), [mn], rem0)
+        else:
+            self.state = self._chunk_jit(C, n_steps, False)(
+                self.params, self.state, tok_c, val_c, start)
+            pending["next"] = c + 1
+        self.chunk_dispatches += 1
+        self.chunk_tokens_prefilled += C
+
     # ------------------------------------------------------------ decode loop
     def decode_block(self) -> int:
-        """Run one fused block of up to `sync_every` decode steps (ONE
-        dispatch), drain the on-device emission buffer (ONE device→host
-        read), retire finished rows.  Returns the number of requests
-        completed in this block."""
-        if not self._occupied:
+        """Run one fused block (ONE dispatch): up to `sync_every` decode
+        steps, plus — when a chunked admission is pending — that row's next
+        prefill chunk co-scheduled in the same dispatch.  Drain the
+        on-device emission buffer (ONE device→host read), retire finished
+        rows.  Returns the number of requests completed in this block."""
+        pending = self._pending
+        if not self._occupied and pending is None:
             return 0
-        # the host knows an exact upper bound on useful steps this block:
-        # EOS can only retire rows EARLIER, so don't burn whole-batch steps
-        # past the longest remaining token budget
-        bound = max(self._max_new[s] - 1 - self._steps[s]
-                    for s in self._occupied)
-        n = max(1, min(self.ccfg.sync_every, bound))
-        self.state = self._block_jit(n)(self.params, self.state)
+        before = len(self._completed)
+        if pending is not None:
+            # fixed block length for chunk-carrying dispatches: the bound
+            # clamp below would key extra (chunk_len, n) executables for no
+            # compute win (rows past their budget go inactive and mask
+            # their steps), so every chunk of a given length reuses ONE
+            # mid and ONE final executable
+            n = self.ccfg.sync_every
+            self._advance_chunk(pending, n)
+        else:
+            # the host knows an exact upper bound on useful steps this
+            # block: EOS can only retire rows EARLIER, so don't burn
+            # whole-batch steps past the longest remaining token budget
+            bound = max(self._max_new[s] - 1 - self._steps[s]
+                        for s in self._occupied)
+            n = max(1, min(self.ccfg.sync_every, bound))
+            self.state = self._block_jit(n)(self.params, self.state)
         self.decode_dispatches += 1
         self.decode_steps += n
         # the block's only device→host transfer: emissions + liveness
         emit_tok, emit_act, active_now = jax.device_get(
             (self.state.emit_tok, self.state.emit_act, self.state.dec.active))
-        before = len(self._completed)
         for i in range(n):
             nxt, act_prev = emit_tok[i], emit_act[i]
             self.row_steps += self.ccfg.max_concurrency

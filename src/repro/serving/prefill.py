@@ -244,6 +244,113 @@ def plan_pack_lengths(lengths: Sequence[int], bucket: int, pack_len: int,
                     slot.astype(np.int32))
 
 
+class ChunkPlan(NamedTuple):
+    """Host-side plan for one CHUNKED prefill (DESIGN.md §5).
+
+    The prompt is bucket-padded first (``P = ceil(t / bucket) * bucket`` —
+    the exact token stream the bucketed monolithic path prefills, so
+    recurrent pad-token integration matches it), then cut at ``chunk_len``
+    multiples.  Every boundary is a bucket multiple, and the planner
+    requires ``chunk_len % bucket == 0``, so chunk lengths come from the
+    tiny set {chunk_len} ∪ {bucket multiples < chunk_len} and the chunk
+    executables stay memoizable.  With ``ssm_chunk`` set the same
+    alignment puts every boundary on the SSD chunk grid
+    (``bucket % ssm_chunk == 0`` is validated), which is what makes the
+    carried recurrent state bit-identical to one monolithic scan
+    (`ssm.ssd_chunked`'s ``initial_state``).
+
+    Because ``P < t + bucket <= t + chunk_len``, the last VALID token
+    always lands in the final chunk — the only chunk that may carry
+    right-padding — so ``last_logits`` and the first sampled token come
+    out of the finalizing dispatch, never an interior one.
+    """
+    tokens: np.ndarray    # [P] int32 bucket-padded prompt
+    valid: np.ndarray     # [P] bool (prefix mask; False on padding)
+    starts: tuple         # chunk start offsets, multiples of chunk_len
+    lens: tuple           # chunk lengths (all == chunk_len but maybe the last)
+    t: int                # true prompt length
+    total: int            # P, the bucket-padded length
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.starts)
+
+
+def plan_chunks(prompt: np.ndarray, chunk_len: int, bucket: int,
+                ssm_chunk: int = 0,
+                max_len: Optional[int] = None) -> ChunkPlan:
+    """Cut one prompt into fixed-size prefill chunks (see `ChunkPlan`)."""
+    if chunk_len <= 0 or chunk_len % bucket != 0:
+        raise ValueError(
+            f"chunk_len ({chunk_len}) must be a positive multiple of "
+            f"prompt_bucket ({bucket})")
+    if ssm_chunk and bucket % ssm_chunk != 0:
+        raise ValueError(
+            f"chunked prefill with recurrent layers requires prompt_bucket "
+            f"({bucket}) to be a multiple of ssm_chunk ({ssm_chunk}) so "
+            f"chunk boundaries align with the SSD chunk grid")
+    p = np.asarray(prompt, np.int32)
+    t = len(p)
+    assert t >= 1, "empty prompt"
+    if max_len is not None and t > max_len:
+        raise ValueError(f"prompt length {t} exceeds "
+                         f"max_prompt_len {max_len}")
+    P = ((t + bucket - 1) // bucket) * bucket
+    toks = np.zeros((P,), np.int32)
+    toks[:t] = p
+    valid = np.zeros((P,), bool)
+    valid[:t] = True
+    starts = tuple(range(0, P, chunk_len))
+    lens = tuple(min(chunk_len, P - s) for s in starts)
+    return ChunkPlan(toks, valid, starts, lens, t, P)
+
+
+class ChunkOut(NamedTuple):
+    last_logits: jnp.ndarray          # [B, V] at the chunk's last valid token
+    k: Optional[jnp.ndarray]          # [n_attn, B, C, Hkv, hd] chunk KV
+    v: Optional[jnp.ndarray]
+    pos_row: jnp.ndarray              # [B, C] absolute positions (-1 on pad)
+    colsums: Optional[jnp.ndarray]    # [n_attn, B, Cctx+C] RAW kv-head-mean mass
+    ssm_state: Optional[tuple]        # (state, conv) carries after this chunk
+
+
+def chunk_prefill(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,       # [B, C] one chunk of the bucket-padded prompt
+    valid: jnp.ndarray,        # [B, C] prefix mask within the chunk
+    start,                     # traced scalar: the chunk's absolute offset
+    ctx=None,                  # previous chunks' staged KV (k, v, pos)
+    state_in=None,             # previous chunk's recurrent carries
+) -> ChunkOut:
+    """One prefill chunk: forward over [start, start+C) with carry-in.
+
+    Attention sees the previously-staged KV as read-only context
+    (`models.attention.full_attention`'s ``ctx`` — the prefix-reuse hook,
+    re-used here with staging buffers instead of cached pages), recurrent
+    layers resume from ``state_in``.  Colsums come back RAW (un-normalized)
+    over the concatenated [Cctx + C] key axis so the caller can accumulate
+    them across chunks and divide by the prompt length once at finalize —
+    the same per-query normalization monolithic `prefill` applies.
+    """
+    B, C = tokens.shape
+    positions = start + jnp.broadcast_to(
+        jnp.arange(C, dtype=jnp.int32)[None], (B, C))
+    out = forward(params, cfg, tokens=tokens, positions=positions,
+                  valid=valid, collect_kv=cfg.has_attention, ctx=ctx,
+                  state_in=state_in)
+    nv = valid.sum(-1).astype(jnp.int32)                    # [B] >= 1
+    last = jnp.take_along_axis(
+        out.logits, (jnp.maximum(nv, 1) - 1)[:, None, None], axis=1)[:, 0]
+    pos_row = jnp.where(valid, positions, -1)
+    if out.kv is not None:
+        k, v = out.kv
+        colsums = out.attn_scores.mean(axis=2)              # kv-head mean
+    else:
+        k = v = colsums = None
+    return ChunkOut(last, k, v, pos_row, colsums, out.ssm_state)
+
+
 class PrefillOut(NamedTuple):
     last_logits: jnp.ndarray          # [B, V] logits at each row's last valid token
     cos_sims: jnp.ndarray             # [n_attn_layers, B]

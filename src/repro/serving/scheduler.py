@@ -287,31 +287,90 @@ class ContinuousScheduler(_RequestQueue):
                  if self._slot_req[s].prompt is not None]
         return select_victim(cands)
 
-    def poll(self) -> List[Request]:
-        """One scheduler iteration, fixed contract (docs/API.md): harvest
-        finished rows → admit every queued arrival that fits a free row
-        AND the page pool's headroom (typed multimodal members are
-        frontend-encoded first, batched across the burst, then ONE
-        `admit_many` per burst; the engine picks the packed /
-        length-sorted / padded layout per modality) → one fused decode
-        block → harvest and return completions.
+    def _chunk_eligible(self, r: Request) -> bool:
+        """True when `r` should stream in through the chunked-prefill path
+        instead of a monolithic admission: chunked mode ready (plan
+        calibrated), a token prompt (embeds/multimodal payloads have no
+        chunk planner), and longer than one chunk — a prompt that fits in
+        a single chunk gains nothing over the bucketed monolithic
+        dispatch."""
+        return (self.core.chunk_ready
+                and r.prompt is not None
+                and len(r.prompt) > self.core.ccfg.resolved_chunk_len())
 
-        Under pool pressure (`ContinuousEngine.admissible_prefix` refusing
-        the queue head) admission is HELD — the queue is the backpressure
-        buffer — and after `preempt_after` consecutive held polls the
-        ladder escalates: ONE victim row per poll (fewest generated
-        tokens, `select_victim`) is preempted and re-queued so its pages
-        host the stalled head.  A configured `PoolFaultInjector` ticks at
-        the top of every poll with a live pool; `ccfg.audit_pool` runs the
-        pool-accounting audit (device tables included) at the bottom."""
+    def _try_begin_chunked(self) -> bool:
+        """Route the first chunk-eligible queued request into the pending
+        chunk stream (at most ONE new chunked row per poll; the staging
+        buffers hold one pending row).  Returns True when pool headroom
+        refused the admission — the caller folds that into the stall
+        ladder like a refused monolithic burst."""
+        if not (self.core.chunk_ready and self.core.n_pending == 0
+                and self.core.has_free):
+            return False
+        idx = next((i for i, r in enumerate(self.queue)
+                    if self._chunk_eligible(r)), None)
+        if idx is None:
+            return False
+        r = self.queue[idx]
+        mn = r.max_new - (len(r.generated) if r.generated is not None
+                          else 0)
+        if self.core.admissible_prefix([(r.prompt, mn)]) == 0:
+            return True                       # held: pool pressure
+        self.queue.pop(idx)
+        slot = self.core.begin_chunked(r.prompt, mn)
+        self._slot_req[slot] = r
+        return False
+
+    def poll(self) -> List[Request]:
+        """One scheduler iteration.  The fixed rung ladder (docs/API.md):
+
+        1. **Harvest** — resolve rows the last block retired to their
+           requests (must precede admission: a freed slot re-admitted
+           before harvest would clobber the slot→request map).
+        2. **Reclaim** — tick the configured `PoolFaultInjector` (scripted
+           page-pool steal/return pressure), so admission sees the pool's
+           true headroom.
+        3. **Chunk-admit** — with `chunked_prefill` ready, route the first
+           chunk-eligible queued request (token prompt longer than one
+           chunk) into the pending chunk stream via `begin_chunked`: it
+           takes a slot NOW but prefills one chunk per decode block, so
+           resident rows never stall behind its prompt.  At most one
+           pending row exists; further eligible requests HOLD in the
+           queue (shorter requests admit past them — out-of-order
+           admission is the point) until the pending row goes live.
+        4. **Admit** — fill the remaining free rows from the queue with
+           ONE batched monolithic admission per burst (typed multimodal
+           members frontend-encoded first, batched across the burst; the
+           engine picks the packed / length-sorted / padded layout per
+           modality), gated by `ContinuousEngine.admissible_prefix`
+           against free rows AND page-pool headroom.
+        5. **Hold** — when headroom refuses the burst head (or the
+           chunk-admit candidate), admission is HELD: the queue is the
+           backpressure buffer, `stall_polls` counts the held polls.
+        6. **Preempt** — after `preempt_after` consecutive held polls the
+           ladder escalates: ONE victim row per poll (fewest generated
+           tokens, `select_victim`) is preempted and re-queued at the
+           head as ``prompt + generated`` so its pages host the stalled
+           arrival; harvest makes the preemption invisible in the output.
+        7. **Decode** — one fused block: up to `sync_every` decode steps,
+           plus the pending row's next chunk co-scheduled in the same
+           dispatch (the final chunk flips it live and samples its first
+           token inside the block).
+        8. **Harvest** again and return completions; `ccfg.audit_pool`
+           runs the pool-accounting audit (device tables included) last.
+        """
         done = self._harvest()
         if self.injector is not None and self.core._pool is not None:
             self.injector.tick(self.core._pool)
-        held = False
+        chunk_held = self._try_begin_chunked()
+        held = chunk_held
         preempted = False
-        while self.queue and self.core.has_free:
-            take = min(len(self.queue), self.core.n_free)
-            payloads = self._admit_payloads(self.queue[:take])
+        while self.core.has_free:
+            burst = [r for r in self.queue if not self._chunk_eligible(r)]
+            if not burst:
+                break
+            burst = burst[:min(len(burst), self.core.n_free)]
+            payloads = self._admit_payloads(burst)
             n_ok = self.core.admissible_prefix(payloads)
             if n_ok == 0:
                 if not preempted and \
@@ -323,14 +382,23 @@ class ContinuousScheduler(_RequestQueue):
                         continue
                 held = True
                 break
-            reqs, self.queue = self.queue[:n_ok], self.queue[n_ok:]
+            reqs = burst[:n_ok]
+            admitted = set(map(id, reqs))
+            self.queue = [r for r in self.queue if id(r) not in admitted]
             slots = self.core.admit_many(payloads[:n_ok])
             for r, s in zip(reqs, slots):
                 self._slot_req[s] = r
             done.extend(self._harvest())   # instant EOS / max_new == 1
-            if n_ok < take:               # partial fit: pressure remains
+            if n_ok < len(burst):         # partial fit: pressure remains
                 held = True
                 break
+        if chunk_held and not preempted and \
+                self._stall_streak + 1 >= self.core.ccfg.preempt_after:
+            # the hold came from a refused CHUNK candidate (the burst loop
+            # escalates its own refusals inline) — same ladder, one victim
+            victim = self._victim_slot()
+            if victim is not None:
+                self.preempt_slot(victim)
         if held:
             self._stall_streak += 1
             self.core.stall_polls += 1
@@ -346,6 +414,6 @@ class ContinuousScheduler(_RequestQueue):
 
     def run_until_empty(self) -> List[Request]:
         done: List[Request] = []
-        while self.queue or self.core.n_occupied:
+        while self.queue or self.core.n_occupied or self.core.n_pending:
             done.extend(self.poll())
         return done

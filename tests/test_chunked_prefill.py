@@ -1,0 +1,250 @@
+"""Chunked prefill co-scheduled with decode (DESIGN.md §5, ISSUE-8).
+
+The load-bearing property: streaming a long prompt into a decode slot one
+`chunk_len`-token chunk per fused block — resident rows decoding the whole
+time — is token-identical to the monolithic bucketed admission AND to solo
+`Engine.generate`, across dense / hybrid / ssm families, contiguous and
+paged layouts.  Fast-lane units pin the pieces: the chunk planner's
+boundary math, the ctor alignment contracts, the staged carry-in position
+bookkeeping, and the paged `pages_needed` interaction.
+"""
+import pytest
+
+import numpy as np
+
+import jax
+
+from repro.core import PolicyConfig
+from repro.core.paging import pages_needed
+from repro.models import ModelConfig, init_params
+from repro.serving import (ContinuousConfig, ContinuousEngine,
+                           ContinuousScheduler, Engine, EngineConfig,
+                           pad_prompt)
+from repro.serving.prefill import plan_chunks
+
+DENSE = ModelConfig(name="s", arch_type="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                    dtype="float32", param_dtype="float32")
+HYBRID = ModelConfig(name="h", arch_type="hybrid", n_layers=4, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                     ssm_state=8, ssm_expand=2, ssm_head_dim=32, ssm_chunk=8,
+                     attn_period=2, dtype="float32", param_dtype="float32")
+SSM = ModelConfig(name="m", arch_type="ssm", n_layers=2, d_model=64,
+                  n_heads=1, n_kv_heads=1, head_dim=32, d_ff=0, vocab_size=97,
+                  ssm_state=8, ssm_expand=2, ssm_head_dim=32, ssm_chunk=8,
+                  dtype="float32", param_dtype="float32")
+
+ECFG = EngineConfig(mode="uniform", policy=PolicyConfig("sliding_window"),
+                    budget_abs=12, bucket=4, min_budget=4)
+
+
+def _ccfg(**kw):
+    base = dict(max_concurrency=3, prompt_bucket=8, max_prompt_len=24,
+                max_new_cap=8, sync_every=2, chunked_prefill=True,
+                chunk_len=8)
+    base.update(kw)
+    return ContinuousConfig(**base)
+
+
+_PARAMS = {}
+
+
+def _params(cfg):
+    if cfg.name not in _PARAMS:
+        _PARAMS[cfg.name] = init_params(jax.random.PRNGKey(0), cfg)
+    return _PARAMS[cfg.name]
+
+
+def _prompts(seed=1, lens=(6, 21, 5, 19, 9)):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 97, (n,)).astype(np.int32) for n in lens]
+
+
+def _run(cfg, ccfg, prompts, max_new=6):
+    sched = ContinuousScheduler(_params(cfg), cfg, ECFG, ccfg, seed=0)
+    for p in prompts:
+        sched.submit(p, max_new=max_new)
+    done = sched.run_until_empty()
+    return {r.rid: r.tokens for r in done}, sched
+
+
+# ------------------------------------------------------------ planner units
+@pytest.mark.fast
+def test_plan_chunks_non_divisible_boundary_math():
+    # t=33, bucket=8 -> P=40; chunk_len=16 -> chunks 16/16/8
+    p = np.arange(33, dtype=np.int32)
+    plan = plan_chunks(p, chunk_len=16, bucket=8)
+    assert plan.t == 33 and plan.total == 40
+    assert plan.starts == (0, 16, 32) and plan.lens == (16, 16, 8)
+    assert plan.n_chunks == 3
+    # bucket-padded token stream: prompt prefix, zero pad, prefix validity
+    assert np.array_equal(plan.tokens[:33], p)
+    assert np.all(plan.tokens[33:] == 0)
+    assert plan.valid[:33].all() and not plan.valid[33:].any()
+    # the last VALID token lands in the FINAL chunk (P < t + chunk_len):
+    # interior chunks are fully valid, only the final one carries padding
+    assert plan.starts[-1] <= plan.t - 1
+    for s, ln in zip(plan.starts[:-1], plan.lens[:-1]):
+        assert plan.valid[s:s + ln].all()
+
+
+@pytest.mark.fast
+def test_plan_chunks_exact_multiples_and_single_chunk():
+    plan = plan_chunks(np.arange(32, dtype=np.int32), chunk_len=16, bucket=8)
+    assert plan.starts == (0, 16) and plan.lens == (16, 16)
+    tiny = plan_chunks(np.arange(3, dtype=np.int32), chunk_len=16, bucket=8)
+    assert tiny.starts == (0,) and tiny.lens == (8,) and tiny.total == 8
+
+
+@pytest.mark.fast
+def test_plan_chunks_validates_contracts():
+    p = np.arange(20, dtype=np.int32)
+    with pytest.raises(ValueError, match="multiple of"):
+        plan_chunks(p, chunk_len=12, bucket=8)        # not a bucket multiple
+    with pytest.raises(ValueError, match="multiple of ssm_chunk"):
+        plan_chunks(p, chunk_len=16, bucket=4, ssm_chunk=8)
+    with pytest.raises(ValueError, match="exceeds"):
+        plan_chunks(p, chunk_len=8, bucket=8, max_len=16)
+
+
+@pytest.mark.fast
+def test_ctor_enforces_chunk_alignment():
+    # chunk_len must be a prompt_bucket multiple
+    with pytest.raises(ValueError, match="multiple of prompt_bucket"):
+        ContinuousEngine(None, DENSE, ECFG, _ccfg(chunk_len=12))
+    # recurrent families additionally need bucket % ssm_chunk == 0 so every
+    # chunk boundary lands on the SSD chunk grid
+    with pytest.raises(ValueError, match="multiple of ssm_chunk"):
+        ContinuousEngine(None, SSM, ECFG,
+                         _ccfg(prompt_bucket=4, chunk_len=4,
+                               max_prompt_len=24))
+
+
+# ----------------------------------------------- staged carry-in bookkeeping
+@pytest.mark.fast
+def test_chunk_staging_position_bookkeeping():
+    """After each mid chunk the staging buffer holds absolute positions for
+    exactly the tokens staged so far (-1 beyond), and the engine reports
+    `prefilled_len < prompt_len` — the partially-prefilled contract."""
+    cfg = DENSE
+    core = ContinuousEngine(_params(cfg), cfg, ECFG, _ccfg())
+    core.admit_many([(np.arange(5, dtype=np.int32) % 97, 2)])  # calibrate
+    while core.n_occupied:
+        core.decode_block()
+    prompt = _prompts(seed=3, lens=(21,))[0]
+    core.begin_chunked(prompt, max_new=4)        # P=24, chunks 8/8/8
+    assert core.n_pending == 1 and core.pending_prefilled_len == 0
+    seen = 0
+    while core.n_pending:
+        core.decode_block()
+        if core.n_pending:                       # mid chunk landed
+            seen += 8
+            assert core.pending_prefilled_len == seen
+            cpos = np.asarray(core.state.chunk[2])[0]
+            assert np.array_equal(cpos[:seen], np.arange(seen))
+            assert np.all(cpos[seen:] == -1)
+    # final chunk flipped the row live inside the same fused block
+    assert core.n_occupied == 1 and core.pending_prefilled_len == 0
+    while core.n_occupied:
+        core.decode_block()
+
+
+@pytest.mark.fast
+def test_begin_chunked_requires_calibrated_plan():
+    core = ContinuousEngine(_params(DENSE), DENSE, ECFG, _ccfg())
+    with pytest.raises(AssertionError, match="calibrated plan"):
+        core.begin_chunked(np.arange(20, dtype=np.int32), max_new=4)
+
+
+# ------------------------------------------------------ paged interaction
+@pytest.mark.fast
+def test_chunked_row_page_allocation_matches_pages_needed():
+    """`begin_chunked` allocates the row's FULL `pages_needed` quota up
+    front (admission headroom identical to the monolithic path), holds the
+    pages unscattered through the mid chunks — the per-poll audit stays
+    clean — and frees them at retirement, squeezed tail included."""
+    cfg = DENSE
+    ccfg = _ccfg(page_size=4, audit_pool=True)
+    core = ContinuousEngine(_params(cfg), cfg, ECFG, ccfg)
+    core.admit_many([(np.arange(5, dtype=np.int32), 2)])       # calibrate
+    while core.n_occupied:
+        core.decode_block()
+    core.audit_pool(deep=True)
+    free0 = core._pool.n_free
+    prompt = _prompts(seed=3, lens=(21,))[0]
+    mn = 4
+    slot = core.begin_chunked(prompt, max_new=mn)
+    plan = core.plan
+    # budget squeezes the tail: the quota covers min(P, budget) live slots
+    # per tier layer, NOT the full prompt
+    expect = (plan.n_big * pages_needed(len(prompt), plan.b_big, mn, 4)
+              + plan.n_small * pages_needed(len(prompt), plan.b_small, mn, 4))
+    assert len(core._row_pages[slot]) == expect
+    assert core._pool.n_free == free0 - expect
+    while core.n_pending or core.n_occupied:
+        core.decode_block()
+        core.audit_pool(deep=True)               # pending pages stay booked
+    assert core._pool.n_free == free0            # retired row freed its quota
+
+
+# ------------------------------------------------------------ system identity
+@pytest.mark.parametrize("cfg", [DENSE, HYBRID, SSM],
+                         ids=["dense", "hybrid", "ssm"])
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+def test_chunked_identical_to_monolithic_and_solo(cfg, layout):
+    if layout == "paged" and cfg is SSM:
+        pytest.skip("paged arenas need attention layers")
+    extra = {"page_size": 4} if layout == "paged" else {}
+    prompts = _prompts()
+    base, _ = _run(cfg, _ccfg(chunked_prefill=False, chunk_len=0, **extra),
+                   prompts)
+    ch, sched = _run(cfg, _ccfg(**extra), prompts)
+    # the 21-token prompt rides the FIRST burst monolithically (chunk
+    # routing needs the calibrated plan, built on first admission); the
+    # later 19- and 9-token arrivals exceed chunk_len=8 and stream
+    # chunked: P=24 and P=16 staged tokens
+    assert sched.core.chunked_admitted == 2
+    assert sched.core.chunk_tokens_prefilled == 24 + 16
+    for rid in base:
+        assert np.array_equal(base[rid], ch[rid]), rid
+    solo = Engine(_params(cfg), cfg, ECFG)
+    for i, p in enumerate(prompts):
+        toks, valid = pad_prompt(p, 8)
+        r = solo.generate(tokens=toks, valid=valid, max_new_tokens=6)
+        assert np.array_equal(np.asarray(r.tokens[0]), ch[i]), i
+
+
+@pytest.mark.parametrize("packed", [False, True], ids=["bucketed", "packed"])
+def test_chunked_with_short_burst_layouts(packed):
+    """Shorts admitted behind a streaming long prompt (out-of-order — the
+    point of chunked admission) stay identical whichever admission layout
+    the burst uses.  The 22-token prompt leads the queue, so it rides the
+    first (calibrating) burst monolithically; only the trailing 20-token
+    prompt streams chunked."""
+    cfg = HYBRID
+    prompts = _prompts(seed=5, lens=(22, 6, 7, 5, 20))
+    base, _ = _run(cfg, _ccfg(chunked_prefill=False, chunk_len=0,
+                              packed_prefill=packed), prompts)
+    ch, sched = _run(cfg, _ccfg(packed_prefill=packed), prompts)
+    assert sched.core.chunked_admitted == 1
+    for rid in base:
+        assert np.array_equal(base[rid], ch[rid]), rid
+
+
+# ------------------------------------------------------------- zero retrace
+@pytest.mark.fast
+def test_chunked_admission_never_retraces():
+    """Repeated long-prompt traffic reuses ONE executable per
+    (chunk_len, final) pair — `start`, the row index, and the page tables
+    are traced operands."""
+    cfg = DENSE
+    # shorts lead the queue so the calibrating first burst is all-short
+    # and every long prompt streams chunked
+    prompts = _prompts(seed=9, lens=(6, 5, 7, 17, 21, 19, 23))
+    _, sched = _run(cfg, _ccfg(), prompts)
+    core = sched.core
+    assert core.chunked_admitted == 4
+    assert core.chunk_dispatches > len(core._chunk_fns)
+    assert all(fn._cache_size() == 1 for fn in core._chunk_fns.values())
+    assert core._chunk_reset_fn._cache_size() == 1
+    assert all(fn._cache_size() == 1 for fn in core._block_fns.values())
