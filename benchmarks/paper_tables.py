@@ -61,6 +61,38 @@ def fig3_accuracy_vs_budget(quick=False, policy="sliding_window"):
     return out
 
 
+def fig3b_allocation_frontier(quick=False):
+    """Memory-vs-quality frontier column (beyond the paper): token
+    agreement for uniform / 2-tier squeeze / N-tier zigzag x {h2o,
+    l2_norm} at the same conserved total budget.  The delta-vs-uniform
+    column is the quality the layer-wise shaping buys at equal memory."""
+    params, cfg = trained_model()
+    prompts = eval_prompts(4 if quick else 8)
+    fracs = (0.5,) if quick else (0.3, 0.5)
+    out = []
+    for frac in fracs:
+        for pol in ("h2o", "l2_norm"):
+            u = decode_fidelity(params, cfg, prompts, "uniform", policy=pol,
+                                budget_frac=frac)
+            s = decode_fidelity(params, cfg, prompts, "squeeze", policy=pol,
+                                budget_frac=frac)
+            z = decode_fidelity(params, cfg, prompts, "zigzag", policy=pol,
+                                budget_frac=frac, n_tiers=3)
+            for r in (u, s, z):      # conservation, asserted here too
+                p = r["plan"]
+                assert p.total + p.slack == p.n_layers * p.b_init, p
+            out.append(row(
+                f"fig3b_frontier_{pol}_{int(frac*100)}pct", u["wall"] * 1e6,
+                f"uniform={u['agreement']:.3f};"
+                f"twotier={s['agreement']:.3f};"
+                f"zigzag={z['agreement']:.3f};"
+                f"twotier_vs_uniform={s['agreement']-u['agreement']:+.3f};"
+                f"zigzag_vs_uniform={z['agreement']-u['agreement']:+.3f};"
+                f"slots={u['cache_slots']}|{s['cache_slots']}|"
+                f"{z['cache_slots']};zigzag_tiers={z['plan'].describe()}"))
+    return out
+
+
 def table2_iso_accuracy(quick=False, policy="sliding_window"):
     """Smallest budget reaching >= 90% agreement with full cache."""
     params, cfg = trained_model()
@@ -179,9 +211,10 @@ def a2_p_sweep(quick=False, policy="sliding_window"):
                             budget_frac=0.3, p=p)
         out.append(row(f"a2_p_{p}", r["wall"] * 1e6,
                        f"agree={r['agreement']:.3f};"
-                       f"b_small={r['plan'].b_small};b_big={r['plan'].b_big}"))
+                       f"tiers={r['plan'].describe()}"))
     return out
 
 
-ALL = [fig2_layer_importance, fig3_accuracy_vs_budget, table2_iso_accuracy,
+ALL = [fig2_layer_importance, fig3_accuracy_vs_budget,
+       fig3b_allocation_frontier, table2_iso_accuracy,
        fig4_memory_per_token, table3_throughput, table45_overhead, a2_p_sweep]

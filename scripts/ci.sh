@@ -4,6 +4,7 @@
 #     scripts/ci.sh --fast                 # unit lane: pytest -m fast, <2 min
 #     scripts/ci.sh --full                 # system + kernel lane + smoke gate
 #     scripts/ci.sh --docs                 # docs lane: link check + API snippet
+#     scripts/ci.sh --coverage             # full suite under pytest-cov + floor
 #     scripts/ci.sh                        # everything (tier-1 verify exact)
 #     scripts/ci.sh --with-benchmarks      # ... plus the quick benchmark suite
 #
@@ -13,8 +14,12 @@
 # the quickstart example, and the serving-bench smoke, which doubles as the
 # bench-regression gate: it compares dispatches-per-decode-step and the
 # fused/per-step wall-clock ratio against the last BENCH_serving.json entry
-# and fails on >20% regression.  The default (no flag) mirrors the tier-1
-# verify command from ROADMAP.md exactly, then runs the example + smoke.
+# and fails on >20% regression.  The coverage lane reruns the full suite
+# under pytest-cov with a line-coverage floor (COV_FLOOR, default 70) over
+# src/repro; it degrades to a no-op with a message when pytest-cov is not
+# installed, so local runs without the optional dep never fail — the CI
+# `coverage` job installs it explicitly.  The default (no flag) mirrors the
+# tier-1 verify command from ROADMAP.md exactly, then runs example + smoke.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -37,6 +42,18 @@ case "$lane" in
         echo "== docs lane: internal links + docs/API.md snippet =="
         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_docs.py
         echo "CI OK (docs lane)"
+        exit 0
+        ;;
+    --coverage)
+        echo "== coverage lane: full suite under pytest-cov =="
+        if ! python -c "import pytest_cov" >/dev/null 2>&1; then
+            echo "pytest-cov not installed; skipping coverage lane"
+            echo "(the CI coverage job installs it: pip install pytest-cov)"
+            exit 0
+        fi
+        run_pytest --cov=repro --cov-report=term \
+            --cov-fail-under="${COV_FLOOR:-70}"
+        echo "CI OK (coverage lane)"
         exit 0
         ;;
     --full)

@@ -1,23 +1,25 @@
 # SqueezeAttention core: layer-importance measurement -> KMeans grouping ->
 # Algorithm-1 budget reallocation -> policy-driven slot arenas.
-from repro.core.allocation import (BudgetPlan, allocate, plan_cache_bytes,
-                                   plan_pool_pages, uniform_plan)
+from repro.core.allocation import (BudgetPlan, allocate, allocate_zigzag,
+                                   plan_cache_bytes, plan_pool_pages,
+                                   uniform_plan)
 from repro.core.cache import (SlotCache, clear_row, compact, empty_cache,
                               insert_row, insert_rows, pad_cache, sort_slots,
                               write_token)
 from repro.core.kmeans import kmeans_1d, kmeans_1d_jax
 from repro.core.paging import (KVPool, PagedTier, PagePool, pages_for,
                                pages_needed)
-from repro.core.policies import (H2O, POLICIES, SINK_H2O, SLIDING_WINDOW,
-                                 STREAMING_LLM, PolicyConfig)
+from repro.core.policies import (H2O, L2_NORM, POLICIES, SINK_H2O,
+                                 SLIDING_WINDOW, STREAMING_LLM, PolicyConfig,
+                                 key_norms)
 
 __all__ = [
-    "BudgetPlan", "allocate", "uniform_plan", "plan_cache_bytes",
-    "plan_pool_pages",
+    "BudgetPlan", "allocate", "allocate_zigzag", "uniform_plan",
+    "plan_cache_bytes", "plan_pool_pages",
     "SlotCache", "compact", "empty_cache", "pad_cache", "write_token",
     "insert_row", "insert_rows", "clear_row", "sort_slots",
     "KVPool", "PagedTier", "PagePool", "pages_for", "pages_needed",
     "kmeans_1d", "kmeans_1d_jax",
     "PolicyConfig", "POLICIES", "SLIDING_WINDOW", "STREAMING_LLM", "H2O",
-    "SINK_H2O",
+    "SINK_H2O", "L2_NORM", "key_norms",
 ]

@@ -10,13 +10,17 @@ barely changes the residual stream there) gets its budget squeezed to
 
 Total budget is conserved exactly (paper §A.2).
 
-TPU adaptation (DESIGN.md §3): XLA needs static cache shapes, so the two
-resulting budgets are quantized to multiples of ``bucket`` — conserving the
-total by construction (we round the small budget down and give the remainder
-to the big group, then round the big budget down; the slack is reported so the
-engine can account for it).  The grouped layout (every layer is in one of two
-budget tiers) also lets the decode step run two uniform scans instead of
+TPU adaptation (DESIGN.md §3): XLA needs static cache shapes, so budgets are
+quantized to multiples of ``bucket`` with the sub-bucket remainder reported
+as ``slack``.  The grouped layout (every layer is in one of a small number of
+budget *tiers*) lets the decode step run one uniform scan per tier instead of
 n_layer heterogeneous bodies.
+
+Beyond the paper's 2-group split, `allocate_zigzag` maps per-layer
+sensitivity onto ``n_tiers`` budget levels (ZigZagKV, arXiv:2412.09036,
+realized as rank-quantile tiers with exact bucket-unit conservation);
+`uniform_plan` and `allocate` are the 1-tier / 2-tier special cases of the
+same `BudgetPlan` record.
 """
 from __future__ import annotations
 
@@ -31,15 +35,69 @@ from repro.core.kmeans import kmeans_1d
 
 @dataclasses.dataclass(frozen=True)
 class BudgetPlan:
-    """Static description of a layer-wise KV budget allocation."""
+    """Static description of a layer-wise KV budget allocation.
+
+    A plan is a list of budget *tiers*: ``tier_budgets[t]`` slots for every
+    layer ``l`` with ``tier_of[l] == t``.  Tier ids are ordered by budget —
+    tier 0 is the largest (most sensitive layers), the last tier the most
+    squeezed.  ``uniform_plan`` is the 1-tier case, the paper's Algorithm 1
+    (`allocate`) the 2-tier case, `allocate_zigzag` the N-tier case.
+
+    ``slack`` is the budget the bucket quantization could not place:
+    ``total + slack == n_layers * b_init`` holds exactly (slack may be
+    negative when the ``min_budget`` floor forces an overshoot).
+    """
     n_layers: int
     b_init: int                 # uniform per-layer budget before reallocation
     p: float
-    group: tuple                # per-layer group id (0/1/2), 2 = least important
-    is_small: tuple             # per-layer bool: True -> squeezed budget
-    b_small: int                # slots for squeezed layers
-    b_big: int                  # slots for boosted layers
-    centers: tuple              # kmeans centers (diagnostics)
+    group: tuple                # per-layer diagnostic label (kmeans id / tier)
+    tier_of: tuple              # per-layer tier id; tier 0 = biggest budget
+    tier_budgets: tuple         # per-tier slot counts, non-increasing
+    centers: tuple              # kmeans centers / tier means (diagnostics)
+    slack: int = 0              # n_layers*b_init - total (quantization slack)
+
+    # ---- N-tier accessors -------------------------------------------------
+    @property
+    def n_tiers(self) -> int:
+        return len(self.tier_budgets)
+
+    @property
+    def tier_counts(self) -> tuple:
+        return tuple(sum(1 for q in self.tier_of if q == t)
+                     for t in range(self.n_tiers))
+
+    def layer_tiers(self):
+        """Per-tier ``(budget, layer_indices)`` preserving model layer order."""
+        return tuple(
+            (int(self.tier_budgets[t]),
+             tuple(l for l, q in enumerate(self.tier_of) if q == t))
+            for t in range(self.n_tiers))
+
+    @property
+    def budgets(self) -> np.ndarray:
+        bt = np.asarray(self.tier_budgets, np.int64)
+        return bt[np.asarray(self.tier_of, np.int64)]
+
+    @property
+    def total(self) -> int:
+        return int(self.budgets.sum())
+
+    # ---- legacy 2-tier views (analysis / launcher prints) -----------------
+    @property
+    def is_small(self) -> tuple:
+        """Per-layer bool: True -> most-squeezed tier (False for 1 tier)."""
+        if self.n_tiers <= 1:
+            return tuple([False] * self.n_layers)
+        last = self.n_tiers - 1
+        return tuple(q == last for q in self.tier_of)
+
+    @property
+    def b_small(self) -> int:
+        return int(self.tier_budgets[-1])
+
+    @property
+    def b_big(self) -> int:
+        return int(self.tier_budgets[0])
 
     @property
     def n_small(self) -> int:
@@ -49,27 +107,23 @@ class BudgetPlan:
     def n_big(self) -> int:
         return self.n_layers - self.n_small
 
-    @property
-    def budgets(self) -> np.ndarray:
-        return np.where(np.asarray(self.is_small), self.b_small, self.b_big)
-
-    @property
-    def total(self) -> int:
-        return int(self.budgets.sum())
-
     def layer_order(self):
         """(big_indices, small_indices) preserving model layer order."""
         small = [i for i, s in enumerate(self.is_small) if s]
         big = [i for i, s in enumerate(self.is_small) if not s]
         return tuple(big), tuple(small)
 
+    def describe(self) -> str:
+        return " + ".join(f"{n}x{b}" for (b, ls), n
+                          in zip(self.layer_tiers(), self.tier_counts))
+
 
 def uniform_plan(n_layers: int, b_init: int) -> BudgetPlan:
     """Baseline: every layer keeps b_init (sequence-wise-only compression)."""
     return BudgetPlan(
         n_layers=n_layers, b_init=b_init, p=1.0,
-        group=tuple([1] * n_layers), is_small=tuple([False] * n_layers),
-        b_small=b_init, b_big=b_init, centers=(0.0,),
+        group=tuple([1] * n_layers), tier_of=tuple([0] * n_layers),
+        tier_budgets=(b_init,), centers=(0.0,), slack=0,
     )
 
 
@@ -81,7 +135,7 @@ def allocate(
     bucket: int = 16,
     min_budget: int = 16,
 ) -> BudgetPlan:
-    """Algorithm 1, lines 2–13: cosine sims -> per-layer budgets."""
+    """Algorithm 1, lines 2–13: cosine sims -> per-layer budgets (2 tiers)."""
     cs = np.asarray(cos_sims, np.float64).reshape(-1)
     n = cs.shape[0]
     assert n >= 1
@@ -95,31 +149,120 @@ def allocate(
         return uniform_plan(n, b_init)
 
     b_small = b_init * p
-    b_big = (n * b_init - n_small * b_small) / n_big
 
     # ---- bucket quantization (static-shape requirement) ----------------------
     b_small_q = max(min_budget, int(b_small // bucket) * bucket)
     freed = n * b_init - n_small * b_small_q
-    b_big_q = max(min_budget, int((freed / n_big) // bucket) * bucket)
+    b_big_q = max(min_budget, (freed // n_big) // bucket * bucket)
 
     return BudgetPlan(
         n_layers=n, b_init=b_init, p=p,
         group=tuple(int(v) for v in labels),
-        is_small=tuple(bool(v) for v in is_small),
-        b_small=int(b_small_q), b_big=int(b_big_q),
+        tier_of=tuple(int(v) for v in is_small),
+        tier_budgets=(int(b_big_q), int(b_small_q)),
         centers=tuple(float(c) for c in centers),
+        slack=n * b_init - (n_small * int(b_small_q) + n_big * int(b_big_q)),
     )
 
 
-def allocate_jax(cos_sims, b_init: int, p: float = 0.35, k: int = 3):
+def allocate_zigzag(
+    cos_sims: Sequence[float],
+    b_init: int,
+    n_tiers: int = 4,
+    bucket: int = 16,
+    min_budget: int = 16,
+) -> BudgetPlan:
+    """N-tier layer-wise budgets (ZigZagKV mode, arXiv:2412.09036).
+
+    Per-layer sensitivity ``u = 1 - cos_sim`` (a layer whose attention barely
+    moves the residual stream tolerates a small cache) is mapped onto
+    ``n_tiers`` rank-quantile tiers, and the total budget
+    ``n_layers * b_init`` is split across layers *proportionally to tier
+    sensitivity* in whole ``bucket`` units:
+
+      1. tiers = rank quantiles of u (tier 0 = most sensitive layers);
+      2. each tier's per-layer budget = ``min_budget`` floor + its
+         sensitivity share of the remaining bucket units, rounded down;
+      3. leftover whole buckets go one-per-layer to the most sensitive
+         layers (which may split a tier into two adjacent budget levels);
+      4. equal-budget tiers merge.
+
+    Conservation is exact in bucket units: ``plan.total + plan.slack ==
+    n_layers * b_init`` with ``slack = (n_layers * b_init) % bucket`` — zero
+    whenever ``bucket`` divides the total, e.g. whenever it divides
+    ``b_init``.  (The one exception: if the ``min_budget`` floor alone
+    exceeds the total, every layer gets the floor and slack goes negative,
+    mirroring `allocate`'s floor overshoot.)
+    """
+    cs = np.asarray(cos_sims, np.float64).reshape(-1)
+    n = cs.shape[0]
+    assert n >= 1
+    assert bucket >= 1 and min_budget >= 1
+    if n_tiers <= 1 or n < n_tiers:
+        return uniform_plan(n, b_init)
+    u = np.clip(1.0 - cs, 0.0, None)          # per-layer sensitivity
+    if float(u.max() - u.min()) < 1e-9 or float(u.sum()) <= 0.0:
+        return uniform_plan(n, b_init)        # flat sensitivity: nothing to move
+
+    m_min = -(-min_budget // bucket)          # floor, in bucket units
+    M = (n * b_init) // bucket                # total bucket units to place
+    slack0 = n * b_init - M * bucket          # sub-bucket remainder
+    if M <= n * m_min:                        # floor dominates: uniform at floor
+        b = m_min * bucket
+        return BudgetPlan(
+            n_layers=n, b_init=b_init, p=b / b_init,
+            group=tuple([0] * n), tier_of=tuple([0] * n),
+            tier_budgets=(b,), centers=(float(cs.mean()),),
+            slack=n * b_init - n * b)
+
+    order = np.argsort(-u, kind="stable")     # most sensitive first
+    bounds = [i * n // n_tiers for i in range(n_tiers + 1)]
+    tier_of = np.zeros(n, np.int64)
+    for t in range(n_tiers):
+        tier_of[order[bounds[t]:bounds[t + 1]]] = t
+
+    # sensitivity-proportional split of the units above the floor
+    W = np.array([u[tier_of == t].sum() for t in range(n_tiers)])
+    cnt = np.array([int((tier_of == t).sum()) for t in range(n_tiers)])
+    E = M - n * m_min
+    share = m_min + E * (W / W.sum()) / cnt   # per-layer units, per tier
+    m_tier = np.floor(share).astype(np.int64)
+    m_tier = np.sort(m_tier)[::-1]            # monotone non-increasing by tier
+
+    # leftover whole buckets: one per layer, most sensitive layers first
+    m_layer = m_tier[tier_of]
+    D = int(M - m_layer.sum())
+    assert D >= 0
+    m_layer[order[:D]] += 1
+
+    # rebuild tiers from the distinct realized budgets (merges equal tiers,
+    # splits the tier the leftover pass straddled)
+    levels = np.unique(m_layer)[::-1]
+    tier_of_f = np.searchsorted(-levels, -m_layer)
+    budgets = tuple(int(v * bucket) for v in levels)
+    centers = tuple(float(cs[tier_of_f == t].mean())
+                    for t in range(len(levels)))
+    plan = BudgetPlan(
+        n_layers=n, b_init=b_init, p=budgets[-1] / b_init,
+        group=tuple(int(v) for v in tier_of_f),
+        tier_of=tuple(int(v) for v in tier_of_f),
+        tier_budgets=budgets, centers=centers, slack=int(slack0))
+    assert plan.total + plan.slack == n * b_init
+    return plan
+
+
+def allocate_jax(cos_sims, b_init: int, p: float = 0.35, k: int = 3,
+                 bucket: int = 1, min_budget: int = 1):
     """jit-able Algorithm 1 (beyond-paper): returns per-layer budgets as a
     traced array so allocation can fuse into the prefill graph — useful when
     budgets feed *data* (masking/priorities) rather than static shapes.
 
-    Returns (budgets [n] float32, is_small [n] bool).  The static-shape
+    Returns (budgets [n] int32, is_small [n] bool).  The static-shape
     engine still uses the host `allocate` (shapes must be concrete); this
     path powers on-device telemetry and the property tests that pin the two
-    implementations together.
+    implementations together.  Bucket quantization and the ``min_budget``
+    floor mirror the host arithmetic exactly, so ``budgets`` equals
+    ``allocate(...).budgets`` for any (b_init, p, bucket, min_budget).
     """
     import jax.numpy as jnp
 
@@ -129,23 +272,28 @@ def allocate_jax(cos_sims, b_init: int, p: float = 0.35, k: int = 3):
     n = cs.shape[0]
     labels, _ = kmeans_1d_jax(cs, k=k)
     is_small = labels == (k - 1)
-    n_small = is_small.sum()
-    n_big = n - n_small
-    b_small = b_init * p
-    b_big = jnp.where(n_big > 0,
-                      (n * b_init - n_small * b_small) / jnp.maximum(n_big, 1),
-                      b_init)
-    degenerate = (n_small == 0) | (n_big == 0)
-    budgets = jnp.where(degenerate, jnp.full((n,), float(b_init)),
-                        jnp.where(is_small, b_small, b_big))
+    n_small = is_small.sum().astype(jnp.int32)
+    n_big = jnp.int32(n) - n_small
+    degenerate = (n_small == 0) | (n_big == 0) | (p >= 1.0) | (n < k)
+
+    # host parity: b_small = b_init * p quantized down to a bucket multiple,
+    # floored at min_budget; freed tokens to the big tier, same quantization
+    b_small_q = jnp.maximum(
+        jnp.int32(min_budget),
+        jnp.floor(jnp.float32(b_init * p) / bucket).astype(jnp.int32) * bucket)
+    freed = jnp.int32(n * b_init) - n_small * b_small_q
+    b_big_q = jnp.maximum(
+        jnp.int32(min_budget),
+        (freed // jnp.maximum(n_big, 1)) // bucket * bucket)
+    budgets = jnp.where(degenerate, jnp.int32(b_init),
+                        jnp.where(is_small, b_small_q, b_big_q))
     return budgets, is_small & ~degenerate
 
 
 def plan_cache_bytes(plan: BudgetPlan, batch: int, kv_heads: int, head_dim: int,
                      bytes_per_el: int = 2) -> int:
     """Physical KV arena size implied by a plan (both K and V)."""
-    slots = plan.n_small * plan.b_small + plan.n_big * plan.b_big
-    return 2 * slots * batch * kv_heads * head_dim * bytes_per_el
+    return 2 * plan.total * batch * kv_heads * head_dim * bytes_per_el
 
 
 # --------------------------------------------------------------------------- #
@@ -164,10 +312,10 @@ def page_quota(budget: int, page_size: int) -> int:
 
 def plan_page_quota(plan: BudgetPlan, page_size: int) -> int:
     """Worst-case pages ONE row needs across all layers of a plan — the
-    paged reading of Algorithm 1's output: squeezed (G3) layers hold
-    ``page_quota(b_small)`` pages, boosted layers ``page_quota(b_big)``."""
-    return (plan.n_small * page_quota(plan.b_small, page_size)
-            + plan.n_big * page_quota(plan.b_big, page_size))
+    paged reading of the allocator's output: each tier's layers hold
+    ``page_quota(tier_budget)`` pages."""
+    return sum(len(layers) * page_quota(b, page_size)
+               for b, layers in plan.layer_tiers())
 
 
 def plan_pool_pages(plan: BudgetPlan, batch: int, page_size: int,

@@ -13,7 +13,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policies import PolicyConfig, keep_priority
+from repro.core.policies import (PolicyConfig, keep_priority, key_norms,
+                                 uses_key_norms)
 
 
 class SlotCache(NamedTuple):
@@ -253,7 +254,8 @@ def write_token(
     statistic the Pallas decode kernel produces for free.
     """
     k, v, pos, score = layer_cache
-    pos, score, victim = write_token_meta(pol, pos, score, t, slot_probs)
+    pos, score, victim = write_token_meta(pol, pos, score, t, slot_probs,
+                                          k_new=k_new)
     b_idx = jnp.arange(pos.shape[0])
     k = k.at[b_idx, victim].set(k_new[:, 0])
     v = v.at[b_idx, victim].set(v_new[:, 0])
@@ -266,6 +268,7 @@ def write_token_meta(
     score: jnp.ndarray,        # [B, S]
     t: jnp.ndarray,            # [B]
     slot_probs: jnp.ndarray,   # [B, S+1]
+    k_new: jnp.ndarray = None,  # [B, 1, Hkv, hd] (l2_norm slot score)
 ):
     """The metadata half of `write_token`: score fold, victim selection,
     pos/score update.  Returns ``(pos, score, victim [B])``.
@@ -278,11 +281,20 @@ def write_token_meta(
     victim selection in one function is what makes paged and contiguous
     decode bit-identical: same pos/score stream -> same victims -> same
     arena contents, wherever the bytes live.
+
+    Under `l2_norm` the score channel holds the slot's static ||K||_2:
+    nothing accumulates (the H2O fold is skipped entirely) and the new
+    token's score is its own key norm.
     """
-    score = score + slot_probs[:, :-1]
+    if uses_key_norms(pol):
+        assert k_new is not None, "l2_norm needs k_new for the slot score"
+        new_score = key_norms(k_new[:, 0])                    # [B]
+    else:
+        score = score + slot_probs[:, :-1]
+        new_score = slot_probs[:, -1]
     pri = keep_priority(pol, pos, score, t, pos.shape[-1])    # [B, S]
     victim = jnp.argmin(pri, axis=-1)                         # [B]
     b_idx = jnp.arange(pos.shape[0])
     pos = pos.at[b_idx, victim].set(t.astype(jnp.int32))
-    score = score.at[b_idx, victim].set(slot_probs[:, -1])
+    score = score.at[b_idx, victim].set(new_score)
     return pos, score, victim

@@ -15,6 +15,13 @@ reduce to one mechanism over a fixed slot arena:
     h2o            : priority = accumulated attention score (kv-head mean),
                      with the most recent `recent_frac * budget` tokens
                      protected (H2O's local statistics window)
+    l2_norm        : priority = -||K_slot||_2 (arXiv:2406.11430 — low key
+                     norm correlates with high attention mass), same recency
+                     window as h2o.  Needs NO attention-score accumulation:
+                     the score channel stores the static key norm, so the
+                     H2O colsum plumbing is bypassed in decode and
+                     chunked-prefill staging, and the policy is layout- and
+                     prefix-cache-independent.
 
 Empty slots carry priority -INF so they are always filled first.  This is the
 static-shape equivalent of the paper's "if len(K) > b: evict" loop — the
@@ -35,7 +42,35 @@ H2O = "h2o"
 # of StreamingLLM's and H2O's protected sets (the paper combines its layer
 # dimension with ONE sequence policy at a time; nothing prevents composing)
 SINK_H2O = "sink_h2o"
-POLICIES = (SLIDING_WINDOW, STREAMING_LLM, H2O, SINK_H2O)
+# beyond-paper: key-L2-norm importance (arXiv:2406.11430) — no score
+# accumulation, so it composes with every admission layout and the prefix
+# cache (the score channel carries the slot's static ||K||_2 instead)
+L2_NORM = "l2_norm"
+POLICIES = (SLIDING_WINDOW, STREAMING_LLM, H2O, SINK_H2O, L2_NORM)
+
+# policies whose score channel accumulates attention mass across steps; the
+# rest leave the colsum plumbing disabled (l2_norm repurposes the channel)
+SCORE_ACCUMULATING = (H2O, SINK_H2O)
+
+
+def accumulates_scores(pol: "PolicyConfig") -> bool:
+    """True iff the policy's score channel integrates attention mass."""
+    return pol.name in SCORE_ACCUMULATING
+
+
+def uses_key_norms(pol: "PolicyConfig") -> bool:
+    """True iff the policy's score channel holds per-slot key L2 norms."""
+    return pol.name == L2_NORM
+
+
+def key_norms(k: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot key L2 norm over (kv_heads, head_dim): [..., S, H, d] -> [..., S].
+
+    Computed in float32 regardless of cache dtype so priorities compare
+    stably, and identically for every admission layout (the norm depends
+    only on the cached K values — never on which queries attended them)."""
+    kf = k.astype(jnp.float32)
+    return jnp.sqrt((kf * kf).sum(axis=(-2, -1)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +107,12 @@ def keep_priority(
         recent_w = max(int(pol.recent_frac * budget), 1)
         protected = (pos > (tb - recent_w)) | (pos < pol.n_sink)
         pri = score.astype(jnp.float32) + BIG * protected
+    elif pol.name == L2_NORM:
+        # score holds ||K_slot||_2 — LOW norm = important (keep), so the
+        # priority is the negated norm, recency window protected like h2o
+        recent_w = max(int(pol.recent_frac * budget), 1)
+        protected = pos > (tb - recent_w)
+        pri = -score.astype(jnp.float32) + BIG * protected
     else:
         raise ValueError(pol.name)
     return jnp.where(empty, -BIG, pri)

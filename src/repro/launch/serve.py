@@ -83,8 +83,7 @@ def _run_oneshot(params, cfg, ecfg, args):
         r = eng.generate(tokens=prompt, seed=args.seed)
     print(f"mode={args.mode} policy={args.policy}")
     if cfg.has_attention:
-        print(f"plan: {r.plan.n_big}x{r.plan.b_big} + "
-              f"{r.plan.n_small}x{r.plan.b_small} slots "
+        print(f"plan: {r.plan.describe()} "
               f"(b_init={r.plan.b_init}, p={r.plan.p})")
         print(f"layer cosine sims: {np.round(r.cos_sims, 3)}")
     print(f"prefill {r.prefill_seconds*1e3:.1f}ms | allocate "
@@ -177,8 +176,7 @@ def _run_continuous(params, cfg, ecfg, args):
           f"concurrency={args.max_concurrency}")
     cap = sched.capability
     if cap.budgeted and plan is not None:  # calibrated on the first request
-        print(f"plan: {plan.n_big}x{plan.b_big} + "
-              f"{plan.n_small}x{plan.b_small} slots per row")
+        print(f"plan: {plan.describe()} slots per row")
     if cap.n_recurrent_layers:
         act_bytes = np.dtype(cfg.dtype).itemsize    # match state_bytes below
         print(f"fixed recurrent tier: {cap.n_recurrent_layers} layer(s), "
@@ -233,7 +231,11 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--mode", default="squeeze",
-                    choices=["full", "uniform", "squeeze"])
+                    choices=["full", "uniform", "squeeze", "zigzag"])
+    ap.add_argument("--n-tiers", type=int, default=4,
+                    help="zigzag mode: requested budget levels (the realized "
+                         "plan merges tiers whose quantized budgets "
+                         "coincide)")
     ap.add_argument("--policy", default="sliding_window",
                     choices=list(POLICIES))
     ap.add_argument("--batching", default="oneshot",
@@ -306,7 +308,8 @@ def main():
 
     ecfg = EngineConfig(
         mode=args.mode, policy=PolicyConfig(args.policy),
-        budget_frac=args.budget_frac, p=args.p, max_new_tokens=args.max_new,
+        budget_frac=args.budget_frac, p=args.p, n_tiers=args.n_tiers,
+        max_new_tokens=args.max_new,
         bucket=16 if not args.reduced else 4,
         min_budget=16 if not args.reduced else 4,
         sampler=SamplerConfig(temperature=args.temperature),

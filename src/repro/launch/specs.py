@@ -179,7 +179,8 @@ def dryrun_plan(cfg: ModelConfig, seq_len: int, kv_mode: str) -> BudgetPlan:
     return BudgetPlan(
         n_layers=n_attn, b_init=b_init, p=p,
         group=tuple(2 if s else 1 for s in is_small),
-        is_small=tuple(is_small), b_small=b_small, b_big=b_big,
+        tier_of=tuple(int(s) for s in is_small),
+        tier_budgets=(b_big, b_small),
         centers=(0.3, 0.6, 0.95))
 
 
@@ -196,8 +197,6 @@ def decode_state_specs(cfg: ModelConfig, case: ShapeCase, mesh,
 
     def tier(n_layers, slots):
         n_layers, slots = max(n_layers, 1), max(slots, 16)
-        if n_layers == 0:
-            n_layers, slots = 1, 16
         kd = jnp.dtype(cfg.dtype)
         return SlotCache(
             k=_sds((n_layers, B, slots, cfg.n_kv_heads, cfg.hd), kd, mesh, cspec),
@@ -207,14 +206,14 @@ def decode_state_specs(cfg: ModelConfig, case: ShapeCase, mesh,
         )
 
     if cfg.is_ssm_only:
-        big = small = ()
-        gis, tix = (), ()
+        tiers = ()
+        tof, tix = (), ()
     else:
-        big = tier(plan.n_big, plan.b_big)
-        small = tier(plan.n_small, plan.b_small) if plan.n_small else tier(1, 16)
-        gis_c, tix_c = make_tier_indices(plan.is_small)
+        tiers = tuple(tier(len(layers), budget)
+                      for budget, layers in plan.layer_tiers())
+        tof_c, tix_c = make_tier_indices(plan.tier_of)
         rep = P(None)
-        gis = _sds(gis_c.shape, jnp.int32, mesh, rep)
+        tof = _sds(tof_c.shape, jnp.int32, mesh, rep)
         tix = _sds(tix_c.shape, jnp.int32, mesh, rep)
 
     if cfg.is_ssm_only or cfg.is_hybrid:
@@ -231,7 +230,7 @@ def decode_state_specs(cfg: ModelConfig, case: ShapeCase, mesh,
 
     t = _sds((B,), jnp.int32, mesh, P(b_ax) if B > 1 else P(None))
     token = _sds((B,), jnp.int32, mesh, P(b_ax) if B > 1 else P(None))
-    state = DecodeState(big, small, gis, tix, ssm, conv, t)
+    state = DecodeState(tiers, tof, tix, ssm, conv, t)
     return state, token
 
 

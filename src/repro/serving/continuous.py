@@ -5,9 +5,11 @@ every request in a wave pays ``max(max_new)`` decode steps and pad rows burn
 compute.  This module is the token-level alternative (DESIGN.md §5):
 
   * ONE persistent `DecodeState` holds `max_concurrency` request rows across
-    the two SqueezeAttention budget tiers; tier sizes are fixed once (from
-    the engine config, plus Algorithm-1 calibration on the first admitted
-    request in squeeze mode), so the decode step compiles exactly once.
+    the SqueezeAttention budget tiers (two in "squeeze" mode, up to
+    `n_tiers` in "zigzag" mode, one in "uniform"); tier sizes are fixed
+    once (from the engine config, plus calibration on the first admitted
+    request in squeeze/zigzag mode), so the decode step compiles exactly
+    once.
   * **Admission**: queued arrivals are prefilled *together* (prompts
     bucketed to one shape, the admission batch padded to a power of two so
     burst sizes reuse executables), then one fused admit executable per
@@ -79,7 +81,8 @@ from repro.core.paging import (KVPool, PagePool, audit_pool_accounting,
                                clear_tier_row, empty_pool, empty_paged_tier,
                                insert_tier_rows, pages_for, pages_needed,
                                scatter_rows_to_pages)
-from repro.core.policies import H2O, SINK_H2O, keep_priority
+from repro.core.policies import (H2O, SINK_H2O, keep_priority, key_norms,
+                                 uses_key_norms)
 from repro.models.frontend import STUB_FRONTENDS
 from repro.models.ssm import empty_decode_state
 from repro.models.transformer import n_attn_layers
@@ -350,10 +353,11 @@ class ContinuousEngine:
                     "the match point")
             if ecfg.policy.name in (H2O, SINK_H2O):
                 raise ValueError(
-                    f"prefix_cache supports position-based policies only "
+                    f"prefix_cache supports non-accumulating policies only "
                     f"(a reused prefix is never re-prefilled, so "
                     f"{ecfg.policy.name!r} column sums for it would be "
-                    f"partial); use sliding_window or streaming_llm")
+                    f"partial); use sliding_window, streaming_llm or "
+                    f"l2_norm")
         if ccfg.chunked_prefill:
             cl = ccfg.resolved_chunk_len()
             if cl <= 0 or cl % ccfg.prompt_bucket != 0:
@@ -551,13 +555,10 @@ class ContinuousEngine:
             dec = state.dec
             upd = {"active": dec.active.at[row].set(False)}
             if has_attn:
-                if paged:    # metadata-only: drop the page table, never touch
-                    # pool contents (the host frees the page ids separately)
-                    upd["big"] = clear_tier_row(dec.big, row)
-                    upd["small"] = clear_tier_row(dec.small, row)
-                else:
-                    upd["big"] = clear_row(dec.big, row)
-                    upd["small"] = clear_row(dec.small, row)
+                # paged: metadata-only — drop the page table, never touch
+                # pool contents (the host frees the page ids separately)
+                fn = clear_tier_row if paged else clear_row
+                upd["tiers"] = tuple(fn(tr, row) for tr in dec.tiers)
             if has_rec:
                 upd["ssm_state"] = clear_state_row(dec.ssm_state, row)
                 upd["conv_state"] = clear_state_row(dec.conv_state, row)
@@ -687,12 +688,13 @@ class ContinuousEngine:
         first-token sampling and the drop-sentinel `insert_rows` scatter of
         pre-built row-shaped tier arenas into the persistent state.
 
-        Paged mode receives `tbls` — host-allocated ``([Lt, NB, npp_big],
-        [Lt, NB, npp_small])`` page tables (drop sentinel ``pool.n_pages``
-        on pad rows and released tail entries) — and splits the insert:
-        pos/score metadata scatter into the tier rows while the K/V slots
-        chunk-scatter into the global pool at those pages, both with traced
-        indices (same zero-retrace contract as `insert_rows`)."""
+        Paged mode receives `tbls` — one host-allocated ``[Lt, NB, npp]``
+        page table per tier, ordered like ``plan.layer_tiers()`` (drop
+        sentinel ``pool.n_pages`` on pad rows and released tail entries) —
+        and splits the insert: pos/score metadata scatter into the tier
+        rows while the K/V slots chunk-scatter into the global pool at
+        those pages, both with traced indices (same zero-retrace contract
+        as `insert_rows`)."""
         sc, eos = self.ecfg.sampler, self.ecfg.eos_token
         token0 = sample(last_logits, akey, sc)               # [NB]
         act0 = rem0 > 0
@@ -704,23 +706,17 @@ class ContinuousEngine:
             "active": dec.active.at[rows].set(act0, mode="drop"),
         }
         if self._has_attn and self._paged:
-            big_tbl, small_tbl = tbls
             sent = self._pool.sentinel
-            upd["big"] = insert_tier_rows(dec.big, rs.big, rows, big_tbl,
-                                          sent)
-            upd["small"] = insert_tier_rows(dec.small, rs.small, rows,
-                                            small_tbl, sent)
             pool = dec.kv_pool
-            if self.plan.n_big:
-                pool = scatter_rows_to_pages(pool, rs.big.k, rs.big.v,
-                                             big_tbl)
-            if self.plan.n_small:
-                pool = scatter_rows_to_pages(pool, rs.small.k, rs.small.v,
-                                             small_tbl)
+            new_tiers = []
+            for tr, rt, tbl in zip(dec.tiers, rs.tiers, tbls):
+                new_tiers.append(insert_tier_rows(tr, rt, rows, tbl, sent))
+                pool = scatter_rows_to_pages(pool, rt.k, rt.v, tbl)
+            upd["tiers"] = tuple(new_tiers)
             upd["kv_pool"] = pool
         elif self._has_attn:
-            upd["big"] = insert_rows(dec.big, rs.big, rows)
-            upd["small"] = insert_rows(dec.small, rs.small, rows)
+            upd["tiers"] = tuple(insert_rows(tr, rt, rows)
+                                 for tr, rt in zip(dec.tiers, rs.tiers))
         if self._has_rec:    # fixed-cost tier: whole-row state scatter
             upd["ssm_state"] = insert_state_rows(
                 dec.ssm_state, rs.ssm_state, rows)
@@ -749,17 +745,10 @@ class ContinuousEngine:
         is staged and padded with empty slots, and
         ``admit_kv_copy_elems`` counts it.
         """
-        cfg, pol, plan = self.cfg, self.ecfg.policy, self.plan
-        big_idx, small_idx = plan.layer_order()
+        pol, plan = self.ecfg.policy, self.plan
         Ppack = kp.shape[2]
 
         def tier(idx, budget):
-            if not idx:    # empty tier: 1 dummy arena the cond never touches
-                z = jnp.zeros((1, NR, 16, cfg.n_kv_heads, cfg.hd),
-                              jnp.dtype(cfg.dtype))
-                return SlotCache(k=z, v=z,
-                                 pos=jnp.full((1, NR, 16), -1, jnp.int32),
-                                 score=jnp.zeros((1, NR, 16), jnp.float32))
             sel = jnp.asarray(idx, jnp.int32)
             pos_t = jnp.take(cpos, sel, axis=0)
             sc_t = jnp.take(scores, sel, axis=0)
@@ -785,7 +774,8 @@ class ContinuousEngine:
                                     start, Pout, 0)
             return pad_cache(SlotCache(k, v, pos_t, sc_t), budget)
 
-        return tier(big_idx, plan.b_big), tier(small_idx, plan.b_small)
+        return tuple(tier(idx, budget)
+                     for budget, idx in plan.layer_tiers())
 
     def _padmit_jit(self, R: int, Ppack: int, K: int, NR: int, Pout: int):
         """Compiled unpack+admit for one packed-layout shape, with the
@@ -806,33 +796,39 @@ class ContinuousEngine:
                        seg_of, t_req, slot_len, rem0, akey, tbls):
                 last = ppre.seg_logits[row_idx, seg_of]          # [NR, V]
                 t32 = t_req.astype(jnp.int32)
-                big = small = is_small = tier_index = ()
+                tiers = tier_of = tier_index = ()
                 if has_attn:
                     cpos = gather_row_segments(ppre.cache_pos, row_idx,
                                                start, Pout, -1)
-                    raw = gather_row_segments(ppre.colsums, row_idx, start,
-                                              Pout, 0.0)
                     # a request's slice may extend past its own slot into a
                     # neighbouring segment (Pout is the burst-wide max):
                     # those slots must read EMPTY, exactly like the bucketed
                     # path's right padding
                     own = jnp.arange(Pout)[None, :] < slot_len[:, None]
                     cpos = jnp.where(own[None], cpos, -1)
-                    scores = jnp.where(
-                        own[None], raw, 0.0) / jnp.clip(
-                            t_req.astype(jnp.float32)[None, :, None], 1.0)
-                    big, small = self._packed_tiers(
+                    if uses_key_norms(self.ecfg.policy):
+                        # l2_norm: the score channel holds the slots' static
+                        # key norms — no colsum gather, no /t normalization
+                        nrm = gather_row_segments(key_norms(ppre.k), row_idx,
+                                                  start, Pout, 0.0)
+                        scores = jnp.where(own[None], nrm, 0.0)
+                    else:
+                        raw = gather_row_segments(ppre.colsums, row_idx,
+                                                  start, Pout, 0.0)
+                        scores = jnp.where(
+                            own[None], raw, 0.0) / jnp.clip(
+                                t_req.astype(jnp.float32)[None, :, None], 1.0)
+                    tiers = self._packed_tiers(
                         ppre.k, ppre.v, cpos, scores, row_idx, start, t32,
                         Pout, NR)
-                    is_small, tier_index = make_tier_indices(
-                        self.plan.is_small)
+                    tier_of, tier_index = make_tier_indices(
+                        self.plan.tier_of)
                 if has_rec:      # snapshots: one state per packed segment
                     st, cv = ppre.ssm_state
                     ssm, conv = st[:, row_idx, seg_of], cv[:, row_idx, seg_of]
                 else:
                     ssm = conv = ()
-                rs = DecodeState(big, small, is_small, tier_index,
-                                 ssm, conv, t32)
+                rs = DecodeState(tiers, tier_of, tier_index, ssm, conv, t32)
                 return self._apply_rows(state, rows, rs, last, rem0, akey,
                                         tbls)
 
@@ -876,14 +872,24 @@ class ContinuousEngine:
                     cpos = jax.lax.dynamic_update_slice(
                         cpos, out.pos_row, (0, start))
                     Cs = csc.shape[-1]
-                    # the chunk's colsums cover [staged | chunk] keys: the
-                    # staged part ACCUMULATES (later queries add mass to
-                    # earlier keys, the H2O invariant), the chunk's own
-                    # keys are fresh — write them at their offset (their
-                    # staged-part contribution is exactly 0: pos=-1 masked)
-                    csc = csc + out.colsums[..., :Cs]
-                    csc = jax.lax.dynamic_update_slice(
-                        csc, out.colsums[..., Cs:], (0, 0, start))
+                    if uses_key_norms(self.ecfg.policy):
+                        # l2_norm: the score channel holds static key norms
+                        # — write the chunk's norms at their offset, never
+                        # accumulate (the colsum plumbing is bypassed;
+                        # build_state recomputes norms from the staged K at
+                        # the final chunk either way)
+                        csc = jax.lax.dynamic_update_slice(
+                            csc, key_norms(out.k), (0, 0, start))
+                    else:
+                        # the chunk's colsums cover [staged | chunk] keys:
+                        # the staged part ACCUMULATES (later queries add
+                        # mass to earlier keys, the H2O invariant), the
+                        # chunk's own keys are fresh — write them at their
+                        # offset (their staged-part contribution is exactly
+                        # 0: pos=-1 masked)
+                        csc = csc + out.colsums[..., :Cs]
+                        csc = jax.lax.dynamic_update_slice(
+                            csc, out.colsums[..., Cs:], (0, 0, start))
                 if has_rec:
                     cssm, cconv = out.ssm_state
                 return out, state._replace(
@@ -898,8 +904,11 @@ class ContinuousEngine:
                     if has_attn:
                         La, _, Cs = csc.shape
                         cache_pos = jnp.broadcast_to(cpos[None], (La, 1, Cs))
-                        scores = csc / jnp.clip(
-                            t32.astype(jnp.float32)[None, :, None], 1.0)
+                        # l2_norm staging already holds norms (no /t);
+                        # accumulating policies normalize by prompt length
+                        scores = csc if uses_key_norms(self.ecfg.policy) \
+                            else csc / jnp.clip(
+                                t32.astype(jnp.float32)[None, :, None], 1.0)
                         pk, pv = ck, cv
                     else:
                         pk = pv = cache_pos = scores = None
@@ -961,27 +970,17 @@ class ContinuousEngine:
         E = self.ccfg.sync_every
         dtype = jnp.dtype(cfg.dtype)
 
-        def tier(n_layers, budget):
-            if n_layers == 0:    # mirror Engine's dummy arena for empty tiers
-                return empty_cache(1, B, 16, cfg.n_kv_heads, cfg.hd, dtype)
-            return empty_cache(n_layers, B, budget, cfg.n_kv_heads, cfg.hd,
-                               dtype)
-
         kv_pool = ()
         if self._has_attn:
-            is_small, tier_index = make_tier_indices(plan.is_small)
+            # plans never produce empty tiers (uniform collapses to one tier,
+            # allocate/zigzag merge away empty sides), so every arena below
+            # holds at least one layer — no dummy tiers needed
+            tier_of, tier_index = make_tier_indices(plan.tier_of)
             if self._paged:
                 psize = self.ccfg.page_size
-
-                def ptier(n_layers, budget):
-                    # dummy tiers MUST be PagedTier too: the decode step
-                    # dispatches on the carried type, not the plan
-                    if n_layers == 0:
-                        return empty_paged_tier(1, B, 16, psize)
-                    return empty_paged_tier(n_layers, B, budget, psize)
-
-                big = ptier(plan.n_big, plan.b_big)
-                small = ptier(plan.n_small, plan.b_small)
+                tiers = tuple(
+                    empty_paged_tier(len(layers), B, budget, psize)
+                    for budget, layers in plan.layer_tiers())
                 n_pool = plan_pool_pages(plan, B, psize,
                                          prefix_pages=self._prefix_budget(),
                                          overcommit=self.ccfg.overcommit)
@@ -996,18 +995,19 @@ class ContinuousEngine:
                     self._prefix = PrefixCache(self._pool, psize,
                                                n_attn_layers(cfg))
             else:
-                big = tier(plan.n_big, plan.b_big)
-                small = tier(plan.n_small, plan.b_small)
+                tiers = tuple(
+                    empty_cache(len(layers), B, budget, cfg.n_kv_heads,
+                                cfg.hd, dtype)
+                    for budget, layers in plan.layer_tiers())
         else:                     # ssm-only: no KV tiers exist at all
-            is_small = tier_index = big = small = ()
+            tier_of = tier_index = tiers = ()
         if self._has_rec:         # fixed-cost recurrent tier, one row each
             ssm, conv = empty_decode_state(cfg, self.cap.n_recurrent_layers,
                                            B)
         else:
             ssm = conv = ()
         dec = DecodeState(
-            big=big, small=small,
-            group_is_small=is_small, tier_index=tier_index,
+            tiers=tiers, tier_of=tier_of, tier_index=tier_index,
             ssm_state=ssm, conv_state=conv,
             t=jnp.zeros((B,), jnp.int32),
             active=jnp.zeros((B,), bool),
@@ -1062,46 +1062,43 @@ class ContinuousEngine:
                           mn_list: Sequence[int], NB: int):
         """Allocate per-row page tables for one admit batch (paged mode).
 
-        Returns ``(big_tbl, small_tbl)`` as ``[Lt, NB, npp]`` int32 host
-        arrays.  Each row gets `pages_needed(t, budget, max_new)` pages per
-        layer — the tight bound on slots it can EVER fill (decode fills
-        empties in index order, see `core.cache.compact`'s paged contract)
-        — so short requests in large arenas stop paying for the budget
-        ceiling.  Unused tail entries and pad rows carry the pool's drop
-        sentinel: the K/V scatter discards them and the stored table remaps
-        them to the null page.  Allocated ids are recorded per slot and
-        freed at retirement."""
+        Returns one ``[Lt, NB, npp]`` int32 host array per tier, ordered
+        like ``plan.layer_tiers()``.  Each row gets
+        `pages_needed(t, budget, max_new)` pages per layer — the tight
+        bound on slots it can EVER fill (decode fills empties in index
+        order, see `core.cache.compact`'s paged contract) — so short
+        requests in large arenas stop paying for the budget ceiling.
+        Unused tail entries and pad rows carry the pool's drop sentinel:
+        the K/V scatter discards them and the stored table remaps them to
+        the null page.  Allocated ids are recorded per slot and freed at
+        retirement."""
         psize = self.ccfg.page_size
         pool, plan = self._pool, self.plan
         sent = pool.sentinel
 
         def tier_tbl(n_layers, budget):
-            Lt = max(n_layers, 1)
-            npp = pages_for(budget if n_layers else 16, psize)
-            tbl = np.full((Lt, NB, npp), sent, np.int32)
-            if n_layers:
-                for r, (slot, t, mn) in enumerate(
-                        zip(slots, t_list, mn_list)):
-                    need = pages_needed(t, budget, mn, psize)
-                    for lay in range(Lt):
-                        ids = pool.alloc(need)
-                        tbl[lay, r, :need] = ids
-                        self._row_pages[slot].extend(int(i) for i in ids)
+            npp = pages_for(budget, psize)
+            tbl = np.full((n_layers, NB, npp), sent, np.int32)
+            for r, (slot, t, mn) in enumerate(zip(slots, t_list, mn_list)):
+                need = pages_needed(t, budget, mn, psize)
+                for lay in range(n_layers):
+                    ids = pool.alloc(need)
+                    tbl[lay, r, :need] = ids
+                    self._row_pages[slot].extend(int(i) for i in ids)
             return tbl
 
-        return (tier_tbl(plan.n_big, plan.b_big),
-                tier_tbl(plan.n_small, plan.b_small))
+        return tuple(tier_tbl(len(layers), budget)
+                     for budget, layers in plan.layer_tiers())
 
     # ------------------------------------------------- pool-pressure ladder
     def req_pages(self, prompt_len: int, max_new: int) -> int:
         """Pages ONE request will allocate at admission, across every
-        attention layer of both tiers (the host twin of
+        attention layer of every tier (the host twin of
         `_alloc_row_tables`'s per-layer `pages_needed` calls)."""
         plan, psize = self.plan, self.ccfg.page_size
         mn = min(max_new, self.ccfg.max_new_cap)
-        return (plan.n_big * pages_needed(prompt_len, plan.b_big, mn, psize)
-                + plan.n_small * pages_needed(prompt_len, plan.b_small, mn,
-                                              psize))
+        return sum(len(layers) * pages_needed(prompt_len, budget, mn, psize)
+                   for budget, layers in plan.layer_tiers())
 
     def admissible_prefix(self, reqs: Sequence[Tuple[np.ndarray, int]]
                           ) -> int:
@@ -1202,8 +1199,7 @@ class ContinuousEngine:
                                   for a in extra_owned]
         tbls = ()
         if deep and self._has_attn:
-            tbls = [np.asarray(self.state.dec.big.tbl),
-                    np.asarray(self.state.dec.small.tbl)]
+            tbls = [np.asarray(tr.tbl) for tr in self.state.dec.tiers]
         audit_pool_accounting(self._pool, owners, tbls)
 
     def admit(self, prompt: np.ndarray, max_new: int) -> int:
@@ -1613,10 +1609,9 @@ class ContinuousEngine:
             # fallback of `_packed_tiers`; mirror its shapes host-side so
             # the bench can assert the direct scatter stayed copy-free
             per = 2 * NR * Pout * self.cfg.n_kv_heads * self.cfg.hd
-            for n_t, b_t in ((self.plan.n_big, self.plan.b_big),
-                             (self.plan.n_small, self.plan.b_small)):
-                if n_t and b_t > Pout:
-                    self.admit_kv_copy_elems += n_t * per
+            for b_t, layers in self.plan.layer_tiers():
+                if b_t > Pout:
+                    self.admit_kv_copy_elems += len(layers) * per
         tbls = self._alloc_row_tables(
             slots, [int(t) for t in plan.lengths[:n]], max_news,
             NR) if self._paged else ()

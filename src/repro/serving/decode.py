@@ -1,15 +1,16 @@
 """Budget-tiered decode step (one token) for every architecture family.
 
-SqueezeAttention's Algorithm 1 gives every layer one of **two** budgets
-(squeezed `b_small` or boosted `b_big`).  The decode step therefore carries
-two stacked slot arenas and scans the layers *in model order*, selecting the
-layer's arena with `lax.cond` — the compiled HLO contains exactly one
+The allocator gives every layer one of a small number of budgets — the
+paper's 2-tier split (`allocate`), the uniform 1-tier baseline, or
+`allocate_zigzag`'s N tiers.  The decode step therefore carries one stacked
+slot arena PER TIER and scans the layers *in model order*, selecting the
+layer's arena with `lax.switch` — the compiled HLO contains exactly one
 attention body per tier regardless of depth, which keeps 94-layer models
 cheap to compile and lets XLA alias the scan-carried arenas in place.
 
-`group_is_small` / tier index vectors are **data**, so one compiled step
-serves any clustering outcome with the same tier shapes (the engine
-re-compiles only when the quantized budget buckets change).
+`tier_of` / `tier_index` vectors are **data**, so one compiled step serves
+any clustering outcome with the same tier shapes (the engine re-compiles
+only when the quantized budget buckets change).
 """
 from __future__ import annotations
 
@@ -33,9 +34,11 @@ from repro.serving.sampler import sample
 
 class DecodeState(NamedTuple):
     """Carried between decode steps.  Unused fields are () placeholders."""
-    big: SlotCache | PagedTier | tuple    # [n_big, B, b_big, Hkv, hd] arenas
-    small: SlotCache | PagedTier | tuple  # [n_small, B, b_small, ...]
-    group_is_small: jnp.ndarray | tuple   # [n_attn] int32 (0/1) — data
+    # one stacked arena per budget tier, ordered like BudgetPlan.tier_budgets
+    # (tier 0 = biggest budget): SlotCache [n_t, B, b_t, Hkv, hd] each, or
+    # PagedTier under paging.  () = no attention layers (ssm-only).
+    tiers: tuple
+    tier_of: jnp.ndarray | tuple          # [n_attn] int32 tier id — data
     tier_index: jnp.ndarray | tuple       # [n_attn] index within its tier
     ssm_state: jnp.ndarray | tuple        # [n_ssm, B, H, P, N]
     conv_state: jnp.ndarray | tuple       # [n_ssm, B, W-1, C]
@@ -44,22 +47,26 @@ class DecodeState(NamedTuple):
     # row's flag ON DEVICE (no host sync) and its position stops advancing;
     # () = every row live forever (the one-shot generate/wave paths).
     active: jnp.ndarray | tuple = ()
-    # Paged engines (core/paging.py): big/small are PagedTiers (page tables +
+    # Paged engines (core/paging.py): tiers are PagedTiers (page tables +
     # slot metadata) and the KV bytes live here, in ONE global page pool
-    # shared by both tiers and the prefix cache.  () = contiguous arenas.
+    # shared by all tiers and the prefix cache.  () = contiguous arenas.
     kv_pool: KVPool | tuple = ()
 
 
-def make_tier_indices(is_small) -> tuple:
-    """Per-layer (is_small, index-within-tier) as int32 arrays."""
+def make_tier_indices(tier_of) -> tuple:
+    """Per-layer (tier id, index-within-tier) as int32 arrays.
+
+    Accepts any per-layer tier-id sequence (`BudgetPlan.tier_of`; a bool
+    is_small vector still reads as the 2-tier 0=big/1=small labelling)."""
     import numpy as np
-    is_small = np.asarray(is_small, bool)
-    idx = np.zeros(len(is_small), np.int32)
-    nb = ns = 0
-    for i, s in enumerate(is_small):
-        idx[i] = ns if s else nb
-        ns, nb = ns + int(s), nb + int(not s)
-    return jnp.asarray(is_small.astype(np.int32)), jnp.asarray(idx)
+    tids = np.asarray(tier_of).astype(np.int64)
+    idx = np.zeros(len(tids), np.int32)
+    counts: dict = {}
+    for i, q in enumerate(tids):
+        q = int(q)
+        idx[i] = counts.get(q, 0)
+        counts[q] = idx[i] + 1
+    return jnp.asarray(tids.astype(np.int32)), jnp.asarray(idx)
 
 
 def _tier_read(tier: SlotCache, j) -> SlotCache:
@@ -92,24 +99,34 @@ def _attend_tier(bp, cfg, pol, h, t, tier, j, window, use_flash=False):
     return out.out, _tier_write(tier, new_lc, j)
 
 
-def _attn_decode_block(bp, cfg, pol, x, t, big, small, is_small, j, window,
+def _attn_decode_block(bp, cfg, pol, x, t, tiers, tier_id, j, window,
                        use_flash=False):
-    """norm -> tiered cached attention -> residual."""
+    """norm -> tiered cached attention -> residual.
+
+    One `lax.switch` branch per budget tier: branch ``i`` attends layer
+    ``j`` of tier ``i``'s arena and passes the other tiers through — every
+    branch returns the same pytree structure, so the compiled step holds
+    exactly one attention body per tier."""
     h = apply_norm(bp["attn_norm"], x, cfg)
 
-    def on_small(_):
-        o, small2 = _attend_tier(bp, cfg, pol, h, t, small, j, window,
-                                 use_flash)
-        return o, big, small2
+    if len(tiers) == 1:
+        out, t0 = _attend_tier(bp, cfg, pol, h, t, tiers[0], j, window,
+                               use_flash)
+        tiers = (t0,)
+    else:
+        def branch(i):
+            def f(_):
+                o, ti = _attend_tier(bp, cfg, pol, h, t, tiers[i], j, window,
+                                     use_flash)
+                return o, tuple(ti if q == i else tiers[q]
+                                for q in range(len(tiers)))
+            return f
 
-    def on_big(_):
-        o, big2 = _attend_tier(bp, cfg, pol, h, t, big, j, window, use_flash)
-        return o, big2, small
-
-    out, big, small = jax.lax.cond(is_small == 1, on_small, on_big, None)
+        out, tiers = jax.lax.switch(
+            tier_id, [branch(i) for i in range(len(tiers))], None)
     if cfg.use_post_norms:
         out = apply_norm(bp["post_attn_norm"], out, cfg)
-    return x + out, big, small
+    return x + out, tiers
 
 
 def _attend_tier_paged(bp, cfg, pol, h, t, tier: PagedTier, pool: KVPool, j,
@@ -118,7 +135,7 @@ def _attend_tier_paged(bp, cfg, pol, h, t, tier: PagedTier, pool: KVPool, j,
     KV write DEFERRED as a record.
 
     The pool rides the layer scan as a closure constant (read-only there);
-    scattering it inside the `lax.cond` tier branches would fork a
+    scattering it inside the `lax.switch` tier branches would fork a
     pool-sized copy per branch, so each layer instead emits
     ``(k_new, v_new, page, offset)`` as scan outputs and
     `paging.write_decode_records` lands all layers' writes in one batched
@@ -135,7 +152,8 @@ def _attend_tier_paged(bp, cfg, pol, h, t, tier: PagedTier, pool: KVPool, j,
     probs = out.slot_probs.mean(axis=1)          # [B, S+1] kv-head mean
     # same convert-sinking barrier as the contiguous path (§Perf D4)
     k_new, v_new = jax.lax.optimization_barrier((out.k_new, out.v_new))
-    pos2, score2, victim = write_token_meta(pol, pos_j, score_j, t, probs)
+    pos2, score2, victim = write_token_meta(pol, pos_j, score_j, t, probs,
+                                            k_new=k_new)
     psize = pool.page_size
     page = jnp.take_along_axis(tbl_j, (victim // psize)[:, None],
                                axis=1)[:, 0]
@@ -149,26 +167,30 @@ def _attend_tier_paged(bp, cfg, pol, h, t, tier: PagedTier, pool: KVPool, j,
     return out.out, tier2, rec
 
 
-def _attn_decode_block_paged(bp, cfg, pol, x, t, big, small, is_small, j,
+def _attn_decode_block_paged(bp, cfg, pol, x, t, tiers, tier_id, j,
                              window, pool, use_flash=False):
     """`_attn_decode_block` for paged tiers; also returns the layer's
-    deferred KV write record (both cond branches emit the same shapes)."""
+    deferred KV write record (every switch branch emits the same shapes)."""
     h = apply_norm(bp["attn_norm"], x, cfg)
 
-    def on_small(_):
-        o, small2, rec = _attend_tier_paged(bp, cfg, pol, h, t, small, pool,
-                                            j, window, use_flash)
-        return o, big, small2, rec
+    if len(tiers) == 1:
+        out, t0, rec = _attend_tier_paged(bp, cfg, pol, h, t, tiers[0], pool,
+                                          j, window, use_flash)
+        tiers = (t0,)
+    else:
+        def branch(i):
+            def f(_):
+                o, ti, rec = _attend_tier_paged(bp, cfg, pol, h, t, tiers[i],
+                                                pool, j, window, use_flash)
+                return o, tuple(ti if q == i else tiers[q]
+                                for q in range(len(tiers))), rec
+            return f
 
-    def on_big(_):
-        o, big2, rec = _attend_tier_paged(bp, cfg, pol, h, t, big, pool, j,
-                                          window, use_flash)
-        return o, big2, small, rec
-
-    out, big, small, rec = jax.lax.cond(is_small == 1, on_small, on_big, None)
+        out, tiers, rec = jax.lax.switch(
+            tier_id, [branch(i) for i in range(len(tiers))], None)
     if cfg.use_post_norms:
         out = apply_norm(bp["post_attn_norm"], out, cfg)
-    return x + out, big, small, rec
+    return x + out, tiers, rec
 
 
 def _ffn_decode(bp, cfg, x):
@@ -236,15 +258,15 @@ def serve_step(
         sp = params["shared_attn"]
         period = cfg.attn_period
         n_super = cfg.n_layers // period
-        paged = isinstance(state.big, PagedTier)
+        paged = isinstance(state.tiers[0], PagedTier)
         pool = state.kv_pool
         sts = jax.tree.map(
             lambda a: a.reshape((n_super, period) + a.shape[1:]),
             (state.ssm_state, state.conv_state))
 
         def body(carry, inp):
-            x, big, small = carry
-            bps, (st_sb, cv_sb), is_small, j = inp
+            x, tiers = carry
+            bps, (st_sb, cv_sb), tier_id, j = inp
 
             def inner(c, blk):
                 bp, st, cv = blk
@@ -255,23 +277,23 @@ def serve_step(
 
             x, (st2, cv2) = jax.lax.scan(inner, x, (bps, st_sb, cv_sb))
             if paged:
-                x, big, small, rec = _attn_decode_block_paged(
-                    sp, cfg, pol, x, t, big, small, is_small, j,
+                x, tiers, rec = _attn_decode_block_paged(
+                    sp, cfg, pol, x, t, tiers, tier_id, j,
                     attn_lib.GLOBAL_WINDOW, pool, use_flash)
             else:
-                x, big, small = _attn_decode_block(
-                    sp, cfg, pol, x, t, big, small, is_small, j,
+                x, tiers = _attn_decode_block(
+                    sp, cfg, pol, x, t, tiers, tier_id, j,
                     attn_lib.GLOBAL_WINDOW, use_flash)
                 rec = ()
             h2 = apply_norm(sp["mlp_norm"], x, cfg)
             x = x + mlp_lib.apply_mlp(mlp_lib.MlpParams(**sp["mlp"]), h2, cfg)
-            return (x, big, small), ((st2, cv2), rec)
+            return (x, tiers), ((st2, cv2), rec)
 
-        (x, big, small), ((sts2, cvs2), recs) = jax.lax.scan(
-            body, (x, state.big, state.small),
-            (params["layers"], sts, state.group_is_small, state.tier_index))
+        (x, tiers), ((sts2, cvs2), recs) = jax.lax.scan(
+            body, (x, state.tiers),
+            (params["layers"], sts, state.tier_of, state.tier_index))
         flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), (sts2, cvs2))
-        new_state = state._replace(big=big, small=small,
+        new_state = state._replace(tiers=tiers,
                                    ssm_state=flat[0], conv_state=flat[1], t=state.t + inc)
         if paged:
             new_state = new_state._replace(
@@ -279,28 +301,28 @@ def serve_step(
 
     else:
         windows = layer_windows(cfg)
-        paged = isinstance(state.big, PagedTier)
+        paged = isinstance(state.tiers[0], PagedTier)
         pool = state.kv_pool
 
         def body(carry, inp):
-            x, big, small = carry
-            bp, window, is_small, j = inp
+            x, tiers = carry
+            bp, window, tier_id, j = inp
             if paged:
-                x, big, small, rec = _attn_decode_block_paged(
-                    bp, cfg, pol, x, t, big, small, is_small, j, window,
+                x, tiers, rec = _attn_decode_block_paged(
+                    bp, cfg, pol, x, t, tiers, tier_id, j, window,
                     pool, use_flash)
             else:
-                x, big, small = _attn_decode_block(
-                    bp, cfg, pol, x, t, big, small, is_small, j, window,
+                x, tiers = _attn_decode_block(
+                    bp, cfg, pol, x, t, tiers, tier_id, j, window,
                     use_flash)
                 rec = ()
             x = _ffn_decode(bp, cfg, x)
-            return (x, big, small), rec
+            return (x, tiers), rec
 
-        (x, big, small), recs = jax.lax.scan(
-            body, (x, state.big, state.small),
-            (params["layers"], windows, state.group_is_small, state.tier_index))
-        new_state = state._replace(big=big, small=small, t=state.t + inc)
+        (x, tiers), recs = jax.lax.scan(
+            body, (x, state.tiers),
+            (params["layers"], windows, state.tier_of, state.tier_index))
+        new_state = state._replace(tiers=tiers, t=state.t + inc)
         if paged:
             new_state = new_state._replace(
                 kv_pool=write_decode_records(pool, *recs))

@@ -31,10 +31,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.allocation import (BudgetPlan, allocate, recurrent_tier,
-                                   total_state_bytes, uniform_plan)
+from repro.core.allocation import (BudgetPlan, allocate, allocate_zigzag,
+                                   recurrent_tier, total_state_bytes,
+                                   uniform_plan)
 from repro.core.cache import SlotCache, compact, pad_cache, sort_slots
-from repro.core.policies import PolicyConfig
+from repro.core.policies import PolicyConfig, key_norms, uses_key_norms
 from repro.models.config import ModelConfig
 from repro.models.transformer import n_attn_layers
 from repro.serving.decode import (DecodeState, make_tier_indices,
@@ -48,16 +49,18 @@ class EngineConfig:
     """Budget-policy knobs shared by the one-shot `Engine` and the
     continuous engine (field reference in `docs/API.md`)."""
     #: "full" (no eviction) | "uniform" (same budget per layer) |
-    #: "squeeze" (the paper: Algorithm-1 layer-wise reallocation)
+    #: "squeeze" (the paper: Algorithm-1 2-tier reallocation) |
+    #: "zigzag" (N-tier sensitivity-proportional budgets, allocate_zigzag)
     mode: str = "squeeze"
     #: sequence-wise eviction policy (sliding_window / streaming_llm /
-    #: h2o / sink_h2o — `repro.core.policies.POLICIES`)
+    #: h2o / sink_h2o / l2_norm — `repro.core.policies.POLICIES`)
     policy: PolicyConfig = PolicyConfig()
     budget_frac: float = 0.4           # b_init as a fraction of prompt length
     budget_abs: int = 0                # or absolute tokens (overrides frac if >0)
     p: float = 0.35                    # Algorithm-1 squeeze factor
     bucket: int = 16                   # budget quantization (static shapes)
     min_budget: int = 16               # floor per layer (keep sinks + recents)
+    n_tiers: int = 4                   # "zigzag": requested budget levels
     #: default decode length for `Engine.generate`
     max_new_tokens: int = 64
     #: temperature 0 = greedy; one engine-level PRNG stream otherwise
@@ -209,6 +212,11 @@ class Engine:
             return uniform_plan(max(n_attn, 1), b_init)
         if self.ecfg.mode in ("full", "uniform"):
             return uniform_plan(n_attn, b_init)
+        if self.ecfg.mode == "zigzag":
+            return allocate_zigzag(cos_sims, b_init,
+                                   n_tiers=self.ecfg.n_tiers,
+                                   bucket=self.ecfg.bucket,
+                                   min_budget=self.ecfg.min_budget)
         return allocate(cos_sims, b_init, p=self.ecfg.p, bucket=self.ecfg.bucket,
                         min_budget=self.ecfg.min_budget)
 
@@ -230,27 +238,21 @@ class Engine:
         cfg, pol = self.cfg, self.ecfg.policy
         if cfg.is_ssm_only:
             st, cv = pre.ssm_state
-            return DecodeState((), (), (), (), st, cv, pre.t)
+            return DecodeState((), (), (), st, cv, pre.t)
 
-        big_idx, small_idx = plan.layer_order()
-        is_small, tier_index = make_tier_indices(plan.is_small)
+        tier_of, tier_index = make_tier_indices(plan.tier_of)
+        # l2_norm: the score channel carries static key norms — computed
+        # here from the prefill K, never from attention statistics, so every
+        # admission layout (plain / packed / ctx) sources identical scores
+        scores = key_norms(pre.k) if uses_key_norms(pol) else pre.scores
 
         def build_tier(idx, budget):
-            if not idx:    # empty tier: 1 dummy arena the cond never touches
-                B = batch
-                dummy = SlotCache(
-                    k=jnp.zeros((1, B, 16, cfg.n_kv_heads, cfg.hd),
-                                jnp.dtype(cfg.dtype)),
-                    v=jnp.zeros((1, B, 16, cfg.n_kv_heads, cfg.hd),
-                                jnp.dtype(cfg.dtype)),
-                    pos=jnp.full((1, B, 16), -1, jnp.int32),
-                    score=jnp.zeros((1, B, 16), jnp.float32))
-                return dummy
+            assert idx, "plans never produce empty tiers"
             sel = jnp.asarray(idx, jnp.int32)
             k = jnp.take(pre.k, sel, axis=0)
             v = jnp.take(pre.v, sel, axis=0)
             pos = jnp.take(pre.cache_pos, sel, axis=0)
-            score = jnp.take(pre.scores, sel, axis=0)
+            score = jnp.take(scores, sel, axis=0)
             P = pos.shape[-1]
             if budget <= P:
                 tier = compact(pol, k, v, pos, score, budget, pre.t)
@@ -258,13 +260,13 @@ class Engine:
                 tier = pad_cache(SlotCache(k, v, pos, score), budget)
             return sort_slots(tier) if canonical else tier
 
-        big = build_tier(big_idx, plan.b_big)
-        small = build_tier(small_idx, plan.b_small)
+        tiers = tuple(build_tier(idx, budget)
+                      for budget, idx in plan.layer_tiers())
 
         if cfg.is_hybrid:
             st, cv = pre.ssm_state
-            return DecodeState(big, small, is_small, tier_index, st, cv, pre.t)
-        return DecodeState(big, small, is_small, tier_index, (), (), pre.t)
+            return DecodeState(tiers, tier_of, tier_index, st, cv, pre.t)
+        return DecodeState(tiers, tier_of, tier_index, (), (), pre.t)
 
     # --------------------------------------------------------------- generate
     def generate(
@@ -291,7 +293,7 @@ class Engine:
         state = self.build_state(pre, plan, B)
         t2 = time.perf_counter()
 
-        shape_key = (B, P, plan.b_big, plan.b_small, plan.n_big, plan.n_small)
+        shape_key = (B, P) + tuple(plan.tier_budgets) + tuple(plan.tier_counts)
         token = sample(pre.last_logits, jax.random.PRNGKey(seed),
                        self.ecfg.sampler)
         key = jax.random.PRNGKey(seed + 1)
@@ -323,8 +325,7 @@ class Engine:
         jax.block_until_ready(token)
         t3 = time.perf_counter()
 
-        slots = 0 if self.cfg.is_ssm_only else \
-            plan.n_big * plan.b_big + plan.n_small * plan.b_small
+        slots = 0 if self.cfg.is_ssm_only else plan.total
         state_bytes = total_state_bytes(
             plan if self.cfg.has_attention else None,
             recurrent_tier(self.cfg), B, self.cfg.n_kv_heads, self.cfg.hd,

@@ -1,0 +1,114 @@
+"""Policy / allocator conformance suite.
+
+One matrix pins the whole serving stack: every eviction policy x every
+allocation mode (uniform / squeeze / zigzag) x both KV layouts
+(contiguous arenas, paged pool) x both model families (dense, hybrid
+attn+SSM) must
+
+  (a) serve token-identically to solo ``Engine.generate`` runs,
+  (b) conserve the budget total exactly after bucket quantization
+      (``plan.total + plan.slack == n_layers * b_init``), and
+  (c) never retrace a compiled executable across admission, fused
+      decode blocks, retirement and slot recycling.
+
+Identity scope: squeeze/zigzag calibrate the layer grouping from the
+FIRST admitted batch's cosine sims, so the continuous plan only equals
+the solo plan when both paths see the same prefill.  The matrix uses
+identical prompt contents for the calibrated modes (uniform mode keeps
+distinct prompts — its plan is request-independent).
+"""
+import pytest
+
+pytestmark = [pytest.mark.system, pytest.mark.conformance]
+
+import numpy as np
+
+import jax
+
+from repro.core import PolicyConfig
+from repro.core.policies import POLICIES
+from repro.models import ModelConfig, init_params
+from repro.serving import (ContinuousConfig, ContinuousScheduler, Engine,
+                           EngineConfig, pad_prompt)
+
+DENSE = ModelConfig(name="c4", arch_type="dense", n_layers=4, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                    dtype="float32", param_dtype="float32")
+HYBRID = ModelConfig(name="h4", arch_type="hybrid", n_layers=4, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                     ssm_state=8, ssm_expand=2, ssm_head_dim=32, ssm_chunk=8,
+                     attn_period=2, dtype="float32", param_dtype="float32")
+
+MODES = ("uniform", "squeeze", "zigzag")
+LAYOUTS = {"contiguous": 0, "paged": 4}
+
+_PARAMS = {}
+_SOLO_REFS = {}     # (cfg, policy, mode, prompt bytes) -> solo greedy tokens
+
+
+def _params(cfg):
+    if cfg.name not in _PARAMS:
+        _PARAMS[cfg.name] = init_params(jax.random.PRNGKey(0), cfg)
+    return _PARAMS[cfg.name]
+
+
+def _solo_ref(cfg, ecfg, prompt, bucket, mn):
+    """Solo greedy reference, cached across layouts (the paged/contiguous
+    axis must not change tokens, so both compare against ONE solo run)."""
+    key = (cfg.name, ecfg.policy.name, ecfg.mode, prompt.tobytes(), mn)
+    if key not in _SOLO_REFS:
+        solo = Engine(_params(cfg), cfg, ecfg)
+        toks, valid = pad_prompt(prompt, bucket)
+        _SOLO_REFS[key] = solo.generate(
+            tokens=toks, valid=valid, max_new_tokens=mn).tokens[0].tolist()
+    return _SOLO_REFS[key]
+
+
+def _prompts(mode, rng):
+    """Three length-7 prompts; identical contents under calibrated modes
+    so the continuous plan (first-batch cosine sims) matches solo plans."""
+    if mode == "uniform":
+        return [rng.integers(0, 97, (7,)).astype(np.int32) for _ in range(3)]
+    p = rng.integers(0, 97, (7,)).astype(np.int32)
+    return [p.copy() for _ in range(3)]
+
+
+@pytest.mark.parametrize("psize", list(LAYOUTS.values()), ids=list(LAYOUTS))
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("cfg", [DENSE, HYBRID], ids=["dense", "hybrid"])
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_policy_mode_layout_conformance(policy, cfg, mode, psize):
+    params = _params(cfg)
+    ecfg = EngineConfig(mode=mode, policy=PolicyConfig(policy),
+                        budget_abs=12, bucket=4, min_budget=4, n_tiers=2)
+    ccfg = ContinuousConfig(max_concurrency=2, prompt_bucket=8,
+                            max_prompt_len=16, max_new_cap=6, sync_every=2,
+                            page_size=psize)
+    sched = ContinuousScheduler(params, cfg, ecfg, ccfg)
+    rng = np.random.default_rng(0)
+    prompts = _prompts(mode, rng)
+    # three requests on two slots: the third lands on a recycled row
+    rids = [sched.submit(p, max_new=4) for p in prompts]
+    done = {r.rid: r for r in sched.run_until_empty()}
+    assert len(done) == len(rids)
+    core = sched.core
+
+    # (b) exact conservation after bucket quantization, floors respected
+    plan = core.plan
+    assert plan is not None
+    assert plan.total + plan.slack == plan.n_layers * plan.b_init
+    assert (plan.budgets >= min(ecfg.min_budget, plan.b_init)).all()
+    assert sum(len(idx) for _, idx in plan.layer_tiers()) == plan.n_layers
+    if mode == "uniform":
+        assert plan.n_tiers == 1 and plan.slack == 0
+
+    # (c) zero-retrace discipline: one executable per shape family
+    assert all(fn._cache_size() == 1 for fn in core._block_fns.values())
+    assert all(fn._cache_size() == 1 for fn in core._admit_fns.values())
+    assert core._clear_fn._cache_size() == 1
+    assert all(fn._cache_size() == 1 for fn in core._padmit_fns.values())
+
+    # (a) token identity against solo generate on the same padded prompts
+    for rid, p in zip(rids, prompts):
+        ref = _solo_ref(cfg, ecfg, p, ccfg.prompt_bucket, 4)
+        assert done[rid].tokens.tolist() == ref, (policy, mode, psize, rid)

@@ -151,7 +151,7 @@ def test_retired_slot_is_recycled_and_cleared():
     assert sorted(core._free) == list(range(n_slots))      # all recycled
     assert core.n_occupied == 0
     # retired rows were cleared on-device: every slot of every row is empty
-    pos = np.asarray(core.state.dec.big.pos)
+    pos = np.asarray(core.state.dec.tiers[0].pos)
     assert (pos == -1).all()
     assert not np.asarray(core.state.dec.active).any()
 

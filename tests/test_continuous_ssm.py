@@ -86,7 +86,7 @@ def test_recycled_recurrent_row_is_cleared_and_reused():
     # stale state — the decode step must freeze inactive rows)
     assert (np.asarray(core.state.dec.ssm_state) == 0).all()
     assert (np.asarray(core.state.dec.conv_state) == 0).all()
-    assert (np.asarray(core.state.dec.big.pos) == -1).all()
+    assert (np.asarray(core.state.dec.tiers[0].pos) == -1).all()
     # reuse correctness: the second wave of requests (which landed on
     # recycled rows) still matches solo generate
     solo = Engine(params, cfg, ECFG)

@@ -42,7 +42,7 @@ def _per_step_generate(eng: Engine, tokens, valid, max_new, seed=0):
         else np.zeros(0)
     plan = eng.plan_budgets(cos, P, max_new)
     state = eng.build_state(pre, plan, B)
-    shape_key = (B, P, plan.b_big, plan.b_small, plan.n_big, plan.n_small)
+    shape_key = (B, P) + tuple(plan.tier_budgets) + tuple(plan.tier_counts)
     step = eng._step_fn(shape_key)
     token = sample(pre.last_logits, jax.random.PRNGKey(seed),
                    eng.ecfg.sampler)

@@ -8,7 +8,9 @@ import numpy as np
 
 from _hypothesis_compat import given, settings, st
 
-from repro.core.allocation import allocate, uniform_plan
+from repro.core.allocation import (allocate, allocate_zigzag, page_quota,
+                                   plan_page_quota, plan_pool_pages,
+                                   uniform_plan)
 from repro.core.kmeans import kmeans_1d, kmeans_1d_jax
 
 
@@ -73,6 +75,61 @@ def test_uniform_plan():
     plan = uniform_plan(8, 512)
     assert plan.total == 8 * 512
     assert plan.n_small == 0
+    assert plan.n_tiers == 1
+    assert plan.layer_tiers() == ((512, tuple(range(8))),)
+
+
+def test_allocate_is_two_tier_special_case():
+    """`allocate` fills the same N-tier record zigzag does: 2 tiers,
+    exact slack bookkeeping, legacy views consistent with tier fields."""
+    rng = np.random.RandomState(7)
+    cos = np.clip(rng.normal(0.6, 0.25, 12), 0, 1)
+    plan = allocate(cos, 256, p=0.35, bucket=16, min_budget=16)
+    if plan.p == 1.0:
+        return
+    assert plan.n_tiers == 2
+    assert plan.tier_budgets == (plan.b_big, plan.b_small)
+    assert plan.tier_counts == (plan.n_big, plan.n_small)
+    assert plan.total + plan.slack == 12 * 256
+    big, small = plan.layer_order()
+    tiers = plan.layer_tiers()
+    assert tiers[0][1] == big and tiers[1][1] == small
+
+
+def test_zigzag_deterministic_invariants():
+    """Deterministic twin of the zigzag property test (runs without the
+    hypothesis extra): conservation, ordering, merge/split bounds."""
+    for n, b_init, n_tiers, bucket, seed in [
+            (8, 128, 4, 16, 0), (24, 256, 4, 16, 1), (12, 200, 3, 4, 2),
+            (32, 512, 8, 32, 3), (5, 96, 5, 1, 4), (16, 64, 2, 16, 5)]:
+        rng = np.random.RandomState(seed)
+        cos = np.clip(rng.normal(0.6, 0.25, n), 0, 1)
+        plan = allocate_zigzag(cos, b_init, n_tiers=n_tiers, bucket=bucket,
+                               min_budget=bucket)
+        assert plan.total + plan.slack == n * b_init, (n, b_init, n_tiers)
+        assert 0 <= plan.slack < bucket or plan.n_tiers == 1
+        bt = list(plan.tier_budgets)
+        assert bt == sorted(bt, reverse=True) and len(set(bt)) == len(bt)
+        assert all(c > 0 for c in plan.tier_counts)
+        assert sum(plan.tier_counts) == n
+        assert plan.n_tiers <= n_tiers + 1
+        u = np.clip(1.0 - cos, 0.0, None)
+        ordered = plan.budgets[np.argsort(-u, kind="stable")]
+        assert (np.diff(ordered) <= 0).all()
+
+
+def test_zigzag_degenerate_cases():
+    # flat sensitivity / tiny models fall back to the uniform plan
+    assert allocate_zigzag(np.full(8, 0.5), 128).n_tiers == 1
+    assert allocate_zigzag([0.1, 0.9], 128, n_tiers=4).n_tiers == 1
+    assert allocate_zigzag([0.3], 128, n_tiers=1).n_tiers == 1
+    # min_budget floor dominating the total: single tier AT the floor,
+    # negative slack mirrors `allocate`'s floor overshoot
+    plan = allocate_zigzag(np.linspace(0.1, 0.9, 8), 8, n_tiers=4,
+                           bucket=16, min_budget=16)
+    assert plan.n_tiers == 1 and plan.tier_budgets == (16,)
+    assert plan.total + plan.slack == 8 * 8
+    assert plan.slack < 0
 
 
 def test_allocate_p1_is_uniform():
@@ -81,22 +138,99 @@ def test_allocate_p1_is_uniform():
 
 
 @settings(max_examples=60, deadline=None)
-@given(n=st.integers(4, 96), seed=st.integers(0, 200))
-def test_allocate_jax_matches_host(n, seed):
-    """On-device Algorithm 1 == host Algorithm 1 (pre-quantization)."""
+@given(n=st.integers(4, 96), seed=st.integers(0, 200),
+       bucket=st.sampled_from([1, 4, 16, 32]),
+       min_budget=st.sampled_from([1, 16, 64]))
+def test_allocate_jax_matches_host(n, seed, bucket, min_budget):
+    """On-device Algorithm 1 == host Algorithm 1, INCLUDING the bucket
+    quantization and min_budget floor (the in-graph parity contract)."""
     import jax
     from repro.core.allocation import allocate_jax
 
     rng = np.random.RandomState(seed)
     cos = np.clip(rng.normal(0.6, 0.25, n), 0, 1)
     budgets, is_small = jax.jit(
-        lambda c: allocate_jax(c, 1024, p=0.3))(cos)
+        lambda c: allocate_jax(c, 1024, p=0.3, bucket=bucket,
+                               min_budget=min_budget))(cos)
     budgets = np.asarray(budgets)
     is_small = np.asarray(is_small)
-    # conservation (exact, pre-bucketing)
-    assert abs(budgets.sum() - n * 1024) < 1.0
-    host = allocate(cos, 1024, p=0.3, bucket=1, min_budget=1)
+    host = allocate(cos, 1024, p=0.3, bucket=bucket, min_budget=min_budget)
     if host.p == 1.0:          # host degenerated -> jax must too
         assert not is_small.any()
+        assert (budgets == 1024).all()
     else:
         assert (np.asarray(host.is_small) == is_small).all()
+        assert (budgets == host.budgets).all()
+        # host bookkeeping pins the same totals the device arithmetic hit
+        assert int(budgets.sum()) + host.slack == n * 1024
+
+
+@settings(max_examples=150, deadline=None)
+@given(n=st.integers(2, 96), b_init=st.integers(64, 4096),
+       n_tiers=st.integers(2, 8), seed=st.integers(0, 500),
+       bucket=st.sampled_from([1, 4, 16, 32]))
+def test_zigzag_conserves_budget_any_n_tiers(n, b_init, n_tiers, seed,
+                                             bucket):
+    """N-tier invariants for arbitrary n_tiers: exact bucket-unit
+    conservation, non-increasing tier budgets, non-empty tiers, and
+    monotone sensitivity -> budget mapping."""
+    rng = np.random.RandomState(seed)
+    cos = np.clip(rng.normal(0.6, 0.25, n), 0, 1)
+    plan = allocate_zigzag(cos, b_init, n_tiers=n_tiers, bucket=bucket,
+                           min_budget=bucket)
+    assert plan.n_layers == n
+    # conservation is exact modulo the sub-bucket remainder
+    assert plan.total + plan.slack == n * b_init
+    assert 0 <= plan.slack < bucket or plan.n_tiers == 1
+    bt = list(plan.tier_budgets)
+    assert bt == sorted(bt, reverse=True)
+    assert len(set(bt)) == len(bt)            # merged: budgets distinct
+    counts = plan.tier_counts
+    assert all(c > 0 for c in counts)         # no empty tier survives
+    assert sum(counts) == n
+    assert plan.n_tiers <= n_tiers + 1        # leftover pass splits <= 1 tier
+    # more sensitive (lower cos) layers never get a smaller budget
+    budgets = plan.budgets
+    u = np.clip(1.0 - cos, 0.0, None)
+    order = np.argsort(-u, kind="stable")
+    ordered = budgets[order]
+    assert (np.diff(ordered) <= 0).all()
+
+
+@settings(max_examples=100, deadline=None)
+@given(budget=st.integers(1, 4096), psize=st.sampled_from([1, 3, 4, 16, 64]))
+def test_page_quota_bounds(budget, psize):
+    """ceil-division bounds: the quota covers the budget, never by more
+    than one page, and grows monotonically with the budget."""
+    q = page_quota(budget, psize)
+    assert (q - 1) * psize < budget <= q * psize
+    assert page_quota(budget + 1, psize) >= q
+
+
+@settings(max_examples=80, deadline=None)
+@given(n=st.integers(2, 32), b_init=st.integers(32, 1024),
+       n_tiers=st.integers(1, 5), seed=st.integers(0, 100),
+       psize=st.sampled_from([3, 4, 16]), batch=st.integers(1, 16),
+       overcommit=st.floats(0.05, 2.0))
+def test_plan_pool_pages_invariants(n, b_init, n_tiers, seed, psize, batch,
+                                    overcommit):
+    """Pool sizing invariants: the row region scales monotonically with
+    overcommit but never drops below ONE full row quota (liveness floor),
+    and the per-row quota covers every layer's tier budget."""
+    rng = np.random.RandomState(seed)
+    cos = np.clip(rng.normal(0.6, 0.25, n), 0, 1)
+    plan = allocate_zigzag(cos, b_init, n_tiers=n_tiers, bucket=4,
+                           min_budget=4)
+    quota = plan_page_quota(plan, psize)
+    assert quota == sum(page_quota(b, psize) for b in plan.budgets)
+    total = plan_pool_pages(plan, batch, psize, overcommit=overcommit)
+    # liveness floor: 1 null page + at least one full row quota
+    assert total >= 1 + quota
+    # monotone in overcommit and in prefix headroom
+    assert plan_pool_pages(plan, batch, psize,
+                           overcommit=min(2.0, overcommit * 2)) >= total
+    assert plan_pool_pages(plan, batch, psize, prefix_pages=7,
+                           overcommit=overcommit) == total + 7
+    # worst-case sizing covers every row at quota
+    full = plan_pool_pages(plan, batch, psize, overcommit=1.0)
+    assert full >= 1 + batch * quota

@@ -180,7 +180,7 @@ def test_paged_admission_never_retraces_and_recycles_pages():
     assert core.admit_dispatches < core.admitted
     # every slot recycled, every page back in the pool
     assert sorted(core._free) == list(range(3))
-    assert (np.asarray(core.state.dec.big.pos) == -1).all()
+    assert (np.asarray(core.state.dec.tiers[0].pos) == -1).all()
     _assert_pool_drained(core)
 
 
@@ -267,7 +267,7 @@ def test_prefix_cache_gating_errors():
     with pytest.raises(ValueError, match="attention-only"):
         ContinuousEngine(_params(HYBRID), HYBRID, ECFG,
                          _ccfg(page_size=4, prefix_cache=True))
-    with pytest.raises(ValueError, match="position-based"):
+    with pytest.raises(ValueError, match="non-accumulating"):
         ContinuousEngine(params, DENSE,
                          EngineConfig(mode="uniform",
                                       policy=PolicyConfig("h2o"),

@@ -11,7 +11,8 @@ import numpy as np
 from _hypothesis_compat import given, settings, st
 
 from repro.core.cache import SlotCache, compact, pad_cache, write_token
-from repro.core.policies import PolicyConfig, keep_priority
+from repro.core.policies import (BIG, PolicyConfig, accumulates_scores,
+                                 keep_priority, key_norms, uses_key_norms)
 
 
 def _arena(L=1, B=1, P=16, H=2, D=4, scores=None):
@@ -127,6 +128,105 @@ def test_arena_invariants_under_decode(policy, budget, steps, seed):
         if policy == "streaming_llm":
             assert 0 in ps and 1 in ps                      # sinks survive
         t += 1
+
+
+def test_l2_norm_keeps_low_norm_keys_plus_recent():
+    """l2_norm (arXiv:2406.11430): LOW key norm = important.  The score
+    channel holds ||K||_2, so compaction keeps the lowest-norm slots plus
+    the recency window — no attention-score accumulation anywhere."""
+    k, v, pos, sc = _arena(P=16)
+    norms = key_norms(k)                 # [L, B, P], increasing with slot id
+    assert (np.diff(np.asarray(norms[0, 0])) > 0).all()
+    c = compact(PolicyConfig("l2_norm", recent_frac=0.5), k, v, pos, norms,
+                budget=8, t=16)
+    kept = set(np.asarray(c.pos[0, 0]).tolist())
+    assert {0, 1, 2, 3} <= kept          # lowest norms survive
+    assert {13, 14, 15} <= kept          # recency window survives (pos > 11)
+
+
+def test_write_token_l2_norm_scores_are_static_norms():
+    """Decode writes under l2_norm: the victim is the highest-norm
+    unprotected slot, and the incoming slot's score is ITS key norm —
+    `slot_probs` (the H2O colsum plumbing) is ignored entirely."""
+    kc = jnp.stack([jnp.full((2, 2), s) for s in (9.0, 1.0, 2.0, 3.0)])
+    cache = SlotCache(
+        k=kc[None], v=jnp.zeros((1, 4, 2, 2)),
+        pos=jnp.asarray([[0, 1, 2, 3]], jnp.int32),
+        score=key_norms(kc[None]))
+    pol = PolicyConfig("l2_norm", recent_frac=0.25)   # window = 1 slot
+    k_new = jnp.full((1, 1, 2, 2), 0.5)
+    garbage = jnp.full((1, 5), 123.0)    # would corrupt an accumulating path
+    out = write_token(pol, cache, k_new, jnp.ones((1, 1, 2, 2)),
+                      jnp.asarray([4]), garbage)
+    p = np.asarray(out.pos[0]).tolist()
+    assert 0 not in p                    # highest norm, outside the window
+    assert 4 in p
+    new_slot = p.index(4)
+    expect = float(np.asarray(key_norms(k_new[:, 0]))[0])
+    assert np.isclose(np.asarray(out.score[0])[new_slot], expect)
+    # surviving slots kept their STATIC norms (no accumulation happened)
+    for slot, pos_v in enumerate(p):
+        if pos_v in (1, 2, 3):
+            assert np.isclose(np.asarray(out.score[0])[slot],
+                              float(np.asarray(cache.score[0, pos_v])))
+
+
+def test_policy_predicates():
+    assert accumulates_scores(PolicyConfig("h2o"))
+    assert accumulates_scores(PolicyConfig("sink_h2o"))
+    assert not accumulates_scores(PolicyConfig("l2_norm"))
+    assert not accumulates_scores(PolicyConfig("sliding_window"))
+    assert uses_key_norms(PolicyConfig("l2_norm"))
+    assert not uses_key_norms(PolicyConfig("h2o"))
+
+
+def test_keep_priority_empty_slots_always_lose():
+    """Empty slots (pos == -1) read -BIG under EVERY policy, below any
+    real slot's priority — they are always the eviction victim."""
+    pos = jnp.asarray([[-1, 0, 5]], jnp.int32)
+    score = jnp.asarray([[0.0, 100.0, 0.5]])
+    for name in ("sliding_window", "streaming_llm", "h2o", "sink_h2o",
+                 "l2_norm"):
+        pri = np.asarray(keep_priority(PolicyConfig(name), pos, score,
+                                       t=6, budget=3))[0]
+        assert pri[0] == -BIG
+        assert pri[0] < pri[1] and pri[0] < pri[2]
+
+
+def test_keep_priority_budget_one_window_floor():
+    """budget == 1: recent_w floors at 1, so the slot AT the current
+    position stays protected — the window never collapses to zero slots."""
+    pos = jnp.asarray([[3, 4, 5]], jnp.int32)
+    score = jnp.asarray([[2.0, 3.0, 1.0]])
+    for name in ("h2o", "sink_h2o", "l2_norm"):
+        pri = np.asarray(keep_priority(
+            PolicyConfig(name, n_sink=0, recent_frac=0.5), pos, score,
+            t=5, budget=1))[0]
+        assert pri[2] > BIG / 2                  # pos 5 > t-1: protected
+        assert pri[0] < BIG / 2 and pri[1] < BIG / 2
+
+
+def test_keep_priority_t_below_window_protects_everything():
+    """t < recent_w: every occupied slot sits inside the recency window, so
+    no real slot can be evicted before the window fills — only empties."""
+    pos = jnp.asarray([[0, 1, 2, -1]], jnp.int32)
+    score = jnp.asarray([[5.0, 1.0, 3.0, 0.0]])
+    for name in ("h2o", "l2_norm"):
+        pri = np.asarray(keep_priority(
+            PolicyConfig(name, recent_frac=0.5), pos, score,
+            t=3, budget=16))[0]                  # recent_w = 8 > t
+        assert (pri[:3] > BIG / 2).all()
+        assert pri[3] == -BIG
+
+
+def test_keep_priority_l2_norm_orders_by_negated_norm():
+    """Outside the protected window, HIGH norm -> LOW priority (victim)."""
+    pos = jnp.asarray([[0, 1, 2]], jnp.int32)
+    score = jnp.asarray([[3.0, 1.0, 2.0]])       # key norms
+    pri = np.asarray(keep_priority(
+        PolicyConfig("l2_norm", recent_frac=0.1), pos, score,
+        t=100, budget=4))[0]                     # window far in the future
+    assert pri.argmin() == 0 and pri.argmax() == 1
 
 
 def test_sink_h2o_protects_both_sets():
