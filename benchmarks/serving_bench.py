@@ -983,6 +983,35 @@ def _lt_stats(per_poll):
             "max_block_ms": round(float(per_poll.max()) * 1e3, 3)}
 
 
+class _SLOProbe:
+    """Per-request token-visibility timestamps via the scheduler's
+    emission tap (`emit_hook`): the same source the async service's
+    `SLORecord`s use, so the bench reports client-visible TTFT / ITL.
+    ITL is block-granular — tokens of one fused block share a drain
+    timestamp, so p50 measures intra-block gaps (~0) and p95 the
+    block-to-block cadence."""
+
+    def __init__(self, sched):
+        self._first: dict = {}
+        self._times: dict = {}
+        sched.emit_hook = self._on_emit
+
+    def _on_emit(self, req, tok, t):
+        self._first.setdefault(req.rid, t - req.submitted_at)
+        self._times.setdefault(req.rid, []).append(t)
+
+    def stats(self):
+        ttft = np.asarray(list(self._first.values()))
+        gaps = [np.diff(ts) for ts in self._times.values() if len(ts) > 1]
+        itl = np.concatenate(gaps) if gaps else np.zeros(1)
+        return {
+            "ttft_p50_ms": round(float(np.percentile(ttft, 50)) * 1e3, 3),
+            "ttft_p95_ms": round(float(np.percentile(ttft, 95)) * 1e3, 3),
+            "itl_p50_ms": round(float(np.percentile(itl, 50)) * 1e3, 3),
+            "itl_p95_ms": round(float(np.percentile(itl, 95)) * 1e3, 3),
+        }
+
+
 def latency_trace(quick=False, write_json=True):
     rows_, _ = _latency_trace(quick=quick, write_json=write_json)
     return rows_
@@ -1020,6 +1049,7 @@ def _latency_trace(quick=False, write_json=True):
         _lt_warm(sched, long_plen, with_long=use_longs)
         best = None
         for _ in range(2):        # best-of-2: p95 is noisy on a shared CPU
+            probe = _SLOProbe(sched)     # resets the emission journal
             cd0 = sched.core.chunk_dispatches
             ca0 = sched.core.chunked_admitted
             per_poll, toks = _lt_run(sched, shorts,
@@ -1027,6 +1057,7 @@ def _latency_trace(quick=False, write_json=True):
                                      shape["inject_every"])
             assert len(toks) == n_short + (n_long if use_longs else 0)
             st = _lt_stats(per_poll)
+            st.update(probe.stats())
             if chunked:
                 st["chunk_dispatches"] = sched.core.chunk_dispatches - cd0
                 st["chunked_admitted"] = sched.core.chunked_admitted - ca0
@@ -1085,8 +1116,180 @@ def _latency_trace(quick=False, write_json=True):
             f"max_block_ms={variants['chunked']['max_block_ms']};"
             f"p95_ratio={ratio_ch:.2f}x(gate<={LT_P95_TARGET});"
             f"chunks={variants['chunked']['chunk_dispatches']};"
+            f"ttft_p95_ms={variants['chunked']['ttft_p95_ms']};"
+            f"itl_p95_ms={variants['chunked']['itl_p95_ms']};"
             f"tokens_identical=True"),
     ], record
+
+
+# --------------------------------------------------------------------------- #
+# emission_overlap: double-buffered emission-ring drain vs synchronous drain
+# --------------------------------------------------------------------------- #
+
+EO_STALL_RATIO_MAX = 0.35  # overlapped stall must be <= 0.35x the sync stall
+EO_FLOOR_MS = 0.2          # sync stall per block below this is timer noise
+EO_HOST_WORK_FACTOR = 1.5  # per-poll host work, as a multiple of block cost
+
+
+def _eo_trace(n_req, seed=41):
+    """Decode-heavy traffic: every request generates `MAX_NEW_CAP` tokens,
+    so drained blocks dominate and the drain discipline is the variable.
+    `n_req` should be a multiple of the concurrency so every admit burst
+    hits a warmed batch shape."""
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, TRACE_CFG.vocab_size,
+                          (int(rng.integers(PROMPT_BUCKET // 2,
+                                            PROMPT_BUCKET + 1)),)).astype(
+        np.int32), MAX_NEW_CAP) for _ in range(n_req)]
+
+
+def _eo_run(sched, trace, host_work_s):
+    """Submit the trace, drain it with one `host_work_s` sleep after every
+    poll — the stand-in for the work a real serving loop does between
+    blocks (stream pushes, SSE writes, intake pumping), identical for
+    both drain disciplines.  Returns (stall_s, blocks, wall_s, outputs)
+    deltas for this pass."""
+    for p, mn in trace:
+        sched.submit(p, mn)
+    s0, b0 = sched.core.drain_stall_s, sched.core.drained_blocks
+    done = []
+    t0 = time.perf_counter()
+    while sched.queue or sched.core.n_occupied or sched.core.n_pending:
+        done.extend(sched.poll())
+        if host_work_s:
+            time.sleep(host_work_s)
+    sched.core.drain_pending()
+    done.extend(sched.poll())
+    wall = time.perf_counter() - t0
+    return (sched.core.drain_stall_s - s0,
+            sched.core.drained_blocks - b0, wall,
+            {r.rid: r.tokens for r in done})
+
+
+def emission_overlap(quick=False, write_json=True):
+    rows_, _ = _emission_overlap(quick=quick, write_json=write_json)
+    return rows_
+
+
+def _emission_overlap(quick=False, write_json=True):
+    """Drain-stall accounting for the double-buffered emission ring
+    (ISSUE-10 tentpole): the SAME decode-heavy trace runs under the
+    synchronous drain discipline (device_get right after dispatch — the
+    host blocks for the whole block compute, every block) and the
+    overlapped one (``async_drain``: the ring's OTHER bank, written by
+    the previous block, drains while the new block computes).
+
+    The overlap needs something to overlap WITH: on a FIFO single-stream
+    backend a loop that does nothing between polls is device-bound, and
+    no drain discipline can wait less than ``block_cost - host_time``.
+    So the bench first calibrates the per-block cost from a sync pass,
+    then gives BOTH variants the same per-poll host-work interval
+    (``EO_HOST_WORK_FACTOR``x the block cost — the stream-push/SSE work
+    a real service loop does between blocks).  The sync discipline
+    cannot use it (its device_get already paid the full wait at drain
+    time); the ring hides the block compute under it.
+
+    Asserted claims:
+      * outputs are token-identical per request — the ring is a timing
+        change, never a model change;
+      * (gate, also wired into --smoke) overlapped drain stall per block
+        stays <= ``EO_STALL_RATIO_MAX`` of the synchronous stall —
+        unless the sync stall itself sits under the ``EO_FLOOR_MS``
+        timing floor (a machine fast enough that both disciplines are
+        free proves nothing either way).
+    """
+    n_req = 8 if quick else 28
+    params = init_params(jax.random.PRNGKey(0), TRACE_CFG)
+    ecfg = EngineConfig(mode="uniform",
+                        policy=PolicyConfig("sliding_window"),
+                        budget_abs=PROMPT_BUCKET // 2, bucket=4, min_budget=4)
+    trace = _eo_trace(n_req)
+    scheds = {}
+    for name, overlapped in [("sync_drain", False), ("overlapped", True)]:
+        scheds[name] = _continuous(params, ecfg, SYNC_EVERY)
+        scheds[name].core.async_drain = overlapped
+        _warm(scheds[name])
+    # calibrate the per-block device cost: under the sync discipline with
+    # no host work, the drain wait IS the block compute
+    stall, blocks, _, _ = _eo_run(scheds["sync_drain"], trace, 0.0)
+    block_cost_s = stall / blocks
+    host_work_s = EO_HOST_WORK_FACTOR * block_cost_s
+    variants, outs = {}, {}
+    for name in ("sync_drain", "overlapped"):
+        best = None
+        for _ in range(2):        # best-of-2: stall timing is CPU-noisy
+            stall, blocks, wall, toks = _eo_run(scheds[name], trace,
+                                                host_work_s)
+            assert len(toks) == n_req and blocks > 0
+            st = {"wall_s": round(wall, 4),
+                  "drained_blocks": int(blocks),
+                  "drain_stall_s": round(stall, 5),
+                  "stall_ms_per_block": round(stall / blocks * 1e3, 4)}
+            if best is None or (st["stall_ms_per_block"]
+                                < best[0]["stall_ms_per_block"]):
+                best = (st, toks)
+        variants[name], outs[name] = best
+
+    # rids differ per kept trial; submission order is deterministic/shared
+    sy = [outs["sync_drain"][k] for k in sorted(outs["sync_drain"])]
+    ov = [outs["overlapped"][k] for k in sorted(outs["overlapped"])]
+    for i, (a, b) in enumerate(zip(sy, ov)):
+        assert np.array_equal(a, b), \
+            f"token divergence at request {i} (overlapped vs sync drain)"
+
+    sync_ms = variants["sync_drain"]["stall_ms_per_block"]
+    over_ms = variants["overlapped"]["stall_ms_per_block"]
+    ratio = over_ms / max(sync_ms, 1e-9)
+    record = {
+        "bench": "emission_overlap",
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "n_req": n_req, "sync_every": SYNC_EVERY,
+        "max_concurrency": 4,
+        "calib_block_cost_ms": round(block_cost_s * 1e3, 4),
+        "host_work_ms_per_poll": round(host_work_s * 1e3, 4),
+        "sync_drain": variants["sync_drain"],
+        "overlapped": variants["overlapped"],
+        "stall_ratio": round(ratio, 4),
+        "token_identical": True,
+    }
+    if write_json:
+        _append_json(record)
+    return [
+        row("overlap_sync_drain", sync_ms * 1e3,
+            f"stall_ms_per_block={sync_ms};"
+            f"drained_blocks={variants['sync_drain']['drained_blocks']};"
+            f"wall_s={variants['sync_drain']['wall_s']}"),
+        row("overlap_double_buffered", over_ms * 1e3,
+            f"stall_ms_per_block={over_ms};"
+            f"stall_ratio={ratio:.3f}(gate<={EO_STALL_RATIO_MAX});"
+            f"drained_blocks={variants['overlapped']['drained_blocks']};"
+            f"wall_s={variants['overlapped']['wall_s']};"
+            f"tokens_identical=True"),
+    ], record
+
+
+def _overlap_gate(record):
+    """Gate the double-buffered drain: overlapped stall per block must
+    stay <= ``EO_STALL_RATIO_MAX`` of the synchronous stall.  Skipped
+    below the timing floor — when even the SYNC drain never waits (tiny
+    smoke blocks on a fast machine), the ratio is pure timer noise."""
+    sync_ms = record["sync_drain"]["stall_ms_per_block"]
+    over_ms = record["overlapped"]["stall_ms_per_block"]
+    if sync_ms < EO_FLOOR_MS:
+        print(f"bench-gate: sync drain stall {sync_ms:.4f}ms/block under "
+              f"the {EO_FLOOR_MS}ms floor — overlap gate skipped "
+              f"(overlapped {over_ms:.4f}ms/block)")
+        return
+    ratio = over_ms / sync_ms
+    if ratio > EO_STALL_RATIO_MAX:
+        raise SystemExit(f"bench-gate REGRESSION: overlapped drain stall "
+                         f"{over_ms:.4f}ms/block is {ratio:.3f}x the sync "
+                         f"stall {sync_ms:.4f}ms/block "
+                         f"(gate <= {EO_STALL_RATIO_MAX})")
+    print(f"bench-gate OK: overlapped drain stall {over_ms:.4f}ms/block = "
+          f"{ratio:.3f}x sync {sync_ms:.4f}ms/block "
+          f"(gate <= {EO_STALL_RATIO_MAX})")
 
 
 # --------------------------------------------------------------------------- #
@@ -1340,6 +1543,13 @@ def smoke():
     for r in lt_rows:
         print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
     _latency_gate(lt_record)
+    # tiny decode-heavy trace: double-buffered emission-ring drain vs the
+    # synchronous discipline — tokens identical, overlapped stall gated
+    # at <= EO_STALL_RATIO_MAX of sync (floor EO_FLOOR_MS)
+    eo_rows, eo_record = _emission_overlap(quick=True, write_json=False)
+    for r in eo_rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    _overlap_gate(eo_record)
     # allocation frontier: uniform / 2-tier squeeze / N-tier zigzag at
     # equal conserved memory, h2o + l2_norm; gates exact budget
     # conservation per plan and zigzag >= squeeze mean token agreement
@@ -1351,7 +1561,7 @@ def smoke():
 
 ALL = [serving_trace, admission_trace, multimodal_trace,
        prefix_reuse_trace, pool_pressure_trace, latency_trace,
-       allocation_frontier]
+       emission_overlap, allocation_frontier]
 
 
 if __name__ == "__main__":
@@ -1371,5 +1581,6 @@ if __name__ == "__main__":
                 + prefix_reuse_trace(quick=args.quick) \
                 + pool_pressure_trace(quick=args.quick) \
                 + latency_trace(quick=args.quick) \
+                + emission_overlap(quick=args.quick) \
                 + allocation_frontier(quick=args.quick):
             print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")

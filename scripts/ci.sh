@@ -9,7 +9,9 @@
 #     scripts/ci.sh --with-benchmarks      # ... plus the quick benchmark suite
 #
 # The fast lane runs the unit-level tests only (marker `fast`, registered in
-# pyproject.toml; --strict-markers makes unknown marks collection errors).
+# pyproject.toml; --strict-markers makes unknown marks collection errors),
+# then the serve-smoke: the async serving service behind the OpenAI HTTP
+# endpoint on a tiny model, asserting SSE streaming and /metrics SLO rows.
 # The full lane runs the complement (system + interpret-mode kernel tests),
 # the quickstart example, and the serving-bench smoke, which doubles as the
 # bench-regression gate: it compares dispatches-per-decode-step and the
@@ -35,6 +37,8 @@ case "$lane" in
     --fast)
         echo "== fast lane: unit tests (-m fast) =="
         run_pytest -m fast
+        echo "== fast lane: HTTP serve smoke =="
+        PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/serve_smoke.py
         echo "CI OK (fast lane)"
         exit 0
         ;;

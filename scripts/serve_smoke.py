@@ -1,0 +1,108 @@
+"""CI serve-smoke: boot the async serving stack end to end and prove the
+HTTP story in one shot — a real `ServingService` (background loop +
+double-buffered emission drain) behind the OpenAI-compatible endpoint on
+an ephemeral port, one streamed SSE completion, one non-streamed one, and
+`/metrics` reporting TTFT/ITL SLO rows for both.
+
+    PYTHONPATH=src python scripts/serve_smoke.py
+
+Runs on a tiny dense config so the fast CI lane affords it; everything
+here is asserted, so a silent wedge in the loop thread, the SSE framing,
+or the SLO plumbing fails the lane instead of hanging it (every wait is
+bounded).
+"""
+import json
+import sys
+import threading
+import urllib.request
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import PolicyConfig                              # noqa: E402
+from repro.launch.http_api import make_server                    # noqa: E402
+from repro.models import ModelConfig, init_params                # noqa: E402
+from repro.serving import (ContinuousConfig, ContinuousScheduler,  # noqa: E402
+                           EngineConfig, ServingService)
+
+CFG = ModelConfig(name="smoke", arch_type="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                  dtype="float32", param_dtype="float32")
+ECFG = EngineConfig(mode="uniform", policy=PolicyConfig("sliding_window"),
+                    budget_abs=12, bucket=4, min_budget=4)
+CCFG = ContinuousConfig(max_concurrency=3, prompt_bucket=8, max_prompt_len=24,
+                        max_new_cap=8, sync_every=2)
+
+
+def main():
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    sched = ContinuousScheduler(params, CFG, ECFG, CCFG, seed=0)
+    svc = ServingService(sched)
+    httpd = make_server(svc, port=0)
+    port = httpd.server_address[1]
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    base = f"http://127.0.0.1:{port}"
+    try:
+        # streamed completion (the curl -N demo from the README)
+        req = urllib.request.Request(
+            base + "/v1/completions",
+            data=json.dumps({"prompt": "count with me", "max_tokens": 6,
+                             "stream": True}).encode(),
+            headers={"Content-Type": "application/json"})
+        toks, done = [], False
+        with urllib.request.urlopen(req, timeout=120) as r:
+            assert r.status == 200, r.status
+            assert r.headers["Content-Type"].startswith("text/event-stream")
+            for line in r:
+                line = line.decode().strip()
+                if not line.startswith("data: "):
+                    continue
+                if line[6:] == "[DONE]":
+                    done = True
+                    break
+                c = json.loads(line[6:])["choices"][0]
+                if "token" in c:
+                    toks.append(c["token"])
+        assert done, "stream never terminated with [DONE]"
+        assert len(toks) == 6, f"expected 6 streamed tokens, got {toks}"
+        print(f"streamed completion OK: {toks}")
+
+        # non-streamed completion with explicit ids + per-request SLO
+        req = urllib.request.Request(
+            base + "/v1/completions",
+            data=json.dumps({"prompt": [5, 9, 11, 2],
+                             "max_tokens": 4}).encode(),
+            headers={"Content-Type": "application/json"})
+        with urllib.request.urlopen(req, timeout=120) as r:
+            obj = json.load(r)
+        assert len(obj["choices"][0]["tokens"]) == 4, obj
+        assert obj["slo"]["ttft_ms"] > 0.0, obj["slo"]
+        print(f"completion OK: {obj['choices'][0]['tokens']} "
+              f"ttft={obj['slo']['ttft_ms']:.1f}ms")
+
+        # /metrics carries the service-wide TTFT/ITL SLO aggregate
+        with urllib.request.urlopen(base + "/metrics", timeout=30) as r:
+            rows = dict(line.split(" ", 1)
+                        for line in r.read().decode().splitlines())
+        for key in ("serving_completed", "serving_ttft_p50_ms",
+                    "serving_ttft_p95_ms", "serving_itl_p50_ms",
+                    "serving_itl_p95_ms", "serving_queue_wait_p50_ms",
+                    "serving_drain_stall_s", "serving_drained_blocks"):
+            assert key in rows, f"/metrics missing {key}"
+        assert float(rows["serving_completed"]) == 2, rows
+        assert float(rows["serving_ttft_p50_ms"]) > 0.0, rows
+        print(f"metrics OK: completed={rows['serving_completed']} "
+              f"ttft_p50={float(rows['serving_ttft_p50_ms']):.1f}ms "
+              f"itl_p95={float(rows['serving_itl_p95_ms']):.1f}ms")
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        svc.close(drain=True)
+    assert svc.engine.drained_blocks > 0
+    print("serve smoke OK")
+
+
+if __name__ == "__main__":
+    main()

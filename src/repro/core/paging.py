@@ -31,6 +31,7 @@ into a device page table is remapped to the null page 0.
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
 from typing import Callable, Deque, Dict, Iterable, NamedTuple, Optional, \
     Sequence, Tuple
@@ -239,6 +240,14 @@ class PagePool:
     list; the raising `alloc` ignores it so a mid-burst allocation can
     never be failed out from under an admission the engine already
     committed to.
+
+    **Thread safety**: the serving loop (`serving/service.py`) mutates the
+    free list and refcounts on its own thread while submitting threads read
+    stats (`n_free`, `n_resident`, occupancy).  Every mutation and
+    threshold read holds ``lock`` — a re-entrant lock SHARED with the
+    prefix cache (`serving.prefix.PrefixCache` adopts it), so the
+    alloc → evict_hook → decref cycle re-enters instead of deadlocking and
+    there is no lock-order to get wrong between the two structures.
     """
 
     def __init__(self, n_pages: int):
@@ -251,6 +260,7 @@ class PagePool:
         self.low_pages = 0          # advisory: admission stalls below this
         self.high_pages = 0         # advisory: stall clears above this
         self.forced_failures = 0    # fault injection: try_alloc failures owed
+        self.lock = threading.RLock()
 
     @property
     def sentinel(self) -> int:
@@ -259,12 +269,14 @@ class PagePool:
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        with self.lock:
+            return len(self._free)
 
     @property
     def n_resident(self) -> int:
         """Allocated pages (excluding the null page)."""
-        return self.n_pages - 1 - len(self._free)
+        with self.lock:
+            return self.n_pages - 1 - len(self._free)
 
     def set_watermarks(self, low_pages: int, high_pages: int) -> None:
         """Install advisory low/high free-page thresholds (page counts)."""
@@ -277,11 +289,13 @@ class PagePool:
 
     def below_low(self, extra_free: int = 0) -> bool:
         """Free pages (+ `extra_free` reclaimables) at/below the low mark."""
-        return len(self._free) + int(extra_free) <= self.low_pages
+        with self.lock:
+            return len(self._free) + int(extra_free) <= self.low_pages
 
     def above_high(self, extra_free: int = 0) -> bool:
         """Free pages (+ `extra_free` reclaimables) past the high mark."""
-        return len(self._free) + int(extra_free) > self.high_pages
+        with self.lock:
+            return len(self._free) + int(extra_free) > self.high_pages
 
     def alloc(self, n: int) -> np.ndarray:
         """Allocate `n` pages (refcount 1 each), evicting through
@@ -290,42 +304,48 @@ class PagePool:
         (`ContinuousEngine.admissible_prefix`) this means a caller bypassed
         the degradation ladder, or the prefix cache's *pinned* pages
         exceeded their headroom."""
-        while len(self._free) < n:
-            if self.evict_hook is None or not self.evict_hook():
-                raise RuntimeError(
-                    f"page pool exhausted: need {n}, free {len(self._free)} "
-                    f"of {self.n_pages} (pinned prefix pages exceed headroom)")
-        ids = np.asarray([self._free.popleft() for _ in range(n)], np.int32)
-        self.refcount[ids] = 1
-        return ids
+        with self.lock:
+            while len(self._free) < n:
+                if self.evict_hook is None or not self.evict_hook():
+                    raise RuntimeError(
+                        f"page pool exhausted: need {n}, free "
+                        f"{len(self._free)} of {self.n_pages} (pinned "
+                        f"prefix pages exceed headroom)")
+            ids = np.asarray([self._free.popleft() for _ in range(n)],
+                             np.int32)
+            self.refcount[ids] = 1
+            return ids
 
     def try_alloc(self, n: int) -> Optional[np.ndarray]:
         """`alloc` that returns None instead of raising (prefix-cache
         insertion is best-effort: a full pool skips caching, never fails
         admission).  Consumes one scripted `forced_failures` per call."""
-        if self.forced_failures > 0:
-            self.forced_failures -= 1
-            return None
-        while len(self._free) < n:
-            if self.evict_hook is None or not self.evict_hook():
+        with self.lock:
+            if self.forced_failures > 0:
+                self.forced_failures -= 1
                 return None
-        return self.alloc(n)
+            while len(self._free) < n:
+                if self.evict_hook is None or not self.evict_hook():
+                    return None
+            return self.alloc(n)
 
     def incref(self, ids) -> None:
         ids = np.asarray(ids, np.int64).reshape(-1)
-        self._check_known(ids)
-        self.refcount[ids] += 1
+        with self.lock:
+            self._check_known(ids)
+            self.refcount[ids] += 1
 
     def decref(self, ids) -> None:
         ids = np.asarray(ids, np.int64).reshape(-1)
-        self._check_known(ids)
-        if not (self.refcount[ids] > 0).all():
-            bad = ids[self.refcount[ids] <= 0]
-            raise RuntimeError(f"page double free: ids {bad.tolist()} "
-                               f"already have refcount 0")
-        self.refcount[ids] -= 1
-        for i in ids[self.refcount[ids] == 0]:
-            self._free.append(int(i))
+        with self.lock:
+            self._check_known(ids)
+            if not (self.refcount[ids] > 0).all():
+                bad = ids[self.refcount[ids] <= 0]
+                raise RuntimeError(f"page double free: ids {bad.tolist()} "
+                                   f"already have refcount 0")
+            self.refcount[ids] -= 1
+            for i in ids[self.refcount[ids] == 0]:
+                self._free.append(int(i))
 
     def _check_known(self, ids: np.ndarray) -> None:
         if ids.size and not ((ids > 0) & (ids < self.n_pages)).all():
@@ -349,7 +369,16 @@ def audit_pool_accounting(pool: PagePool,
     owner entries referencing it.  ``page_tables`` are optional host copies
     of device tables whose non-null entries must all be owned (the "deep"
     check).  Raises AssertionError with a labelled message on any violation.
+    Holds the pool's lock for the whole audit, so a concurrent stat poll
+    never observes (nor interleaves with) a half-checked pool.
     """
+    with pool.lock:
+        _audit_pool_locked(pool, owners, page_tables)
+
+
+def _audit_pool_locked(pool: PagePool,
+                       owners: Dict[str, Iterable[np.ndarray]],
+                       page_tables: Sequence[np.ndarray] = ()) -> None:
     free = np.asarray(list(pool._free), np.int64)
     if free.size != len(set(free.tolist())):
         raise AssertionError("pool audit: duplicate ids on the free list")

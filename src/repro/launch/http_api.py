@@ -1,0 +1,246 @@
+"""OpenAI-compatible HTTP front end over `ServingService` (stdlib only).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mistral-7b --reduced \
+        --batching continuous --http 8000
+
+    curl -N localhost:8000/v1/completions -d \
+        '{"prompt": "count with me", "max_tokens": 16, "stream": true}'
+
+Endpoints (a deliberately small, dependency-free subset of the OpenAI
+wire format — enough for any OpenAI-client smoke test to stream against):
+
+  * ``POST /v1/completions`` — `prompt` is either a list of token ids
+    (served verbatim) or a string run through the DEMO byte tokenizer
+    below; `stream: true` switches the response to SSE, one
+    ``data: {json}`` chunk per emitted token, closed by ``data: [DONE]``.
+  * ``POST /v1/chat/completions`` — same engine path; `messages` are
+    flattened to one prompt, chunks use the chat `delta` shape.
+  * ``GET /metrics`` — service SLO aggregate (TTFT / ITL / queue-wait
+    percentiles from `ServiceMetrics.snapshot`) plus the engine counters,
+    one ``serving_<name> <value>`` line each (Prometheus text style).
+  * ``GET /healthz`` — liveness (503 once the service is closed/failed).
+
+Tokenization is NOT part of this repo's scope (the models speak raw ids):
+a string prompt is mapped byte-by-byte into the vocab (`b % vocab_size`)
+and output ids render as ``" <id>"`` — lossless for list-of-int clients,
+demo-readable for curl.  Concurrency comes from `ThreadingHTTPServer`
+(one thread per connection) fronting the service's single loop thread;
+client disconnect mid-stream cancels the request so its slot recycles.
+"""
+from __future__ import annotations
+
+import json
+import time
+import uuid
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.service import RequestHandle, ServingService
+
+_MAX_BODY = 1 << 20                                   # 1 MiB request cap
+
+
+def encode_prompt(prompt, vocab_size: int) -> np.ndarray:
+    """List of ids -> verbatim int32 array; string -> demo byte tokenizer
+    (UTF-8 bytes folded into the vocab)."""
+    if isinstance(prompt, str):
+        if not prompt:
+            raise ValueError("prompt must be non-empty")
+        return np.asarray([b % vocab_size for b in prompt.encode("utf-8")],
+                          np.int32)
+    toks = np.asarray(prompt, np.int32)
+    if toks.ndim != 1 or toks.size == 0:
+        raise ValueError("prompt must be a string or a flat non-empty "
+                         "list of token ids")
+    if (toks < 0).any() or (toks >= vocab_size).any():
+        raise ValueError(f"token ids must be in [0, {vocab_size})")
+    return toks
+
+
+def detok(tok: int) -> str:
+    """Demo rendering of one output id (no tokenizer in scope)."""
+    return f" {int(tok)}"
+
+
+def _flatten_messages(messages) -> str:
+    if not isinstance(messages, list) or not messages:
+        raise ValueError("messages must be a non-empty list")
+    parts: List[str] = []
+    for m in messages:
+        if not isinstance(m, dict) or "content" not in m:
+            raise ValueError("each message needs a 'content' field")
+        parts.append(f"{m.get('role', 'user')}: {m['content']}")
+    return "\n".join(parts)
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "repro-serve/1.0"
+    protocol_version = "HTTP/1.1"
+
+    # the ThreadingHTTPServer subclass below carries the service handle
+    @property
+    def svc(self) -> ServingService:
+        return self.server.service                     # type: ignore
+
+    def log_message(self, fmt, *args):                 # quiet by default
+        if getattr(self.server, "verbose", False):
+            super().log_message(fmt, *args)
+
+    # ---- plumbing ---------------------------------------------------------
+    def _json(self, code: int, obj: dict) -> None:
+        body = json.dumps(obj).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _error(self, code: int, msg: str) -> None:
+        self._json(code, {"error": {"message": msg, "type": "invalid_request_error"}})
+
+    def _read_body(self) -> dict:
+        n = int(self.headers.get("Content-Length") or 0)
+        if not 0 < n <= _MAX_BODY:
+            raise ValueError(f"Content-Length must be in (0, {_MAX_BODY}]")
+        obj = json.loads(self.rfile.read(n))
+        if not isinstance(obj, dict):
+            raise ValueError("request body must be a JSON object")
+        return obj
+
+    # ---- GET --------------------------------------------------------------
+    def do_GET(self):
+        if self.path == "/healthz":
+            alive = not self.svc._closed and self.svc.error is None
+            self._json(200 if alive else 503,
+                       {"status": "ok" if alive else "closed"})
+        elif self.path == "/metrics":
+            rows = dict(self.svc.metrics.snapshot())
+            rows.update(self.svc.counters())
+            body = "".join(f"serving_{k} {v:.6g}\n" if isinstance(v, float)
+                           else f"serving_{k} {v}\n"
+                           for k, v in rows.items()).encode()
+            self.send_response(200)
+            self.send_header("Content-Type", "text/plain; version=0.0.4")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+        else:
+            self._error(404, f"no route for GET {self.path}")
+
+    # ---- POST -------------------------------------------------------------
+    def do_POST(self):
+        chat = self.path == "/v1/chat/completions"
+        if not chat and self.path != "/v1/completions":
+            self._error(404, f"no route for POST {self.path}")
+            return
+        try:
+            body = self._read_body()
+            raw = _flatten_messages(body["messages"]) if chat \
+                else body.get("prompt")
+            if raw is None:
+                raise ValueError("missing 'prompt'")
+            vocab = self.svc.sched.core.cfg.vocab_size
+            toks = encode_prompt(raw, vocab)
+            max_new = int(body.get("max_tokens", 16))
+            handle = self.svc.submit(toks, max_new=max_new)
+        except (ValueError, KeyError, TypeError, json.JSONDecodeError) as e:
+            self._error(400, str(e))
+            return
+        except RuntimeError as e:                      # service closed
+            self._error(503, str(e))
+            return
+        rid = f"cmpl-{uuid.uuid4().hex[:24]}"
+        model = body.get("model", "repro")
+        if body.get("stream"):
+            self._stream_response(handle, rid, model, chat)
+        else:
+            self._full_response(handle, rid, model, chat, len(toks))
+
+    # ---- response shapes --------------------------------------------------
+    def _full_response(self, h: RequestHandle, rid: str, model: str,
+                       chat: bool, n_prompt: int) -> None:
+        toks = h.result(timeout=600.0)
+        text = "".join(detok(t) for t in toks)
+        msg = ({"message": {"role": "assistant", "content": text}}
+               if chat else {"text": text})
+        self._json(200, {
+            "id": rid, "model": model, "created": int(time.time()),
+            "object": "chat.completion" if chat else "text_completion",
+            "choices": [{"index": 0, "finish_reason": "length",
+                         "tokens": [int(t) for t in toks], **msg}],
+            "usage": {"prompt_tokens": n_prompt,
+                      "completion_tokens": int(toks.size),
+                      "total_tokens": n_prompt + int(toks.size)},
+            "slo": {"ttft_ms": h.slo.ttft_s * 1e3,
+                    "itl_p50_ms": h.slo.itl_p50_ms,
+                    "queue_wait_ms": h.slo.queue_wait_s * 1e3,
+                    "preemptions": h.slo.preemptions},
+        })
+
+    def _stream_response(self, h: RequestHandle, rid: str, model: str,
+                         chat: bool) -> None:
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream")
+        self.send_header("Cache-Control", "no-cache")
+        self.send_header("Connection", "close")
+        self.end_headers()
+        created = int(time.time())
+
+        def chunk(tok: Optional[int], fin: Optional[str]) -> bytes:
+            piece = "" if tok is None else detok(tok)
+            delta = ({"delta": {"content": piece} if tok is not None else {}}
+                     if chat else {"text": piece})
+            obj = {"id": rid, "model": model, "created": created,
+                   "object": ("chat.completion.chunk" if chat
+                              else "text_completion"),
+                   "choices": [{"index": 0, "finish_reason": fin,
+                                **({"token": int(tok)} if tok is not None
+                                   else {}), **delta}]}
+            return f"data: {json.dumps(obj)}\n\n".encode()
+
+        try:
+            for tok in h.stream(timeout=600.0):
+                self.wfile.write(chunk(tok, None))
+                self.wfile.flush()
+            fin = "cancelled" if h.cancelled else "length"
+            self.wfile.write(chunk(None, fin))
+            self.wfile.write(b"data: [DONE]\n\n")
+            self.wfile.flush()
+        except (BrokenPipeError, ConnectionResetError):
+            h.cancel()                 # client went away: recycle the slot
+
+
+class ServingHTTPServer(ThreadingHTTPServer):
+    """Threaded HTTP server bound to one `ServingService`."""
+    daemon_threads = True
+
+    def __init__(self, addr: Tuple[str, int], service: ServingService,
+                 verbose: bool = False):
+        super().__init__(addr, _Handler)
+        self.service = service
+        self.verbose = verbose
+
+
+def make_server(service: ServingService, host: str = "127.0.0.1",
+                port: int = 8000, verbose: bool = False) -> ServingHTTPServer:
+    """Bind (port 0 picks a free one — tests) without starting the serve
+    loop; call `serve_forever()` on a thread of your choosing."""
+    return ServingHTTPServer((host, port), service, verbose=verbose)
+
+
+def serve_http(service: ServingService, host: str = "127.0.0.1",
+               port: int = 8000, verbose: bool = True) -> None:
+    """Blocking front end: serve until KeyboardInterrupt, then drain."""
+    httpd = make_server(service, host, port, verbose=verbose)
+    print(f"serving on http://{host}:{httpd.server_address[1]} "
+          f"(POST /v1/completions, GET /metrics; Ctrl-C drains and exits)")
+    try:
+        httpd.serve_forever(poll_interval=0.2)
+    except KeyboardInterrupt:
+        print("\nshutting down: draining in-flight requests...")
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        service.close(drain=True)

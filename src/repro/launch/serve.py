@@ -11,6 +11,10 @@
     PYTHONPATH=src python -m repro.launch.serve --arch mistral-7b --reduced \
         --batching continuous --batch 6 --chunked-prefill --chunk-len 64
 
+    # OpenAI-compatible HTTP endpoint (SSE streaming, /metrics SLOs)
+    PYTHONPATH=src python -m repro.launch.serve --arch mistral-7b --reduced \
+        --batching continuous --http 8000
+
 Loads a config (reduced for CPU; full configs serve under the production
 mesh proven by launch/dryrun.py), optionally restores a checkpoint, and
 runs batched generation with the requested KV-cache mode.  `--policy`
@@ -133,6 +137,14 @@ def _run_continuous(params, cfg, ecfg, args):
         chunk_len=chunk_len if args.chunked_prefill else 0)
     sched = ContinuousScheduler(params, cfg, ecfg, ccfg, seed=args.seed)
     print(f"capability: {sched.capability.describe()}")
+    if args.http:
+        # async front end: hand the scheduler to the background service
+        # loop and serve the OpenAI-compatible HTTP API until Ctrl-C
+        from repro.launch.http_api import serve_http
+        from repro.serving import ServingService
+        serve_http(ServingService(sched), host=args.http_host,
+                   port=args.http)
+        return
     rng = np.random.default_rng(args.seed)
     kind = _frontend_kind(cfg, args)
     n_front = 0 if kind is None else \
@@ -274,6 +286,12 @@ def main():
     ap.add_argument("--chunk-len", type=int, default=0,
                     help="prefill chunk length in tokens (rounded up to the "
                          "prompt bucket; 0 = 2x the prompt bucket)")
+    ap.add_argument("--http", type=int, default=0,
+                    help="serve an OpenAI-compatible HTTP endpoint on this "
+                         "port instead of driving synthetic traffic "
+                         "(continuous batching; /v1/completions with SSE "
+                         "streaming, /metrics, /healthz)")
+    ap.add_argument("--http-host", default="127.0.0.1")
     ap.add_argument("--watermark", default="",
                     help="LOW:HIGH free-page fractions for admission "
                          "backpressure hysteresis (e.g. 0.05:0.25); empty = "

@@ -13,6 +13,8 @@ from repro.serving.prefix import PrefixCache, PrefixMatch
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.scheduler import (ContinuousScheduler, Request,
                                      SchedulerConfig, WaveScheduler)
+from repro.serving.service import (RequestHandle, ServiceMetrics,
+                                   ServingService, SLORecord)
 
 __all__ = [
     "DecodeState", "make_tier_indices", "serve_step",
@@ -27,4 +29,5 @@ __all__ = [
     "ContinuousScheduler", "Request", "SchedulerConfig", "WaveScheduler",
     "IntakeEncoder", "MultimodalRequest",
     "TextSegment", "ImageSegment", "AudioSegment",
+    "RequestHandle", "ServiceMetrics", "ServingService", "SLORecord",
 ]

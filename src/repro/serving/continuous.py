@@ -66,6 +66,7 @@ idling until the longest wave member finishes.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -265,18 +266,25 @@ def continuous_capability(cfg) -> Capability:
 class ContinuousState(NamedTuple):
     """Carried across decode blocks; `dec.active` is the on-device liveness.
 
-    ``emit_tok`` / ``emit_act`` are the on-device emission buffer: slot ``i``
-    holds step ``i``-of-the-block's sampled tokens and the pre-step active
-    mask (whether the emission counts for that row).  The buffer lives on
-    device so a fused block never ships per-step arrays to the host; the
-    host drains rows ``[0, n_block)`` once per block.
+    ``emit_tok`` / ``emit_act`` are the on-device emission ring: a
+    DOUBLE-BUFFERED pair of banks ``[2, sync_every, B]`` with the swap
+    index ``emit_bank`` carried in the state.  Each fused block writes
+    step ``i``-of-the-block's sampled tokens and the pre-step active mask
+    (whether the emission counts for that row) into bank ``emit_bank``
+    and flips the index, so consecutive blocks alternate banks.  The ring
+    lives on device so a fused block never ships per-step arrays to the
+    host; the host drains rows ``[0, n_block)`` of the retired bank once
+    per block — and because block N+1 writes the OTHER bank, an async
+    drain of block N's emissions can overlap block N+1's compute
+    (`ContinuousEngine.async_drain`).
     """
     dec: DecodeState
     token: jnp.ndarray       # [B] int32 next input token per row
     remaining: jnp.ndarray   # [B] int32 tokens each row may still emit
     key: jnp.ndarray         # PRNG key (stochastic sampling only)
-    emit_tok: jnp.ndarray    # [sync_every, B] int32 emission buffer
-    emit_act: jnp.ndarray    # [sync_every, B] bool: emission was live
+    emit_tok: jnp.ndarray    # [2, sync_every, B] int32 emission ring
+    emit_act: jnp.ndarray    # [2, sync_every, B] bool: emission was live
+    emit_bank: jnp.ndarray   # [] int32 bank the NEXT block writes (0/1)
     #: chunked-prefill staging (empty tuple unless `chunked_prefill` is on):
     #: ``(k, v, pos, score, ssm, conv)`` with ``()`` placeholders per family
     #: — the ONE in-flight pending row's accumulated prompt KV
@@ -470,6 +478,28 @@ class ContinuousEngine:
         self.chunked_admitted = 0
         self.chunk_dispatches = 0
         self.chunk_tokens_prefilled = 0
+        # async emission drain (serving/service.py, DESIGN.md §5): when on,
+        # `decode_block` drains block N-1's retired ring bank AFTER
+        # dispatching block N, so the device→host read overlaps the
+        # in-flight compute instead of stalling on it.  `_inflight` holds
+        # the undrained record; `_bank` mirrors `state.emit_bank` on the
+        # host (reading the device scalar back would itself stall);
+        # `_slot_gen` is a per-slot tenancy counter so a drain that lags a
+        # retire-and-readmit cycle can never retire the NEW tenant.
+        self.async_drain = False
+        self._inflight: Optional[dict] = None
+        self._bank = 0
+        self._slot_gen = [0] * B
+        self.drain_stall_s = 0.0      # host time blocked inside the drain
+        self.drained_blocks = 0
+        self.cancellations = 0        # rows cancelled mid-flight (service)
+        # per-token emission journal (the streaming tap): when a list, the
+        # engine appends ``(slot, token, t_host)`` for every live emission
+        # — admission first tokens at admit time, block emissions at DRAIN
+        # time (the honest host-visibility timestamp).  The scheduler
+        # flushes it to per-request hooks; None keeps the hot loop free of
+        # journaling entirely.
+        self.emit_journal: Optional[list] = None
 
     # ------------------------------------------------------------ properties
     @property
@@ -490,6 +520,13 @@ class ContinuousEngine:
         but not yet live — not occupied, not preemptible, advanced one
         chunk per decode block until the final chunk flips them live."""
         return 0 if self._pending is None else 1
+
+    @property
+    def pending_slot(self) -> Optional[int]:
+        """Slot reserved by the in-flight chunked admission (None if no
+        row is pending) — how the service layer distinguishes cancelling
+        a mid-prefill row from cancelling a live one."""
+        return None if self._pending is None else self._pending["slot"]
 
     @property
     def pending_prefilled_len(self) -> int:
@@ -605,6 +642,11 @@ class ContinuousEngine:
         cfg, pol, sc = self.cfg, self.ecfg.policy, self.ecfg.sampler
         eos = self.ecfg.eos_token
         use_flash = self.ecfg.use_flash_decode
+        # the ring bank this block writes is loop-invariant: bind it
+        # outside the scan body and flip it once after the scan, so the
+        # next block lands in the OTHER bank (double-buffered drain)
+        bank = state.emit_bank
+        zero = jnp.int32(0)
 
         def body(st, i):
             active_prev = st.dec.active
@@ -618,10 +660,11 @@ class ContinuousEngine:
             dec = dec._replace(active=active_prev & ~done)
             return st._replace(
                 dec=dec, token=nxt, remaining=rem, key=key,
-                emit_tok=jax.lax.dynamic_update_index_in_dim(
-                    st.emit_tok, nxt, i, 0),
-                emit_act=jax.lax.dynamic_update_index_in_dim(
-                    st.emit_act, active_prev, i, 0)), None
+                emit_tok=jax.lax.dynamic_update_slice(
+                    st.emit_tok, nxt[None, None, :], (bank, i, zero)),
+                emit_act=jax.lax.dynamic_update_slice(
+                    st.emit_act, active_prev[None, None, :],
+                    (bank, i, zero))), None
 
         # the chunk staging is loop-invariant: detach it from the scan
         # carry so plain decode blocks never shuttle the (multi-MB)
@@ -629,7 +672,7 @@ class ContinuousEngine:
         chunk = state.chunk
         state, _ = jax.lax.scan(body, state._replace(chunk=()),
                                 jnp.arange(n_steps, dtype=jnp.int32))
-        return state._replace(chunk=chunk)
+        return state._replace(chunk=chunk, emit_bank=1 - bank)
 
     def _admit_jit(self, NB: int, P: int):
         """Compiled admission for one (admit batch, prompt) bucket:
@@ -1036,8 +1079,9 @@ class ContinuousEngine:
             token=jnp.zeros((B,), jnp.int32),
             remaining=jnp.zeros((B,), jnp.int32),
             key=self._state_key,
-            emit_tok=jnp.zeros((E, B), jnp.int32),
-            emit_act=jnp.zeros((E, B), bool),
+            emit_tok=jnp.zeros((2, E, B), jnp.int32),
+            emit_act=jnp.zeros((2, E, B), bool),
+            emit_bank=jnp.zeros((), jnp.int32),
             chunk=chunk)
 
     def _ensure_plan(self, pre):
@@ -1055,6 +1099,7 @@ class ContinuousEngine:
         self.plan = self.engine.plan_budgets(
             cos, self.ccfg.max_prompt_len, self.ccfg.max_new_cap)
         self.state = self._init_state()
+        self._bank = 0           # host mirror of the fresh ring's swap index
         self._build_fns()
 
     # -------------------------------------------------------------- admission
@@ -1155,15 +1200,14 @@ class ContinuousEngine:
             self._stalled = True
             self.watermark_hits += 1
 
-    def preempt(self, slot: int) -> np.ndarray:
-        """Evict a LIVE row mid-decode (the ladder's last rung): clear its
-        device slots, release its pages, recycle the row, and return the
-        tokens it had generated so far (admission token included) — the
-        scheduler re-queues the request as prompt + these tokens, so a
-        resumed run re-prefills its own history and (greedy, position-based
-        policies) continues token-identically.  No `Completed` is emitted.
-        Clears a watermark stall: the released pages are exactly what the
-        stalled admission was waiting for."""
+    def _release_row(self, slot: int) -> np.ndarray:
+        """Evict a LIVE row mid-decode: drain any lagging async record
+        first (so the row's banked emissions land in its buffer instead of
+        leaking to the slot's next tenant), clear its device slots, release
+        its pages, recycle the row, and return the tokens it had generated
+        so far (admission token included).  No `Completed` is emitted.
+        Shared tail of `preempt` and `cancel`."""
+        self.drain_pending()
         if slot not in self._occupied:
             raise ValueError(f"slot {slot} is not occupied")
         self.state = self._clear_fn(self.state, slot)
@@ -1172,13 +1216,54 @@ class ContinuousEngine:
             self._row_pages[slot] = []
         self._occupied.remove(slot)
         self._free.append(slot)
+        self._slot_gen[slot] += 1       # tenancy over: lagging drains skip it
         toks = np.asarray(self._buf[slot], np.int32)
         self._buf[slot] = []
         self._max_new[slot] = 0
         self._steps[slot] = 0
+        return toks
+
+    def preempt(self, slot: int) -> np.ndarray:
+        """Evict a LIVE row mid-decode (the ladder's last rung) and return
+        its generated tokens — the scheduler re-queues the request as
+        prompt + these tokens, so a resumed run re-prefills its own
+        history and (greedy, position-based policies) continues
+        token-identically.  Clears a watermark stall: the released pages
+        are exactly what the stalled admission was waiting for."""
+        toks = self._release_row(slot)
         self.preemptions += 1
         self._stalled = False
         return toks
+
+    def cancel(self, slot: int) -> np.ndarray:
+        """Cancel a LIVE row (client abandoned the request — the service
+        layer's path, never the pressure ladder's): same release as
+        `preempt` — pages freed, slot recycled immediately for the next
+        admission — but counted separately and with no resume contract;
+        the returned partial tokens are informational.  Also clears a
+        watermark stall, for the same reason a preemption does."""
+        toks = self._release_row(slot)
+        self.cancellations += 1
+        self._stalled = False
+        return toks
+
+    def cancel_pending(self) -> None:
+        """Cancel the in-flight CHUNKED admission: free the page tables it
+        allocated up front and recycle its slot.  Nothing was scattered to
+        the device yet (pages land at the final chunk) and the staging
+        metadata is wiped by the next `begin_chunked`, so the release is
+        pure host bookkeeping — the pool audit stays clean."""
+        if self._pending is None:
+            raise ValueError("no pending chunked admission to cancel")
+        slot = self._pending["slot"]
+        self._pending = None
+        if self._paged and self._row_pages[slot]:
+            self._pool.free(np.asarray(self._row_pages[slot], np.int32))
+            self._row_pages[slot] = []
+        self._free.append(slot)
+        self._slot_gen[slot] += 1
+        self.cancellations += 1
+        self._stalled = False
 
     def audit_pool(self, extra_owned: Sequence[np.ndarray] = (),
                    deep: bool = False) -> None:
@@ -1626,18 +1711,24 @@ class ContinuousEngine:
     def _register_admitted(self, slots: List[int], tok0: np.ndarray,
                            max_news: Sequence[int], rem0: np.ndarray):
         """Host bookkeeping after an admit executable: open emission
-        buffers, mark rows occupied, retire instant-EOS / max_new==1 rows."""
+        buffers, mark rows occupied (bumping the slot's tenancy generation
+        so a lagging async drain cannot touch the new tenant), retire
+        instant-EOS / max_new==1 rows."""
         eos = self.ecfg.eos_token
+        now = time.perf_counter() if self.emit_journal is not None else 0.0
         for i, slot in enumerate(slots):
             t0 = int(tok0[i])
             self._buf[slot] = [t0]
             self._max_new[slot] = max_news[i]
             self._steps[slot] = 0
+            self._slot_gen[slot] += 1
             self._occupied.append(slot)
             self.peak_resident_rows = max(self.peak_resident_rows,
                                           len(self._occupied))
             self.admitted += 1
             self.tokens_emitted += 1
+            if self.emit_journal is not None:
+                self.emit_journal.append((slot, t0, now))
             if not (rem0[i] > 0 and not (eos >= 0 and t0 == eos)):
                 self._retire(slot)
 
@@ -1716,11 +1807,28 @@ class ContinuousEngine:
         """Run one fused block (ONE dispatch): up to `sync_every` decode
         steps, plus — when a chunked admission is pending — that row's next
         prefill chunk co-scheduled in the same dispatch.  Drain the
-        on-device emission buffer (ONE device→host read), retire finished
-        rows.  Returns the number of requests completed in this block."""
+        emission ring (ONE device→host read), retire finished rows.
+
+        Two drain disciplines over the same double-buffered ring:
+
+        * **sync** (default) — drain the bank this block just wrote before
+          returning; the `device_get` blocks for the block's full compute
+          (that wait is counted in `drain_stall_s`).  Completions are
+          visible immediately — the contract every existing caller holds.
+        * **async** (`self.async_drain = True`, set by `ServingService`) —
+          the just-written bank is parked as the in-flight record and the
+          PREVIOUS block's record is drained instead.  Its data finished
+          computing while the host was scheduling this block, so the
+          `device_get` returns without stalling and the drain overlaps the
+          dispatch now in flight.  Emissions and retirements lag one block;
+          `drain_pending` flushes the final record.
+
+        Returns the number of requests completed in this call."""
         pending = self._pending
         if not self._occupied and pending is None:
-            return 0
+            # nothing to dispatch: in async mode the LAST block may still
+            # be parked undrained — flush it so the loop terminates
+            return self.drain_pending()
         before = len(self._completed)
         if pending is not None:
             # fixed block length for chunk-carrying dispatches: the bound
@@ -1734,27 +1842,82 @@ class ContinuousEngine:
             # the host knows an exact upper bound on useful steps this
             # block: EOS can only retire rows EARLIER, so don't burn
             # whole-batch steps past the longest remaining token budget
+            # (in async mode `_steps` lags one undrained block, so the
+            # bound only ever over-estimates — extra steps are masked)
             bound = max(self._max_new[s] - 1 - self._steps[s]
                         for s in self._occupied)
             n = max(1, min(self.ccfg.sync_every, bound))
             self.state = self._block_jit(n)(self.params, self.state)
         self.decode_dispatches += 1
         self.decode_steps += n
-        # the block's only device→host transfer: emissions + liveness
+        bank = self._bank
+        self._bank ^= 1
+        if self.async_drain:
+            # park this block's bank; drain the previous one.  The record
+            # holds eagerly-sliced COPIES of the retired bank (and the
+            # liveness vector): tiny [n, B] arrays whose buffers are
+            # independent of the state pytree, so the next dispatch may
+            # donate the state without invalidating an undrained record.
+            rec = {"tok": self.state.emit_tok[bank],
+                   "act": self.state.emit_act[bank],
+                   "active": jnp.copy(self.state.dec.active),
+                   "n": n,
+                   "occ": [(s, self._slot_gen[s]) for s in self._occupied]}
+            prev, self._inflight = self._inflight, rec
+            if prev is not None:
+                self._drain_record(prev)
+        else:
+            self._drain_record(
+                {"tok": self.state.emit_tok, "act": self.state.emit_act,
+                 "active": self.state.dec.active, "n": n, "bank": bank,
+                 "occ": [(s, self._slot_gen[s]) for s in self._occupied]})
+        return len(self._completed) - before
+
+    def _drain_record(self, rec: dict) -> None:
+        """Drain one block's emissions: ONE device→host read of the
+        retired ring bank + liveness, then host bookkeeping — append live
+        tokens to request buffers (journaling them with the drain
+        timestamp), retire rows that went inactive.  Only slots from the
+        record's tenancy snapshot are touched: a slot retired and
+        re-admitted between dispatch and drain carries a bumped
+        generation, so a lagging record can never credit tokens to (or
+        retire) the new tenant."""
+        t0 = time.perf_counter()
         emit_tok, emit_act, active_now = jax.device_get(
-            (self.state.emit_tok, self.state.emit_act, self.state.dec.active))
-        for i in range(n):
+            (rec["tok"], rec["act"], rec["active"]))
+        now = time.perf_counter()
+        self.drain_stall_s += now - t0
+        self.drained_blocks += 1
+        if "bank" in rec:                  # sync path ships the full ring
+            emit_tok, emit_act = emit_tok[rec["bank"]], emit_act[rec["bank"]]
+        occ = [(s, g) for s, g in rec["occ"] if self._slot_gen[s] == g]
+        journal = self.emit_journal
+        for i in range(rec["n"]):
             nxt, act_prev = emit_tok[i], emit_act[i]
             self.row_steps += self.ccfg.max_concurrency
             self.useful_row_steps += int(act_prev.sum())
-            for s in self._occupied:
+            for s, _ in occ:
                 if act_prev[s]:
-                    self._buf[s].append(int(nxt[s]))
+                    tok = int(nxt[s])
+                    self._buf[s].append(tok)
                     self._steps[s] += 1
                     self.tokens_emitted += 1
-        for s in list(self._occupied):
+                    if journal is not None:
+                        journal.append((s, tok, now))
+        for s, _ in occ:
             if not active_now[s]:
                 self._retire(s)
+
+    def drain_pending(self) -> int:
+        """Flush the async in-flight drain record, if any (no-op in sync
+        mode); returns the number of requests it completed.  Callers that
+        stop dispatching (idle service loop, shutdown, end of a
+        run-until-empty drive) call this so the final block's emissions
+        are not stranded on device."""
+        before = len(self._completed)
+        rec, self._inflight = self._inflight, None
+        if rec is not None:
+            self._drain_record(rec)
         return len(self._completed) - before
 
     def _retire(self, slot: int):
@@ -1768,6 +1931,7 @@ class ContinuousEngine:
             self._row_pages[slot] = []
         self._occupied.remove(slot)
         self._free.append(slot)
+        self._slot_gen[slot] += 1       # tenancy over: lagging drains skip it
         toks = np.asarray(self._buf[slot], np.int32)
         eos = self.ecfg.eos_token
         if eos >= 0 and toks.size < self._max_new[slot]:

@@ -67,7 +67,14 @@ class PrefixMatch(NamedTuple):
 
 
 class PrefixCache:
-    """Radix tree mapping page-aligned prompt prefixes to resident pages."""
+    """Radix tree mapping page-aligned prompt prefixes to resident pages.
+
+    **Thread safety**: the tree ADOPTS its pool's re-entrant lock — one
+    lock covers both structures, so the cross-calls in both directions
+    (``insert → pool.try_alloc`` and ``pool.alloc → evict_hook →
+    pool.decref``) re-enter instead of deadlocking, and a stat poll from
+    another thread (`reclaimable_pages`, `page_ids`) never sees a
+    half-mutated tree."""
 
     def __init__(self, pool: PagePool, page_size: int, n_layers: int):
         assert page_size > 0 and n_layers > 0
@@ -78,6 +85,7 @@ class PrefixCache:
         self._clock = 0                   # monotonic LRU clock
         self.evictions = 0
         self.n_nodes = 0
+        self._lock = pool.lock
         pool.evict_hook = self._evict_one
 
     # ------------------------------------------------------------------ LRU
@@ -87,24 +95,25 @@ class PrefixCache:
 
     def _evict_one(self) -> bool:
         """Drop the least-recently-used unpinned leaf; True if one fell."""
-        victim: Optional[_Node] = None
-        stack = list(self._root.values())
-        while stack:
-            n = stack.pop()
-            if n.children:
-                stack.extend(n.children.values())
-            elif n.pins == 0 and (victim is None
-                                  or n.last_use < victim.last_use):
-                victim = n
-        if victim is None:
-            return False
-        siblings = (victim.parent.children if victim.parent is not None
-                    else self._root)
-        del siblings[victim.chunk]
-        self.pool.decref(victim.ids)
-        self.n_nodes -= 1
-        self.evictions += 1
-        return True
+        with self._lock:
+            victim: Optional[_Node] = None
+            stack = list(self._root.values())
+            while stack:
+                n = stack.pop()
+                if n.children:
+                    stack.extend(n.children.values())
+                elif n.pins == 0 and (victim is None
+                                      or n.last_use < victim.last_use):
+                    victim = n
+            if victim is None:
+                return False
+            siblings = (victim.parent.children if victim.parent is not None
+                        else self._root)
+            del siblings[victim.chunk]
+            self.pool.decref(victim.ids)
+            self.n_nodes -= 1
+            self.evictions += 1
+            return True
 
     # --------------------------------------------------------------- lookup
     def _chunks(self, tokens) -> List[Tuple[int, ...]]:
@@ -121,27 +130,29 @@ class PrefixCache:
         path needs real last-token logits).  Always `release` the returned
         match once its pages have been gathered (or ignored)."""
         cap = (len(tokens) - 1) // self.page_size
-        path: List[_Node] = []
-        level = self._root
-        for chunk in self._chunks(tokens)[:cap]:
-            node = level.get(chunk)
-            if node is None:
-                break
-            path.append(node)
-            level = node.children
-        now = self._tick()
-        for n in path:
-            n.pins += 1
-            n.last_use = now
-        ids = (np.stack([n.ids for n in path], axis=1)
-               if path else np.zeros((self.n_layers, 0), np.int32))
-        return PrefixMatch(matched=len(path) * self.page_size, ids=ids,
-                           nodes=tuple(path))
+        with self._lock:
+            path: List[_Node] = []
+            level = self._root
+            for chunk in self._chunks(tokens)[:cap]:
+                node = level.get(chunk)
+                if node is None:
+                    break
+                path.append(node)
+                level = node.children
+            now = self._tick()
+            for n in path:
+                n.pins += 1
+                n.last_use = now
+            ids = (np.stack([n.ids for n in path], axis=1)
+                   if path else np.zeros((self.n_layers, 0), np.int32))
+            return PrefixMatch(matched=len(path) * self.page_size, ids=ids,
+                               nodes=tuple(path))
 
     def release(self, match: PrefixMatch) -> None:
-        for n in match.nodes:
-            assert n.pins > 0
-            n.pins -= 1
+        with self._lock:
+            for n in match.nodes:
+                assert n.pins > 0
+                n.pins -= 1
 
     # --------------------------------------------------------------- insert
     def insert(self, tokens, max_chunks: Optional[int] = None
@@ -154,27 +165,28 @@ class PrefixCache:
         chunks = self._chunks(tokens)
         if max_chunks is not None:
             chunks = chunks[:max_chunks]
-        created: List[Tuple[int, np.ndarray]] = []
-        fresh: List[_Node] = []
-        level, parent = self._root, None
-        now = self._tick()
-        for ci, chunk in enumerate(chunks):
-            node = level.get(chunk)
-            if node is None:
-                ids = self.pool.try_alloc(self.n_layers)
-                if ids is None:
-                    break                          # pool full: cache a prefix
-                node = _Node(chunk, ids, parent)
-                node.pins = 1      # shield the fresh path from same-call LRU
-                level[chunk] = node
-                self.n_nodes += 1
-                created.append((ci, ids))
-                fresh.append(node)
-            node.last_use = now
-            level, parent = node.children, node
-        for node in fresh:
-            node.pins -= 1
-        return created
+        with self._lock:
+            created: List[Tuple[int, np.ndarray]] = []
+            fresh: List[_Node] = []
+            level, parent = self._root, None
+            now = self._tick()
+            for ci, chunk in enumerate(chunks):
+                node = level.get(chunk)
+                if node is None:
+                    ids = self.pool.try_alloc(self.n_layers)
+                    if ids is None:
+                        break                      # pool full: cache a prefix
+                    node = _Node(chunk, ids, parent)
+                    node.pins = 1  # shield the fresh path from same-call LRU
+                    level[chunk] = node
+                    self.n_nodes += 1
+                    created.append((ci, ids))
+                    fresh.append(node)
+                node.last_use = now
+                level, parent = node.children, node
+            for node in fresh:
+                node.pins -= 1
+            return created
 
     # ---------------------------------------------------------------- stats
     @property

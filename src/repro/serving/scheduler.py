@@ -47,7 +47,12 @@ class Request:
     request re-queues with ``prompt = original prompt + generated`` (it
     re-prefills its own history) and its remaining token budget shrinks by
     ``len(generated)``; harvest prepends `generated` so `tokens` is always
-    the full `max_new`-length output, preemptions invisible."""
+    the full `max_new`-length output, preemptions invisible.
+
+    `admitted_at` / `preemptions` are the per-request SLO trace
+    (serving/service.py): the host time the request FIRST won a slot
+    (queue wait = ``admitted_at - submitted_at``; preserved across
+    preempt-and-resume) and how many times it was preempted."""
     rid: int
     prompt: Optional[np.ndarray]        # [P] int32 (token requests)
     max_new: int
@@ -57,6 +62,8 @@ class Request:
     embeds: Optional[np.ndarray] = None       # [P, d] float32
     mm: Optional[MultimodalRequest] = None    # encoded at poll time
     generated: Optional[np.ndarray] = None    # tokens emitted pre-preemption
+    admitted_at: float = 0.0                  # first slot grant (0 = never)
+    preemptions: int = 0                      # times this request was evicted
 
 
 def select_victim(candidates: Sequence[Tuple[int, int]]) -> Optional[int]:
@@ -162,6 +169,35 @@ class ContinuousScheduler(_RequestQueue):
         self._slot_req: Dict[int, Request] = {}
         self.injector = injector       # scripted pool pressure (tests/bench)
         self._stall_streak = 0         # consecutive pressure-held polls
+        self._emit_hook = None         # per-token streaming tap (see below)
+
+    @property
+    def emit_hook(self):
+        """Per-token streaming tap: a callable ``(request, token, t_host)``
+        invoked for every live emission, in order, with the host timestamp
+        the token became visible (admission sample time for first tokens,
+        ring-drain time for block emissions).  Setting it enables the
+        engine's emission journal; the scheduler flushes the journal to the
+        hook at every point a slot→request mapping is about to resolve, so
+        events always reach the request that OWNED the slot when they were
+        emitted.  Set to None to disable journaling entirely."""
+        return self._emit_hook
+
+    @emit_hook.setter
+    def emit_hook(self, fn):
+        self._emit_hook = fn
+        self.core.emit_journal = [] if fn is not None else None
+
+    def _flush_emissions(self):
+        journal = self.core.emit_journal
+        if not journal:
+            return
+        self.core.emit_journal = []
+        hook = self._emit_hook
+        for slot, tok, t in journal:
+            r = self._slot_req.get(slot)
+            if r is not None and hook is not None:
+                hook(r, tok, t)
 
     @property
     def capability(self):
@@ -248,7 +284,10 @@ class ContinuousScheduler(_RequestQueue):
     def _harvest(self) -> List[Request]:
         """Resolve finished slots to their requests.  Must run before a
         freed slot can be re-admitted, or the slot→request map would be
-        clobbered — hence the harvest after every admission below."""
+        clobbered — hence the harvest after every admission below.
+        Emissions flush FIRST: journal entries for a slot must reach its
+        request before the mapping is popped."""
+        self._flush_emissions()
         done = []
         for c in self.core.pop_completed():
             r = self._slot_req.pop(c.slot)
@@ -267,18 +306,52 @@ class ContinuousScheduler(_RequestQueue):
         token-identically (greedy, position-based policies).  Only
         token-prompt requests are eligible (`select_victim` candidates);
         embeds/multimodal rows cannot re-prefill appended token ids."""
-        r = self._slot_req.pop(slot)
+        r = self._slot_req[slot]
         if r.prompt is None:
             raise ValueError(f"slot {slot} holds an embeds request — not "
                              f"resumable, pick a token-prompt victim")
         toks = self.core.preempt(slot)
+        # the preempt drained any lagging async record into the row's
+        # buffer; flush while the slot→request mapping still stands, so
+        # streamed-so-far == `generated` == what the resume re-prefills
+        self._flush_emissions()
+        del self._slot_req[slot]
         prev = r.generated if r.generated is not None \
             else np.zeros(0, np.int32)
         r.generated = np.concatenate([prev, toks]).astype(np.int32)
         r.prompt = np.concatenate([r.prompt, toks]).astype(np.int32)
+        r.preemptions += 1
         self.core.requeues += 1
         self.queue.insert(0, r)
         return r
+
+    def live_requests(self) -> List[Request]:
+        """Requests currently holding a slot (live or mid-chunked-prefill)
+        — a snapshot copy, admission order not guaranteed."""
+        return list(self._slot_req.values())
+
+    def cancel_request(self, rid: int) -> bool:
+        """Abandon a request wherever it currently lives: still queued
+        (dropped from the queue), mid-chunked-prefill (`cancel_pending` —
+        its up-front page tables are released), or live in a slot
+        (`ContinuousEngine.cancel` — pages freed, slot recycled for the
+        next admission).  Returns False when `rid` is unknown — already
+        harvested or never submitted; completed output stands."""
+        for i, r in enumerate(self.queue):
+            if r.rid == rid:
+                self.queue.pop(i)
+                return True
+        for slot, r in list(self._slot_req.items()):
+            if r.rid != rid:
+                continue
+            if self.core.pending_slot == slot:
+                self.core.cancel_pending()
+            else:
+                self.core.cancel(slot)
+                self._flush_emissions()   # mapping intact: drained tokens
+            del self._slot_req[slot]      # still reach the cancelled owner
+            return True
+        return False
 
     def _victim_slot(self) -> Optional[int]:
         """Fewest-generated-tokens-first victim among resumable rows."""
@@ -319,6 +392,8 @@ class ContinuousScheduler(_RequestQueue):
         self.queue.pop(idx)
         slot = self.core.begin_chunked(r.prompt, mn)
         self._slot_req[slot] = r
+        if r.admitted_at == 0.0:
+            r.admitted_at = time.perf_counter()
         return False
 
     def poll(self) -> List[Request]:
@@ -386,8 +461,11 @@ class ContinuousScheduler(_RequestQueue):
             admitted = set(map(id, reqs))
             self.queue = [r for r in self.queue if id(r) not in admitted]
             slots = self.core.admit_many(payloads[:n_ok])
+            now = time.perf_counter()
             for r, s in zip(reqs, slots):
                 self._slot_req[s] = r
+                if r.admitted_at == 0.0:
+                    r.admitted_at = now
             done.extend(self._harvest())   # instant EOS / max_new == 1
             if n_ok < len(burst):         # partial fit: pressure remains
                 held = True
@@ -416,4 +494,12 @@ class ContinuousScheduler(_RequestQueue):
         done: List[Request] = []
         while self.queue or self.core.n_occupied or self.core.n_pending:
             done.extend(self.poll())
+        # async drain discipline parks the final block's record; flush it
+        # (no-op in the default sync mode) so nothing strands on device
+        self.core.drain_pending()
+        done.extend(self._harvest())
         return done
+
+    # the name the service layer (and the ISSUE checklists) know the
+    # synchronous drive by
+    run_to_completion = run_until_empty

@@ -1,0 +1,425 @@
+"""Async serving front end: background scheduler loop + streaming handles.
+
+Everything below this module is synchronous: `ContinuousScheduler.poll`
+runs one rung-ladder iteration and returns, and the benches drive it in a
+loop on the calling thread.  `ServingService` turns that into a service
+(DESIGN.md §5): ONE background thread owns the scheduler (and therefore
+every JAX dispatch — the engine is single-threaded by construction), a
+thread-safe intake queue carries submissions and cancellations in, and
+per-request `RequestHandle`s carry tokens out as they are emitted.
+
+  * **Ownership** — client threads never touch the scheduler.  `submit`
+    validates and enqueues; the loop thread binds the handle to a request
+    id, admits it through the normal poll ladder, and pushes each emitted
+    token into the handle's queue.  Cancellation is an intake op too, so
+    it lands between polls, never mid-dispatch.
+  * **Overlapped drain** — the service flips `ContinuousEngine.async_drain`
+    on: each poll's fused block is dispatched and the PREVIOUS block's
+    emission-ring bank is drained while it computes (the double-buffered
+    ring in `ContinuousState`), so the loop thread spends its per-block
+    device→host wait doing useful work.  `drain_stall_s` on the engine is
+    the residual blocked time — the `emission_overlap` bench pins it near
+    zero against the sync discipline.
+  * **SLO observability** — every emission carries the host timestamp the
+    token became visible (the scheduler's `emit_hook` journal).  Each
+    finished request folds into an `SLORecord` (TTFT, ITL p50/p95, queue
+    wait, preemption count) and into the service-wide `ServiceMetrics`
+    aggregate that `/metrics` (launch/http_api.py) serves.
+
+Streaming identity contract (pinned by tests/test_service.py): the token
+stream a handle yields — including tokens emitted before a preemption and
+the EOS tail padding — is exactly `Request.tokens` from the synchronous
+`run_to_completion` drive of the same trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.serving.scheduler import ContinuousScheduler, Request
+
+_DONE = object()          # stream terminator (normal, cancelled or failed)
+
+
+def _pctl(values: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(values), q)) if values else 0.0
+
+
+@dataclasses.dataclass
+class SLORecord:
+    """Per-request service-level trace, all host-clock seconds.
+
+    `ttft_s` spans submit → first token visible; `queue_wait_s` spans
+    submit → first slot grant (the admission the request waited for, kept
+    across preempt-and-resume); `itl_s` are the gaps between consecutive
+    token visibility times (block-granular: tokens of one fused block
+    share a drain timestamp, so a `sync_every`-token block contributes
+    one real gap and `sync_every - 1` zeros — the client-visible truth)."""
+    rid: int
+    n_tokens: int
+    ttft_s: float
+    queue_wait_s: float
+    e2e_s: float
+    itl_s: List[float]
+    preemptions: int
+    cancelled: bool
+
+    @property
+    def itl_p50_ms(self) -> float:
+        return _pctl(self.itl_s, 50) * 1e3
+
+    @property
+    def itl_p95_ms(self) -> float:
+        return _pctl(self.itl_s, 95) * 1e3
+
+
+class ServiceMetrics:
+    """Service-wide SLO aggregate: every finished request's `SLORecord`
+    folds in here.  Thread-safe — the loop thread records, any thread
+    snapshots (the HTTP `/metrics` endpoint's reader)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._ttft: List[float] = []
+        self._queue_wait: List[float] = []
+        self._itl: List[float] = []
+        self.completed = 0
+        self.cancelled = 0
+        self.preemptions = 0
+        self.tokens_streamed = 0
+
+    def record(self, rec: SLORecord) -> None:
+        with self._lock:
+            if rec.cancelled:
+                self.cancelled += 1
+            else:
+                self.completed += 1
+                self._ttft.append(rec.ttft_s)
+                self._queue_wait.append(rec.queue_wait_s)
+                self._itl.extend(rec.itl_s)
+            self.preemptions += rec.preemptions
+            self.tokens_streamed += rec.n_tokens
+
+    def snapshot(self) -> Dict[str, float]:
+        """Point-in-time SLO summary (milliseconds for the latency rows —
+        the BENCH_serving.json / `/metrics` schema)."""
+        with self._lock:
+            return {
+                "completed": self.completed,
+                "cancelled": self.cancelled,
+                "preemptions": self.preemptions,
+                "tokens_streamed": self.tokens_streamed,
+                "ttft_p50_ms": _pctl(self._ttft, 50) * 1e3,
+                "ttft_p95_ms": _pctl(self._ttft, 95) * 1e3,
+                "itl_p50_ms": _pctl(self._itl, 50) * 1e3,
+                "itl_p95_ms": _pctl(self._itl, 95) * 1e3,
+                "queue_wait_p50_ms": _pctl(self._queue_wait, 50) * 1e3,
+                "queue_wait_p95_ms": _pctl(self._queue_wait, 95) * 1e3,
+            }
+
+
+class RequestHandle:
+    """Client-side view of one submitted request.
+
+    Tokens arrive on the loop thread and are re-published through a
+    thread-safe queue: consume them incrementally with `stream()` (or a
+    constructor `on_token` callback — called ON the loop thread, keep it
+    cheap), or block for the finished output with `result()`.  `cancel()`
+    is safe from any thread at any point in the request's life; the
+    stream simply ends early and `cancelled` flips."""
+
+    def __init__(self, service: "ServingService", max_new: int,
+                 on_token: Optional[Callable[[int, float], None]] = None):
+        self._service = service
+        self.rid: Optional[int] = None       # bound by the loop thread
+        self.max_new = max_new
+        self.submitted_at = time.perf_counter()
+        self._on_token = on_token
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._done = threading.Event()
+        self._streamed: List[int] = []
+        self._token_times: List[float] = []
+        self.tokens: Optional[np.ndarray] = None
+        self.cancelled = False
+        self.error: Optional[BaseException] = None
+        self.slo: Optional[SLORecord] = None
+
+    # ---- loop-thread side -------------------------------------------------
+    def _push(self, tok: int, t: float) -> None:
+        self._streamed.append(tok)
+        self._token_times.append(t)
+        if self._on_token is not None:
+            self._on_token(tok, t)
+        self._q.put(tok)
+
+    def _push_tail(self, tok: int) -> None:
+        # EOS tail padding: part of the canonical output (parity with the
+        # synchronous path), but never a timed emission — excluded from
+        # the SLO gaps
+        self._streamed.append(tok)
+        self._q.put(tok)
+
+    def _finish(self, req: Optional[Request], cancelled: bool = False,
+                error: Optional[BaseException] = None) -> None:
+        now = time.perf_counter()
+        self.tokens = np.asarray(
+            req.tokens if req is not None and req.tokens is not None
+            else self._streamed, np.int32)
+        times = self._token_times
+        self.slo = SLORecord(
+            rid=self.rid if self.rid is not None else -1,
+            n_tokens=len(self._streamed),
+            ttft_s=times[0] - self.submitted_at if times else 0.0,
+            queue_wait_s=(req.admitted_at - req.submitted_at
+                          if req is not None and req.admitted_at > 0.0
+                          else 0.0),
+            e2e_s=now - self.submitted_at,
+            itl_s=list(np.diff(times)) if len(times) > 1 else [],
+            preemptions=req.preemptions if req is not None else 0,
+            cancelled=cancelled)
+        self.cancelled = cancelled
+        self.error = error
+        self._done.set()
+        self._q.put(_DONE)
+
+    # ---- client side ------------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def stream(self, timeout: Optional[float] = None) -> Iterator[int]:
+        """Yield tokens as they are emitted; returns when the request
+        finishes (or is cancelled — the stream just ends).  `timeout`
+        bounds the wait for EACH token; raises TimeoutError past it."""
+        while True:
+            try:
+                item = self._q.get(timeout=timeout)
+            except queue.Empty:
+                raise TimeoutError(
+                    f"no token within {timeout}s (rid={self.rid})") from None
+            if item is _DONE:
+                if self.error is not None:
+                    raise self.error
+                return
+            yield item
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Block until the request finishes; returns the full token output
+        (the partial stream, if it was cancelled — check `cancelled`)."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request not done within {timeout}s "
+                               f"(rid={self.rid})")
+        if self.error is not None:
+            raise self.error
+        return self.tokens
+
+    def cancel(self) -> None:
+        """Abandon the request from any thread: queued → dropped, live →
+        its row is released and recycled (`ContinuousEngine.cancel`),
+        mid-chunked-prefill → `cancel_pending`.  A no-op once finished."""
+        if not self._done.is_set():
+            self._service._enqueue_cancel(self)
+
+
+class ServingService:
+    """Background serving loop over a `ContinuousScheduler`.
+
+    The constructor takes ownership of the scheduler (no other thread may
+    drive it afterwards), flips the engine to the overlapped async-drain
+    discipline, installs the per-token emission tap, and starts the loop
+    thread.  `submit` returns a `RequestHandle` immediately; `close`
+    stops the loop — ``drain=True`` finishes every in-flight and queued
+    request first, ``drain=False`` cancels them all (pages released, pool
+    audit-clean).  Usable as a context manager (drains on exit)."""
+
+    def __init__(self, scheduler: ContinuousScheduler,
+                 poll_idle_s: float = 0.02, async_drain: bool = True):
+        self.sched = scheduler
+        self.metrics = ServiceMetrics()
+        scheduler.core.async_drain = async_drain
+        scheduler.emit_hook = self._on_emit
+        self._intake: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._handles: Dict[int, RequestHandle] = {}   # loop thread only
+        self._wake = threading.Event()
+        self._poll_idle_s = poll_idle_s
+        self._closed = False
+        self._stopping = False
+        self._drain_mode = True
+        self._close_lock = threading.Lock()
+        self.error: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._loop, name="serving-loop", daemon=True)
+        self._thread.start()
+
+    # ---- client side ------------------------------------------------------
+    @property
+    def engine(self):
+        return self.sched.core
+
+    def submit(self, prompt, max_new: int = 32,
+               on_token: Optional[Callable[[int, float], None]] = None
+               ) -> RequestHandle:
+        """Enqueue a token prompt; returns its handle immediately.
+        Validation happens HERE, on the caller's thread — a bad request
+        fails fast and never occupies the loop."""
+        if self._closed:
+            raise RuntimeError("service is closed")
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1:
+            raise ValueError(f"prompt must be 1-D token ids, got shape "
+                             f"{prompt.shape}")
+        cap = self.sched.core.ccfg.max_prompt_len
+        if len(prompt) > cap:
+            raise ValueError(f"prompt length {len(prompt)} exceeds "
+                             f"max_prompt_len {cap}")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        h = RequestHandle(self, int(max_new), on_token)
+        self._intake.put(("submit", h, prompt, int(max_new)))
+        self._wake.set()
+        return h
+
+    def _enqueue_cancel(self, h: RequestHandle) -> None:
+        self._intake.put(("cancel", h))
+        self._wake.set()
+
+    def counters(self) -> Dict[str, float]:
+        """Engine-side observability to pair with `metrics.snapshot()`:
+        drain/dispatch/pool counters (plain attribute reads — safe from
+        any thread)."""
+        core = self.sched.core
+        return {
+            "decode_dispatches": core.decode_dispatches,
+            "decode_steps": core.decode_steps,
+            "drained_blocks": core.drained_blocks,
+            "drain_stall_s": core.drain_stall_s,
+            "tokens_emitted": core.tokens_emitted,
+            "admitted": core.admitted,
+            "preemptions": core.preemptions,
+            "cancellations": core.cancellations,
+            "stall_polls": core.stall_polls,
+            "pool_pages": core.pool_pages,
+            "pool_pages_resident": core.pool_pages_resident,
+        }
+
+    def close(self, drain: bool = True, timeout: float = 120.0) -> None:
+        """Stop the loop.  ``drain=True`` serves everything already
+        submitted to completion first; ``drain=False`` cancels queued,
+        live and mid-prefill requests (their handles end `cancelled`,
+        pages return to the pool).  Idempotent."""
+        with self._close_lock:
+            self._closed = True
+            self._drain_mode = drain
+            self._stopping = True
+        self._wake.set()
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise RuntimeError("serving loop did not stop in time")
+        # a submit racing `close` may have slipped into the intake after
+        # the loop exited — fail those handles instead of stranding them
+        while True:
+            try:
+                op = self._intake.get_nowait()
+            except queue.Empty:
+                break
+            if op[0] == "submit":
+                op[1]._finish(None, cancelled=True)
+
+    def __enter__(self) -> "ServingService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=True)
+
+    # ---- loop thread ------------------------------------------------------
+    def _on_emit(self, req: Request, tok: int, t: float) -> None:
+        h = self._handles.get(req.rid)
+        if h is not None:
+            h._push(tok, t)
+
+    def _pump_intake(self) -> None:
+        while True:
+            try:
+                op = self._intake.get_nowait()
+            except queue.Empty:
+                return
+            if op[0] == "submit":
+                _, h, prompt, max_new = op
+                if self._stopping and not self._drain_mode:
+                    h._finish(None, cancelled=True)
+                    self.metrics.record(h.slo)
+                    continue
+                h.rid = self.sched.submit(prompt, max_new)
+                self._handles[h.rid] = h
+            else:                                      # ("cancel", handle)
+                _, h = op
+                if h.rid is None or h.rid not in self._handles:
+                    continue                           # already finished
+                if self.sched.cancel_request(h.rid):
+                    hh = self._handles.pop(h.rid)
+                    hh._finish(None, cancelled=True)
+                    self.metrics.record(hh.slo)
+
+    def _finish_request(self, r: Request) -> None:
+        h = self._handles.pop(r.rid, None)
+        if h is None:
+            return
+        # publish the EOS tail padding (canonical-output parity with the
+        # synchronous path) — untimed, so it never skews the SLO gaps
+        for tok in r.tokens[len(h._streamed):]:
+            h._push_tail(int(tok))
+        h._finish(r)
+        self.metrics.record(h.slo)
+
+    def _cancel_all(self) -> None:
+        sched = self.sched
+        # a lagging async drain may hold rows that already FINISHED:
+        # flush and resolve those as completed first — only work that is
+        # genuinely unfinished gets cancelled
+        sched.core.drain_pending()
+        for r in sched._harvest():
+            self._finish_request(r)
+        for r in list(sched.queue) + sched.live_requests():
+            sched.cancel_request(r.rid)
+        for h in list(self._handles.values()):
+            h._finish(None, cancelled=True)
+            self.metrics.record(h.slo)
+        self._handles.clear()
+
+    def _loop(self) -> None:
+        sched = self.sched
+        try:
+            while True:
+                self._pump_intake()
+                if self._stopping and not self._drain_mode:
+                    self._cancel_all()
+                    return
+                busy = bool(sched.queue) or sched.core.n_occupied \
+                    or sched.core.n_pending
+                # poll even when idle: it flushes a parked async-drain
+                # record and harvests whatever that retires
+                for r in sched.poll():
+                    self._finish_request(r)
+                if busy:
+                    continue
+                if self._stopping and not self._handles:
+                    return
+                self._wake.wait(self._poll_idle_s)
+                self._wake.clear()
+        except BaseException as e:                     # loop died: fail fast
+            self.error = e
+            for h in list(self._handles.values()):
+                h._finish(None, error=e)
+            self._handles.clear()
+            while True:
+                try:
+                    op = self._intake.get_nowait()
+                except queue.Empty:
+                    break
+                if op[0] == "submit":
+                    op[1]._finish(None, error=e)
